@@ -1,0 +1,46 @@
+"""Paper Fig. 10 / Fig. 12: STCF denoise ROC — ideal vs 10 fF vs 20 fF
+eDRAM TS, on hotel-bar-like and driving-like synthetic DND21 streams,
+plus the polarity-sensitive ablation (Fig. 12)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edram, stcf
+from repro.events import datasets, pipeline
+
+
+def _auc(ev, labels, h, w, mode, cmem=None, polarity=False):
+    cfg = stcf.STCFConfig(polarity_sensitive=polarity)
+    kw = {}
+    if mode == "edram":
+        params = edram.decay_params_for_cmem(cmem)
+        kw = dict(params=params,
+                  v_tw=edram.v_tw_for_window(cfg.tau_tw, params))
+    sup, _ = stcf.stcf_chunked(ev, h, w, cfg, chunk=128, mode=mode, **kw)
+    _, _, auc = stcf.roc_curve(sup, labels, ev.valid)
+    return float(auc)
+
+
+def rows():
+    out = []
+    h, w, cap = 64, 86, 16384
+    for kind in ("hotel_bar", "driving"):
+        s = datasets.dnd21_like(kind, h=h, w=w, duration=0.25, seed=11)
+        ev = pipeline.to_event_batch(s, cap)
+        lab = jnp.asarray(np.pad(s.is_signal[:cap], (0, max(0, cap - s.n))))
+        t0 = time.perf_counter()
+        auc_ideal = _auc(ev, lab, h, w, "ideal")
+        dt_us = (time.perf_counter() - t0) * 1e6
+        auc_20 = _auc(ev, lab, h, w, "edram", 20e-15)
+        auc_10 = _auc(ev, lab, h, w, "edram", 10e-15)
+        auc_pol = _auc(ev, lab, h, w, "edram", 20e-15, polarity=True)
+        out.append((f"fig10_auc_{kind}_ideal", dt_us, auc_ideal))
+        out.append((f"fig10_auc_{kind}_20fF", None, auc_20))
+        out.append((f"fig10_auc_{kind}_10fF", None, auc_10))
+        out.append((f"fig12_auc_{kind}_20fF_polarity", None, auc_pol))
+        out.append((f"fig10_gap_{kind}_ideal_minus_20fF", None,
+                    auc_ideal - auc_20))
+    return out

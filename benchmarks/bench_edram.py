@@ -1,0 +1,44 @@
+"""Paper Table I / Fig. 5: eDRAM retention, C_mem sweep, MC variability."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edram
+from repro.hw import constants as C
+from repro.hw import spice_fit
+
+
+def rows():
+    out = []
+    base = spice_fit.fit_20ff()
+    # Fig. 5a: retention window vs C_mem (V_tw floor = the 24 ms threshold)
+    for cmem_ff in (5, 10, 20, 40):
+        p = spice_fit.scale_cmem(base, 20e-15, cmem_ff * 1e-15)
+        rt = spice_fit.retention_time(p, C.V_TW_20FF_V)
+        out.append((f"fig5a_retention_{cmem_ff}fF_ms", None, rt * 1e3))
+    # Table I / Fig. 2d: LL-switch effective window > 50 ms
+    out.append(("fig2d_LL_retention_to_0p1V_ms", None,
+                spice_fit.retention_time(base, 0.1) * 1e3))
+    # Fig. 5b: Monte-Carlo CV at 10/20/30 ms (200x200 cells)
+    params = edram.decay_params_for_cmem()
+    key = jax.random.PRNGKey(0)
+    pv = edram.sample_variability(key, (200, 200), params)
+    t0 = time.perf_counter()
+    for dt_ms in (10, 20, 30):
+        v = edram.v_mem(jnp.float32(dt_ms * 1e-3), pv)
+        cv = float(v.std() / v.mean()) * 100
+        mu = float(v.mean())
+        out.append((f"fig5b_mc_mu_{dt_ms}ms_V", None, mu))
+        out.append((f"fig5b_mc_cv_{dt_ms}ms_pct", None, cv))
+    dt_us = (time.perf_counter() - t0) / 3 * 1e6
+    out.append(("fig5b_mc_eval_us_per_readout", dt_us, None))
+    # Fig. 10b: V_tw correspondence
+    out.append(("fig10b_vtw_20fF_V", None,
+                float(edram.v_tw_for_window(24e-3, params))))
+    out.append(("fig10b_vtw_10fF_V", None,
+                float(edram.v_tw_for_window(
+                    24e-3, edram.decay_params_for_cmem(10e-15)))))
+    return out

@@ -1,0 +1,31 @@
+"""Paper Fig. 7 (3D vs 2D) and Fig. 8 (ISC vs SRAM) — derived ratios."""
+from __future__ import annotations
+
+from repro.hw import energy_model as em
+
+
+def rows():
+    out = []
+    r = em.compare_2d_3d()
+    out.append(("fig7_power_ratio_2d_over_3d (paper 69x)", None, r["power_ratio"]))
+    out.append(("fig7_area_ratio_2d_over_3d (paper 1.9x)", None, r["area_ratio"]))
+    out.append(("fig7_delay_ratio_2d_over_3d (paper 2.2x)", None, r["delay_ratio"]))
+    out.append(("fig7_p3d_uW", None, r["p3d_w"] * 1e6))
+    out.append(("fig7_p2d_uW", None, r["p2d_w"] * 1e6))
+    out.append(("fig7_lat3d_ns (paper ~5)", None, r["lat3d_s"] * 1e9))
+    out.append(("fig7_lat2d_ns (paper ~11)", None, r["lat2d_s"] * 1e9))
+    d2 = em.arch_2d()
+    out.append(("fig7c_encdec_frac (paper 0.538)", None,
+                d2.power_w["encdec"] / d2.total_power))
+    out.append(("fig7c_buffer_frac (paper 0.455)", None,
+                d2.power_w["buffers"] / d2.total_power))
+    s = em.compare_isc_sram()
+    out.append(("fig8_power_ratio_sram53 (paper 1600x)", None,
+                s["power_ratio_ref53"]))
+    out.append(("fig8_power_ratio_sram26 (paper 6761x)", None,
+                s["power_ratio_ref26"]))
+    out.append(("fig8_area_ratio_sram53 (paper 3.1x)", None,
+                s["area_ratio_ref53"]))
+    out.append(("fig8_area_ratio_sram26 (paper 2.2x)", None,
+                s["area_ratio_ref26"]))
+    return out

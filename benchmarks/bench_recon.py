@@ -1,0 +1,84 @@
+"""Paper Table III protocol: TS -> UNet -> intensity frames, SSIM vs the
+paired ground-truth frames, comparing input representations (3DS-ISC
+analog TS vs EBBI vs event-count)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edram, representations as rep
+from repro.core import time_surface as ts
+from repro.events import datasets, pipeline
+from repro.models import module as M
+from repro.models.unet import ssim, unet_apply, unet_defs
+
+H = W = 48
+
+
+def _pairs(mode: str):
+    scenes = datasets.davis_like(n_scenes=4, h=H, w=W, duration=0.4, seed=3)
+    xs, ys = [], []
+    key = jax.random.PRNGKey(1)
+    params = edram.sample_variability(key, (1, H, W),
+                                      edram.decay_params_for_cmem())
+    for s in scenes:
+        for ft, frame in zip(s.frame_times, s.frames):
+            m = s.t < ft
+            sub = ts.EventBatch(
+                x=jnp.asarray(s.x[m]), y=jnp.asarray(s.y[m]),
+                t=jnp.asarray(s.t[m]), p=jnp.asarray(s.p[m]),
+                valid=jnp.ones(int(m.sum()), bool),
+            )
+            sae = ts.sae_update(ts.empty_sae(H, W), sub)
+            if mode == "isc":
+                img = ts.ts_edram(sae, float(ft), params)[0]
+            elif mode == "ebbi":
+                img = rep.ebbi(sub, H, W)
+            else:
+                img = rep.event_count(sub, H, W) / 15.0
+            xs.append(np.asarray(img))
+            ys.append(frame / max(frame.max(), 1e-6))
+    x = np.stack(xs)[..., None].astype(np.float32)
+    return x, np.stack(ys).astype(np.float32)
+
+
+def _train_eval(mode: str):
+    x, y = _pairs(mode)
+    n = len(x)
+    n_tr = int(0.75 * n)
+    params = M.init_params(unet_defs(1, width=12), jax.random.PRNGKey(2))
+    from repro.train.optimizer import Schedule, adamw
+
+    opt = adamw(Schedule(3e-3, warmup_steps=5, decay_steps=150))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, st, xb, yb, i):
+        def loss(pp):
+            pred = unet_apply(pp, xb)
+            return jnp.abs(pred - yb).mean()
+
+        l, g = jax.value_and_grad(loss)(p)
+        p, st = opt.update(g, st, p, i)
+        return p, st, l
+
+    rng = np.random.default_rng(0)
+    for i in range(150):
+        idx = rng.choice(n_tr, 16)
+        params, state, l = step(params, state, jnp.asarray(x[idx]),
+                                jnp.asarray(y[idx]), jnp.int32(i))
+    pred = jax.jit(unet_apply)(params, jnp.asarray(x[n_tr:]))
+    return float(ssim(pred, jnp.asarray(y[n_tr:])))
+
+
+def rows():
+    out = []
+    for mode in ("isc", "ebbi", "count"):
+        t0 = time.perf_counter()
+        s = _train_eval(mode)
+        dt = (time.perf_counter() - t0) * 1e6
+        out.append((f"tab3_ssim_{mode}", dt, s))
+    return out

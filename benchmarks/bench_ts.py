@@ -1,0 +1,64 @@
+"""Sec. III core-op throughput: event writes (SAE scatter), TS readout
+(pure-jnp production path + Pallas interpret check), fused STCF support.
+
+Numbers are CPU wall-times (the TPU perf story is the §Roofline analysis);
+what matters here is the O(E) write / O(HW) lazy-read cost structure.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edram
+from repro.core import time_surface as ts
+from repro.kernels import ops, ref
+
+
+def _timeit(fn, *args, n=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def rows():
+    out = []
+    h, w = 240, 320  # QVGA, as the paper's comparisons
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    n_ev = 100_000
+    ev = ts.EventBatch(
+        x=jax.random.randint(ks[0], (n_ev,), 0, w),
+        y=jax.random.randint(ks[1], (n_ev,), 0, h),
+        t=jnp.sort(jax.random.uniform(ks[2], (n_ev,), maxval=0.05)),
+        p=jnp.zeros((n_ev,), jnp.int32),
+        valid=jnp.ones((n_ev,), bool),
+    )
+    sae0 = ts.empty_sae(h, w)
+    scatter = jax.jit(ts.sae_update)
+    us = _timeit(scatter, sae0, ev)
+    out.append(("sec3_sae_scatter_100k_events_us", us, n_ev / (us / 1e6) / 1e6))
+
+    sae = ts.sae_update(sae0, ev)[0]
+    params = edram.decay_params_for_cmem()
+
+    read_ref = jax.jit(lambda s: ref.ts_decay_ref(s, 0.06, params))
+    us = _timeit(read_ref, sae)
+    out.append(("sec3_ts_readout_qvga_jnp_us", us, h * w / (us / 1e6) / 1e6))
+
+    us = _timeit(
+        lambda s: ops.ts_decay(s, 0.06, params), sae, n=3
+    )
+    out.append(("sec3_ts_readout_qvga_pallas_interpret_us", us, None))
+
+    v_tw = float(edram.v_tw_for_window(24e-3, params))
+    fused_ref = jax.jit(
+        lambda s: ref.stcf_support_fused_ref(s, 3, params, v_tw, 0.06)
+    )
+    us = _timeit(fused_ref, sae)
+    out.append(("sec3_stcf_fused_qvga_jnp_us", us, None))
+    return out

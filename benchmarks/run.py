@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_edram    — Table I / Fig. 2d / Fig. 5 / Fig. 10b (cell physics)
+  * bench_hw       — Fig. 7 (3D vs 2D) + Fig. 8 (ISC vs SRAM) ratios
+  * bench_ts       — Sec. III core-op throughput
+  * bench_denoise  — Fig. 10 ROC/AUC + Fig. 12 polarity ablation
+  * bench_classify — Table II frame/video accuracy protocol
+  * bench_recon    — Table III SSIM protocol
+
+Run everything:    PYTHONPATH=src python -m benchmarks.run
+Run a subset:      PYTHONPATH=src python -m benchmarks.run --only hw,edram
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["edram", "hw", "ts", "denoise", "classify", "recon"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args, _ = ap.parse_known_args()
+    which = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    for name in which:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["rows"])
+        t0 = time.time()
+        try:
+            for row_name, us, derived in mod.rows():
+                us_s = f"{us:.1f}" if us is not None else ""
+                dv = f"{derived:.4f}" if derived is not None else ""
+                print(f"{row_name},{us_s},{dv}", flush=True)
+        except Exception:  # noqa: BLE001 — keep the harness running
+            print(f"bench_{name},ERROR,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# bench_{name} wall: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

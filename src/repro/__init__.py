@@ -1,0 +1,2 @@
+"""repro — 3DS-ISC (analog time-surface construction) in JAX, framework-scale."""
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""Config registry: --arch <id> resolution for launchers and tests."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec  # noqa: F401
+
+_ARCH_MODULES = {
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "grok-1-314b": "grok_1_314b",
+    "musicgen-large": "musicgen_large",
+    "gemma2-27b": "gemma2_27b",
+    "glm4-9b": "glm4_9b",
+    "gemma3-4b": "gemma3_4b",
+    "qwen3-8b": "qwen3_8b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "internvl2-26b": "internvl2_26b",
+    "hymba-1.5b": "hymba_1p5b",
+    "isc-qvga": "isc_qvga",
+}
+
+ARCH_NAMES = [n for n in _ARCH_MODULES if n != "isc-qvga"]
+
+
+def get_config(name: str):
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG

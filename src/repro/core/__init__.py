@@ -1,0 +1,3 @@
+# The paper's primary contribution: analog time-surface construction
+# (SAE + eDRAM double-exponential decay + STCF) as composable JAX modules.
+from repro.core import edram, isc_array, representations, stcf, time_surface  # noqa: F401

@@ -1,0 +1,138 @@
+"""JAX model of the 3DS-ISC eDRAM analog array (the paper's Sec. III-A).
+
+This is the paper's own "computational model based on SPICE simulations"
+(Sec. IV-C) promoted to a first-class, tested module: a double-exponential
+leakage transient with per-cell Monte-Carlo parameter spread, plus the 2D
+crossbar's half-select disturbance model (Fig. 4) so the 2D-vs-3D fidelity
+gap can be reproduced numerically.
+
+Everything is pure and jit-friendly.  Times are float32 **seconds**,
+voltages float32 **volts**.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.hw import constants as C
+from repro.hw import spice_fit
+
+
+class DecayParams(NamedTuple):
+    """Pytree of double-exp decay parameters; scalars or per-cell arrays."""
+
+    a1: jax.Array
+    tau1: jax.Array
+    a2: jax.Array
+    tau2: jax.Array
+    b: jax.Array
+
+    @classmethod
+    def from_fit(cls, p: spice_fit.DoubleExpParams) -> "DecayParams":
+        f32 = lambda x: jnp.float32(x)
+        return cls(f32(p.a1), f32(p.tau1), f32(p.a2), f32(p.tau2), f32(p.b))
+
+
+@functools.lru_cache(maxsize=None)
+def _fit_cache(cmem_f: float) -> spice_fit.DoubleExpParams:
+    base = spice_fit.fit_20ff()
+    return spice_fit.scale_cmem(base, C.ISC_CMEM_F, cmem_f)
+
+
+def decay_params_for_cmem(cmem_f: float = C.ISC_CMEM_F) -> DecayParams:
+    """Decay parameters for a given storage capacitance (default 20 fF)."""
+    return DecayParams.from_fit(_fit_cache(float(cmem_f)))
+
+
+def rate_sigma() -> float:
+    """Per-cell leakage-rate CV calibrated to the Fig. 5b Monte-Carlo data."""
+    return spice_fit.calibrate_rate_sigma(spice_fit.fit_20ff())
+
+
+def sample_variability(
+    key: jax.Array,
+    shape,
+    params: DecayParams,
+    sigma: float | None = None,
+) -> DecayParams:
+    """Per-cell decay parameters: leakage rate scaled by (1+eps), eps~N(0,s).
+
+    Mirrors the paper's procedure of sampling from 8 000 Monte-Carlo SPICE
+    fits and mapping parameters to individual pixels (Sec. IV-C).
+    """
+    if sigma is None:
+        sigma = rate_sigma()
+    eps = 1.0 + sigma * jax.random.normal(key, shape, dtype=jnp.float32)
+    # rate r = 1/tau scales by (1+eps) => tau scales by 1/(1+eps)
+    return DecayParams(
+        a1=jnp.broadcast_to(params.a1, shape),
+        tau1=params.tau1 / eps,
+        a2=jnp.broadcast_to(params.a2, shape),
+        tau2=params.tau2 / eps,
+        b=jnp.broadcast_to(params.b, shape),
+    )
+
+
+def v_mem(dt: jax.Array, params: DecayParams) -> jax.Array:
+    """Cell voltage ``dt`` seconds after a write (vectorized).
+
+    ``dt`` may be +inf (never written) -> asymptote ``b`` is suppressed to 0
+    (an unwritten cell holds no charge; ``b`` models the fit's floor, not a
+    standing offset on virgin cells).
+    """
+    dt = jnp.asarray(dt, jnp.float32)
+    v = (
+        params.a1 * jnp.exp(-dt / params.tau1)
+        + params.a2 * jnp.exp(-dt / params.tau2)
+        + params.b
+    )
+    return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
+
+
+def ideal_exp(dt: jax.Array, tau: float) -> jax.Array:
+    """The ideal software TS kernel exp(-dt/tau) (paper Eq. 3/5)."""
+    dt = jnp.asarray(dt, jnp.float32)
+    v = jnp.exp(-dt / jnp.float32(tau))
+    return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Half-select disturbance (2D crossbar only; Fig. 4)
+# ----------------------------------------------------------------------------
+
+#: Fractional charge loss per half-select exposure (green cells of Fig. 4a):
+#: the ON-state LL switch leaks the capacitor into the grounded WBL during
+#: the write pulse of the *selected* cell.  The droop is proportional to the
+#: stored voltage, which reproduces Fig. 4c's "earlier half-select after the
+#: write -> larger delta-V" trend.
+HALF_SELECT_ALPHA = 0.05
+#: Capacitive-coupling ripple for blue cells (WBL active, WWL off) — small.
+HALF_SELECT_COUPLING = 0.002
+
+
+def apply_half_select(
+    v: jax.Array, row_hits: jax.Array, col_hits: jax.Array,
+    alpha: float = HALF_SELECT_ALPHA, coupling: float = HALF_SELECT_COUPLING,
+) -> jax.Array:
+    """Disturb a (H, W) voltage map given per-row / per-col write counts.
+
+    A write at (r, c) half-selects every other cell in row r (switch ON,
+    WBL low -> multiplicative droop) and couples weakly into every other
+    cell in column c.
+    """
+    row_factor = (1.0 - alpha) ** row_hits.astype(jnp.float32)  # (H,)
+    col_factor = (1.0 - coupling) ** col_hits.astype(jnp.float32)  # (W,)
+    return v * row_factor[:, None] * col_factor[None, :]
+
+
+def v_tw_for_window(tau_tw: float, params: DecayParams) -> jax.Array:
+    """Voltage threshold equivalent to a time window ``tau_tw`` (Fig. 10b).
+
+    The transient is monotone, so "written less than tau_tw ago" is exactly
+    "V_mem above the transient's value at tau_tw".
+    """
+    return v_mem(jnp.float32(tau_tw), params)

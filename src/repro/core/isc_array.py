@@ -1,0 +1,118 @@
+"""The 3DS-ISC array as a stateful, jit-friendly JAX module.
+
+``ISCArray`` bundles the lazy SAE state with the cell fidelity model and
+exposes the hardware operations:
+
+  * ``write(state, events)``   — event-driven O(E) scatter (Cu-Cu bond path)
+  * ``read(state, t)``         — analog readout: the decayed voltage map
+  * ``read_mask(state, t)``    — comparator readout vs V_tw (STCF front end)
+
+Fidelity modes
+  ``mode="3d"``      clean per-pixel writes (the paper's architecture)
+  ``mode="2d"``      adds the crossbar half-select disturbance (Fig. 4):
+                     each write droops every other cell in its row.  2D
+                     fidelity requires an explicit voltage state, so the
+                     state carries an accumulated droop factor per cell.
+  ``mode="ideal"``   infinite-precision digital TS (software baseline)
+
+The per-cell Monte-Carlo variability (Fig. 5b) is sampled once at init and
+stored in the state (it is a physical property of each cell).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edram
+from repro.core import time_surface as ts
+from repro.hw import constants as C
+
+
+class ISCState(NamedTuple):
+    sae: jax.Array          # (P, H, W) float32 seconds; -inf = never
+    droop: jax.Array        # (P, H, W) float32 multiplicative half-select droop
+    params: edram.DecayParams  # per-cell (P, H, W) or scalar decay params
+
+
+class ISCArray:
+    def __init__(
+        self,
+        h: int = C.QVGA_H,
+        w: int = C.QVGA_W,
+        polarities: int = 1,
+        cmem_f: float = C.ISC_CMEM_F,
+        tau_ideal: float = C.MEMORY_WINDOW_S,
+        mode: str = "3d",
+        variability: bool = True,
+        hs_alpha: float = edram.HALF_SELECT_ALPHA,
+    ):
+        assert mode in ("3d", "2d", "ideal")
+        self.h, self.w, self.polarities = h, w, polarities
+        self.mode = mode
+        self.tau_ideal = tau_ideal
+        self.variability = variability and mode != "ideal"
+        self.hs_alpha = hs_alpha
+        self.cmem_f = cmem_f
+        self.base_params = edram.decay_params_for_cmem(cmem_f)
+
+    # -- state ---------------------------------------------------------------
+    def init(self, key: Optional[jax.Array] = None) -> ISCState:
+        shape = (self.polarities, self.h, self.w)
+        if self.variability:
+            assert key is not None, "variability sampling needs a PRNG key"
+            params = edram.sample_variability(key, shape, self.base_params)
+        else:
+            params = self.base_params
+        return ISCState(
+            sae=ts.empty_sae(self.h, self.w, self.polarities),
+            droop=jnp.ones(shape, jnp.float32),
+            params=params,
+        )
+
+    # -- hardware ops ----------------------------------------------------------
+    def write(self, state: ISCState, ev: ts.EventBatch) -> ISCState:
+        """Event-driven write; in 2D mode also applies half-select droop."""
+        sae = ts.sae_update(state.sae, ev)
+        droop = state.droop
+        if self.mode == "2d":
+            # Each write fully refreshes its own cell (droop resets to 1)
+            # and half-selects every other cell in the same row.
+            pol = ev.p if self.polarities > 1 else jnp.zeros_like(ev.p)
+            row_hits = jnp.zeros((self.polarities, self.h), jnp.int32).at[
+                pol, ev.y
+            ].add(ev.valid.astype(jnp.int32), mode="drop")
+            col_hits = jnp.zeros((self.polarities, self.w), jnp.int32).at[
+                pol, ev.x
+            ].add(ev.valid.astype(jnp.int32), mode="drop")
+            row_f = (1.0 - self.hs_alpha) ** row_hits.astype(jnp.float32)
+            col_f = (1.0 - edram.HALF_SELECT_COUPLING) ** col_hits.astype(
+                jnp.float32
+            )
+            droop = droop * row_f[:, :, None] * col_f[:, None, :]
+            # cells written in this batch are refreshed: droop back to 1
+            refreshed = sae > state.sae  # strictly newer write
+            written = jnp.zeros_like(droop, dtype=bool).at[
+                pol, ev.y, ev.x
+            ].max(ev.valid, mode="drop")
+            droop = jnp.where(written & (refreshed | (state.sae == ts.NEVER)), 1.0, droop)
+        return ISCState(sae=sae, droop=droop, params=state.params)
+
+    def read(self, state: ISCState, t_now) -> jax.Array:
+        """Analog readout: (P, H, W) voltage (or ideal TS value) at t_now."""
+        if self.mode == "ideal":
+            return ts.ts_ideal(state.sae, t_now, self.tau_ideal)
+        v = ts.ts_edram(state.sae, t_now, state.params)
+        if self.mode == "2d":
+            v = v * state.droop
+        return v
+
+    def v_tw(self, tau_tw: float = C.MEMORY_WINDOW_S) -> jax.Array:
+        return edram.v_tw_for_window(tau_tw, self.base_params)
+
+    def read_mask(self, state: ISCState, t_now, tau_tw: float = C.MEMORY_WINDOW_S):
+        """Comparator readout: True where the cell fired within tau_tw."""
+        if self.mode == "ideal":
+            return (jnp.float32(t_now) - state.sae) < tau_tw
+        return self.read(state, t_now) > self.v_tw(tau_tw)

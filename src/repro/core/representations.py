@@ -1,0 +1,118 @@
+"""2D event representations (paper Sec. II-B) — the comparison baselines.
+
+Implemented (each returns a (P, H, W) or (H, W) image given an EventBatch):
+
+  * ``event_count``      count image, n_C-bit saturating counter [32,33]
+  * ``ebbi``             event-based binary image [34,35]
+  * ``sae``              raw last-timestamp surface (unbounded) [21,36]
+  * ``ts_exponential``   ideal digital TS (Eq. 3/5) [22]
+  * ``ts_sram_quantized``TS from n_T-bit millisecond timestamps **with
+                         counter wrap-around**, the overflow failure mode
+                         the paper attributes to SRAM TPI storage [26]
+  * ``local_memory_ts``  HATS-style accumulated decaying memory [37] via a
+                         per-pixel decay recurrence (the `decay_scan`
+                         primitive shared with the SSM blocks)
+
+The eDRAM analog TS itself lives in ``repro.core.time_surface`` /
+``repro.core.isc_array``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import time_surface as ts
+
+
+def event_count(ev: ts.EventBatch, h: int, w: int, n_bits: int = 4) -> jax.Array:
+    """Saturating per-pixel event counter ((H, W) float32 in [0, 2^n-1])."""
+    cnt = jnp.zeros((h, w), jnp.int32).at[ev.y, ev.x].add(
+        ev.valid.astype(jnp.int32), mode="drop"
+    )
+    return jnp.minimum(cnt, 2**n_bits - 1).astype(jnp.float32)
+
+
+def ebbi(ev: ts.EventBatch, h: int, w: int) -> jax.Array:
+    """Event-based binary image ((H, W) float32 in {0, 1})."""
+    img = jnp.zeros((h, w), jnp.bool_).at[ev.y, ev.x].max(ev.valid, mode="drop")
+    return img.astype(jnp.float32)
+
+
+def sae(ev: ts.EventBatch, h: int, w: int, polarities: int = 1) -> jax.Array:
+    """Raw surface of active events ((P, H, W) seconds; -inf = never)."""
+    return ts.sae_update(ts.empty_sae(h, w, polarities), ev)
+
+
+def ts_exponential(
+    ev: ts.EventBatch, h: int, w: int, t_read, tau: float, polarities: int = 1
+) -> jax.Array:
+    return ts.ts_ideal(sae(ev, h, w, polarities), t_read, tau)
+
+
+def ts_sram_quantized(
+    ev: ts.EventBatch,
+    h: int,
+    w: int,
+    t_read,
+    tau: float,
+    n_bits: int = 16,
+    tick: float = 1e-3,
+    polarities: int = 1,
+) -> jax.Array:
+    """TS built from n_T-bit, 1 ms-tick timestamps that WRAP on overflow.
+
+    This reproduces the periodic corruption of digital TPI storage ([26],
+    Sec. II-C): after 2^n ticks the stored stamps alias, so old events can
+    masquerade as recent ones.  Used as a fidelity baseline in benchmarks.
+    """
+    period = (2**n_bits) * tick
+    tq = jnp.floor(ev.t / tick).astype(jnp.uint32) % (2**n_bits)
+    t_stored = tq.astype(jnp.float32) * tick  # wrapped seconds
+    wrapped = ev._replace(t=t_stored)
+    s = ts.sae_update(ts.empty_sae(h, w, polarities), wrapped)
+    t_read_w = jnp.float32(jnp.floor(t_read / tick) % (2**n_bits)) * tick
+    # modular elapsed time — the hardware cannot know how many wraps happened
+    dt = jnp.mod(t_read_w - s, period)
+    dt = jnp.where(s == ts.NEVER, jnp.inf, dt)
+    v = jnp.exp(-dt / tau)
+    return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
+
+
+def local_memory_ts(
+    ev: ts.EventBatch,
+    h: int,
+    w: int,
+    t_read,
+    tau: float,
+    polarities: int = 1,
+    chunk: int = 256,
+) -> jax.Array:
+    """[37]-style local-memory TS: sum of decaying exponentials per pixel.
+
+    Streaming form: a per-pixel accumulator A obeying the input-driven decay
+    recurrence  A <- A*exp(-dt/tau) + count  per chunk — i.e. exactly the
+    ``decay_scan`` primitive (see kernels/decay_scan.py) on scattered event
+    counts.
+    """
+    n = ev.x.shape[0]
+    pad = (-n) % chunk
+    if pad:
+        ev = ts.EventBatch(*(jnp.pad(f, (0, pad)) for f in ev[:-1]),
+                           jnp.pad(ev.valid, (0, pad)))
+    k = ev.x.shape[0] // chunk
+    chunks = ts.EventBatch(*(f.reshape(k, chunk) for f in ev))
+    pols = polarities
+
+    def step(carry, ch):
+        acc, t_prev = carry
+        t_chunk = jnp.where(ch.valid.any(), jnp.max(jnp.where(ch.valid, ch.t, -jnp.inf)), t_prev)
+        # decay accumulator to t_chunk, then add this chunk's (decayed) events
+        acc = acc * jnp.exp(-(t_chunk - t_prev) / tau)
+        p = ch.p if pols > 1 else jnp.zeros_like(ch.p)
+        w_ev = jnp.where(ch.valid, jnp.exp(-(t_chunk - ch.t) / tau), 0.0)
+        acc = acc.at[p, ch.y, ch.x].add(w_ev, mode="drop")
+        return (acc, t_chunk), None
+
+    acc0 = jnp.zeros((pols, h, w), jnp.float32)
+    (acc, t_last), _ = jax.lax.scan(step, (acc0, jnp.float32(0.0)), chunks)
+    return acc * jnp.exp(-(jnp.float32(t_read) - t_last) / tau)

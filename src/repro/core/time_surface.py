@@ -1,0 +1,152 @@
+"""Time-surface construction (paper Sec. II-B / III) — pure JAX.
+
+Event batches are fixed-size arrays (padded, masked) so everything jits:
+
+    events: EventBatch with x, y, t, p, valid  — t float32 seconds.
+
+The SAE (surface of active events) stores the last write time per cell;
+"never written" is encoded as -inf so ``t_now - sae`` is +inf and every
+decay kernel maps it to 0.  Readout is *lazy*: nothing is computed between
+events (the TPU analogue of the eDRAM's free physical decay).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edram
+
+NEVER = -jnp.inf
+
+
+class EventBatch(NamedTuple):
+    """A fixed-capacity batch of AER events (padded with valid=False)."""
+
+    x: jax.Array  # (N,) int32 column
+    y: jax.Array  # (N,) int32 row
+    t: jax.Array  # (N,) float32 seconds
+    p: jax.Array  # (N,) int32 polarity in {0, 1}
+    valid: jax.Array  # (N,) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    def count(self) -> jax.Array:
+        return self.valid.sum()
+
+
+def empty_sae(h: int, w: int, polarities: int = 1) -> jax.Array:
+    """(P, H, W) float32 SAE initialized to 'never written'."""
+    return jnp.full((polarities, h, w), NEVER, dtype=jnp.float32)
+
+
+def sae_update(sae: jax.Array, ev: EventBatch, merge_polarity: bool = False) -> jax.Array:
+    """Scatter the batch's timestamps into the SAE (max-combine).
+
+    max-combine makes the update order-independent within a batch, which is
+    exactly the eDRAM semantics: a later write leaves the higher voltage.
+    O(#events) writes — the paper's key cost property.
+    """
+    if merge_polarity or sae.shape[0] == 1:
+        p = jnp.zeros_like(ev.p)
+    else:
+        p = ev.p
+    t = jnp.where(ev.valid, ev.t, NEVER)
+    return sae.at[p, ev.y, ev.x].max(t, mode="drop")
+
+
+def ts_ideal(sae: jax.Array, t_now, tau: float) -> jax.Array:
+    """Paper Eq. (5): TS = exp(-(t_now - SAE)/tau), in [0, 1]."""
+    return edram.ideal_exp(jnp.float32(t_now) - sae, tau)
+
+
+def ts_edram(
+    sae: jax.Array,
+    t_now,
+    params: edram.DecayParams,
+) -> jax.Array:
+    """Hardware TS: the eDRAM voltage map f(t_now - SAE) in volts.
+
+    ``params`` may hold per-cell arrays (Monte-Carlo variability).
+    """
+    return edram.v_mem(jnp.float32(t_now) - sae, params)
+
+
+def window_mask_ideal(sae: jax.Array, t_now, tau_tw: float) -> jax.Array:
+    """Ideal digital comparison: event within the time window tau_tw."""
+    return (jnp.float32(t_now) - sae) < tau_tw
+
+
+def window_mask_edram(
+    sae: jax.Array, t_now, params: edram.DecayParams, v_tw
+) -> jax.Array:
+    """Hardware comparison: V_mem > V_tw (one comparator per pixel)."""
+    return ts_edram(sae, t_now, params) > v_tw
+
+
+def events_to_frames(
+    ev: EventBatch,
+    h: int,
+    w: int,
+    t_starts: jax.Array,
+    frame_dt: float,
+    tau: float,
+    polarities: int = 1,
+    params: Optional[edram.DecayParams] = None,
+) -> jax.Array:
+    """Accumulate an event stream into per-window TS frames via lax.scan.
+
+    Returns (F, P, H, W) where frame f is the TS read at
+    ``t_starts[f] + frame_dt`` from all events with t < that time.
+    ``params=None`` -> ideal exponential TS; else the eDRAM model.
+    """
+    sae0 = empty_sae(h, w, polarities)
+
+    def step(sae, t_start):
+        t_read = t_start + frame_dt
+        in_window = ev.valid & (ev.t < t_read)
+        sub = ev._replace(valid=in_window)
+        sae = sae_update(sae, sub)
+        if params is None:
+            frame = ts_ideal(sae, t_read, tau)
+        else:
+            frame = ts_edram(sae, t_read, params)
+        return sae, frame
+
+    # NOTE: this re-scatters the full (masked) batch per frame for clarity;
+    # the streaming pipeline (events/pipeline.py) pre-bins events per window
+    # so each event is written exactly once, matching hardware.
+    _, frames = jax.lax.scan(step, sae0, t_starts)
+    return frames
+
+
+def streaming_ts(
+    chunks: EventBatch,  # leading axis = chunk index: (K, N) fields
+    h: int,
+    w: int,
+    read_times: jax.Array,  # (K,) read the surface after each chunk
+    tau: float,
+    polarities: int = 1,
+    params: Optional[edram.DecayParams] = None,
+) -> jax.Array:
+    """Write event chunks sequentially (each event written once) and read
+    the TS after each chunk.  This is the production streaming form: O(E)
+    total writes + lazy decay at read time only.
+    Returns (K, P, H, W).
+    """
+    sae0 = empty_sae(h, w, polarities)
+
+    def step(sae, inp):
+        chunk, t_read = inp
+        sae = sae_update(sae, chunk)
+        if params is None:
+            frame = ts_ideal(sae, t_read, tau)
+        else:
+            frame = ts_edram(sae, t_read, params)
+        return sae, frame
+
+    _, frames = jax.lax.scan(step, sae0, (chunks, read_times))
+    return frames

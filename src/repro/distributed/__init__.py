@@ -1,0 +1,1 @@
+from repro.distributed import fault, pp, sharding  # noqa: F401

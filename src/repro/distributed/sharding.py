@@ -1,0 +1,132 @@
+"""Logical-axis -> mesh-axis rules and sharding helpers (DESIGN.md §6).
+
+Megatron-style TP over "model", DP over ("pod","data"), optional FSDP
+(params' embed dim over "data").  Rules degrade gracefully: any logical
+dim not divisible by its mesh axis replicates instead (e.g. glm4's 2 KV
+heads, hymba's 25 Q heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import module as M
+from repro.models import transformer as T
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def fsdp_axes(cfg: ModelConfig, mesh: Mesh):
+    """ZeRO-3 shards params over every data axis (pod included)."""
+    return data_axes(mesh) if cfg.fsdp else None
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[str, object]:
+    m = mesh.shape["model"]
+    fsdp = fsdp_axes(cfg, mesh)
+    rules: Dict[str, object] = {
+        "vocab": "model",           # padded_vocab is always divisible
+        "embed": fsdp,
+        "mlp": "model" if cfg.d_ff % m == 0 else None,
+        "heads": "model" if cfg.n_heads % m == 0 else None,
+        "kv_heads": "model" if cfg.n_kv_heads and cfg.n_kv_heads % m == 0 else None,
+        "head_dim": None,
+        "layers": None,
+        "experts_router": None,
+        "ssm_inner": None,          # refined below
+        "expert_mlp": None,         # set by MoE strategy
+        "experts": None,
+    }
+    if cfg.n_experts:
+        from repro.models.moe import moe_strategy
+
+        if moe_strategy(cfg, m) == "ep":
+            rules["experts"] = "model"
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = "model"
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models.ssm import ssm_dims
+
+        di, h, p, n = ssm_dims(cfg)
+        # shard the inner dim only on head boundaries so the (h, p)
+        # reshape keeps its sharding (hymba's 25 heads replicate)
+        ok = di % m == 0 and h % m == 0
+        rules["ssm_inner"] = "model" if ok else None
+        rules["ssm_heads"] = "model" if ok else None
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    defs = T.param_defs(cfg)
+    specs = M.partition_specs(defs, logical_rules(cfg, mesh))
+    # MoE expert weights have bespoke specs (strategy-dependent)
+    if cfg.n_experts:
+        from repro.models.moe import expert_weight_specs
+
+        up, down = expert_weight_specs(
+            cfg, mesh.shape["model"], fsdp_axes(cfg, mesh)
+        )
+        lift = lambda s: P(None, *s)  # layers axis in front
+        moe_specs = specs["layers"]["moe"]
+        moe_specs["we_gate"] = lift(up)
+        moe_specs["we_up"] = lift(up)
+        moe_specs["we_down"] = lift(down)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def spec_axes(spec: P) -> Tuple[str, ...]:
+    """Flatten a PartitionSpec's mesh-axis names (entries may be str/tuple)."""
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        if isinstance(e, str):
+            out.append(e)
+        else:
+            out.extend(e)
+    return tuple(out)
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Shard the batch over as many data axes as divide it."""
+    axes = []
+    for a in data_axes(mesh):
+        size = mesh.shape[a]
+        if global_batch % size == 0 and size > 1:
+            axes.append(a)
+            global_batch //= size
+    return P(tuple(axes)) if axes else P()
+
+
+def input_shardings(cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    bspec = batch_spec(mesh, global_batch)
+    return NamedSharding(mesh, P(*bspec, None))
+
+
+def cache_seq_axes(mesh: Mesh, global_batch: int, seq_len: int):
+    """Mesh axes for the KV-cache sequence dim at decode.
+
+    Batch consumes the data axes it divides; remaining axes + 'model'
+    shard the sequence (flash-decoding layout).
+    """
+    bspec = batch_spec(mesh, global_batch)
+    used = set(spec_axes(bspec))
+    seq_axes = [a for a in (*data_axes(mesh), "model") if a not in used]
+    ok = []
+    prod = 1
+    for a in seq_axes:
+        if seq_len % (prod * mesh.shape[a]) == 0:
+            ok.append(a)
+            prod *= mesh.shape[a]
+    return tuple(ok)

@@ -1,0 +1,1 @@
+from repro.events import datasets, pipeline, synthetic  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.hw import constants, spice_fit  # noqa: F401

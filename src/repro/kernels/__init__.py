@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the paper's compute hot-spots (validated in
+# interpret mode on CPU): ts_decay (array readout), stcf (fused comparator
+# + patch support), decay_scan (streaming decay recurrence).
+from repro.kernels import ops  # noqa: F401

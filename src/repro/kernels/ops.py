@@ -1,0 +1,142 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+compile natively.  ``interpret=None`` -> auto-detect.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decay_scan as _dscan
+from repro.kernels import ref as _ref
+from repro.kernels import stcf as _stcf
+from repro.kernels import ts_decay as _tsd
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "use_ref"))
+def ts_decay(
+    sae: jax.Array,
+    t_now,
+    params,
+    block: Tuple[int, int] = (8, 128),
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+):
+    """Time-surface readout over a (..., H, W) SAE (leading dims vmapped)."""
+    if use_ref:
+        fn = lambda s: _ref.ts_decay_ref(s, t_now, params)
+    else:
+        fn = lambda s: _tsd.ts_decay_pallas(
+            s, t_now, params, block=block, interpret=_auto_interpret(interpret)
+        )
+    flat = sae.reshape((-1,) + sae.shape[-2:])
+    out = jax.vmap(fn)(flat)
+    return out.reshape(sae.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("v_tw_static", "block", "interpret", "use_ref")
+)
+def ts_decay_with_mask(
+    sae: jax.Array,
+    t_now,
+    params,
+    v_tw_static: float,
+    block: Tuple[int, int] = (8, 128),
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+):
+    if use_ref:
+        fn = lambda s: _ref.ts_decay_ref(s, t_now, params, v_tw=v_tw_static)
+    else:
+        fn = lambda s: _tsd.ts_decay_pallas(
+            s, t_now, params, v_tw=v_tw_static, block=block,
+            interpret=_auto_interpret(interpret),
+        )
+    flat = sae.reshape((-1,) + sae.shape[-2:])
+    v, m = jax.vmap(fn)(flat)
+    return v.reshape(sae.shape), m.reshape(sae.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("radius", "include_self", "block_h", "interpret", "use_ref"),
+)
+def stcf_support(
+    mask: jax.Array,
+    radius: int = 3,
+    include_self: bool = False,
+    block_h: int = 8,
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+):
+    """Patch support count of a (..., H, W) boolean/float mask."""
+    if use_ref:
+        fn = lambda m: _ref.stcf_support_ref(m, radius, include_self)
+    else:
+        fn = lambda m: _stcf.stcf_support_pallas(
+            m, radius=radius, include_self=include_self, block_h=block_h,
+            interpret=_auto_interpret(interpret),
+        )
+    flat = mask.reshape((-1,) + mask.shape[-2:])
+    out = jax.vmap(fn)(flat)
+    return out.reshape(mask.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("radius", "include_self", "v_tw", "block_h", "interpret",
+                     "use_ref"),
+)
+def stcf_support_fused(
+    sae: jax.Array,
+    params,
+    v_tw: float,
+    t_now,
+    radius: int = 3,
+    include_self: bool = False,
+    block_h: int = 8,
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+):
+    """Fused SAE -> decay -> comparator -> support (uniform cell params)."""
+    if use_ref:
+        fn = lambda s: _ref.stcf_support_fused_ref(
+            s, radius, params, v_tw, t_now, include_self
+        )
+    else:
+        fn = lambda s: _stcf.stcf_support_pallas(
+            s, radius=radius, include_self=include_self,
+            fused_decay=(params, v_tw, t_now), block_h=block_h,
+            interpret=_auto_interpret(interpret),
+        )
+    flat = sae.reshape((-1,) + sae.shape[-2:])
+    out = jax.vmap(fn)(flat)
+    return out.reshape(sae.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "use_ref"))
+def decay_scan(
+    a: jax.Array,
+    x: jax.Array,
+    s0: Optional[jax.Array] = None,
+    block: Tuple[int, int] = (128, 128),
+    interpret: Optional[bool] = None,
+    use_ref: bool = False,
+):
+    """s_t = a_t*s_{t-1} + x_t over (B, T, C).  Returns (states, final)."""
+    if use_ref:
+        return _ref.decay_scan_ref(a, x, s0)
+    return _dscan.decay_scan_pallas(
+        a, x, s0, block=block, interpret=_auto_interpret(interpret)
+    )

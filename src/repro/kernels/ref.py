@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ts_decay_ref(sae, t_now, params, v_tw=None):
+    """Oracle for kernels.ts_decay: double-exp readout (+ comparator)."""
+    dt = jnp.float32(t_now) - sae
+    v = (
+        params.a1 * jnp.exp(-dt / params.tau1)
+        + params.a2 * jnp.exp(-dt / params.tau2)
+        + params.b
+    )
+    v = jnp.where(jnp.isfinite(sae), v, 0.0).astype(jnp.float32)
+    if v_tw is None:
+        return v
+    return v, v > v_tw
+
+
+def stcf_support_ref(mask, radius, include_self=False):
+    """Oracle for kernels.stcf: (2r+1)^2 patch sum of a (H, W) mask."""
+    x = mask.astype(jnp.float32)
+    h, w = x.shape
+    r = radius
+    xp = jnp.pad(x, r)
+    acc = jnp.zeros((h, w), jnp.float32)
+    for dy in range(-r, r + 1):
+        for dx in range(-r, r + 1):
+            if not include_self and dy == 0 and dx == 0:
+                continue
+            acc = acc + jax.lax.dynamic_slice(xp, (r + dy, r + dx), (h, w))
+    return acc.astype(jnp.int32)
+
+
+def stcf_support_fused_ref(sae, radius, params, v_tw, t_now, include_self=False):
+    """Oracle for the fused SAE -> decay -> compare -> support path."""
+    v = ts_decay_ref(sae, t_now, params)
+    return stcf_support_ref(v > v_tw, radius, include_self)
+
+
+def decay_scan_ref(a, x, s0=None):
+    """Oracle for kernels.decay_scan: s_t = a_t*s_{t-1} + x_t via lax.scan.
+
+    a, x: (B, T, C); s0: (B, C) or None.  Returns (states, final).
+    """
+    b, t, c = a.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, c), a.dtype)
+
+    def step(s, inp):
+        at, xt = inp
+        s = at * s + xt
+        return s, s
+
+    aT = jnp.moveaxis(a, 1, 0)
+    xT = jnp.moveaxis(x, 1, 0)
+    final, states = jax.lax.scan(step, s0.astype(jnp.float32),
+                                 (aT.astype(jnp.float32), xT.astype(jnp.float32)))
+    return jnp.moveaxis(states, 0, 1), final

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: tiled time-surface readout (the ISC array's "read").
+
+Evaluates the double-exponential eDRAM transient over the whole surface:
+
+    v = a1*exp(-(t_now - sae)/tau1) + a2*exp(-(t_now - sae)/tau2) + b
+    v = 0 where sae == -inf (never written)
+    mask = v > v_tw                     (fused comparator, optional)
+
+This is the paper's "decay happens naturally and parallelly across the
+entire eDRAM array" mapped to the TPU: the surface streams HBM->VMEM once
+in (block_h, block_w) tiles, the transcendentals run on the VPU, and the
+comparator output is fused so the STCF front end never re-reads the
+surface from HBM.
+
+Two parameter modes:
+  * uniform — scalar decay params baked in as compile-time constants
+  * varied  — per-cell (H, W) parameter planes (Monte-Carlo variability),
+              tiled with the same BlockSpec as the surface.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEVER_SENTINEL = -jnp.inf
+
+
+def _uniform_kernel(with_mask, sae_ref, t_ref, c_ref, out_ref, *maybe_mask):
+    a1, tau1, a2, tau2, b, v_tw = (c_ref[0, i] for i in range(6))
+    sae = sae_ref[...]
+    dt = t_ref[0, 0] - sae
+    v = (
+        a1 * jnp.exp(-dt / tau1)
+        + a2 * jnp.exp(-dt / tau2)
+        + b
+    )
+    v = jnp.where(jnp.isfinite(sae), v, 0.0)
+    out_ref[...] = v.astype(out_ref.dtype)
+    if with_mask:
+        maybe_mask[0][...] = (v > v_tw).astype(jnp.int8)
+
+
+def _varied_kernel(v_tw, with_mask, sae_ref, t_ref, a1_ref, t1_ref, a2_ref,
+                   t2_ref, b_ref, out_ref, *maybe_mask):
+    sae = sae_ref[...]
+    dt = t_ref[0, 0] - sae
+    v = (
+        a1_ref[...] * jnp.exp(-dt / t1_ref[...])
+        + a2_ref[...] * jnp.exp(-dt / t2_ref[...])
+        + b_ref[...]
+    )
+    v = jnp.where(jnp.isfinite(sae), v, 0.0)
+    out_ref[...] = v.astype(out_ref.dtype)
+    if with_mask:
+        maybe_mask[0][...] = (v > v_tw).astype(jnp.int8)
+
+
+def ts_decay_pallas(
+    sae: jax.Array,                    # (H, W) float32 last-write times [s]
+    t_now: jax.Array,                  # scalar float32 read time [s]
+    params,                            # DecayParams (scalars or (H, W) planes)
+    v_tw: Optional[float] = None,      # fused comparator threshold
+    block: Tuple[int, int] = (8, 128),
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    h, w = sae.shape
+    bh, bw = block
+    ph, pw = (-h) % bh, (-w) % bw
+    varied = jnp.ndim(params.tau1) > 0
+    pad2 = lambda x: jnp.pad(x, ((0, ph), (0, pw)))
+    sae_p = jnp.pad(sae, ((0, ph), (0, pw)), constant_values=NEVER_SENTINEL)
+    hp, wp = sae_p.shape
+    grid = (hp // bh, wp // bw)
+    tile = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    t_arr = jnp.asarray(t_now, jnp.float32).reshape(1, 1)
+
+    with_mask = v_tw is not None
+    out_shape = [jax.ShapeDtypeStruct((hp, wp), out_dtype)]
+    out_specs = [tile]
+    if with_mask:
+        out_shape.append(jax.ShapeDtypeStruct((hp, wp), jnp.int8))
+        out_specs.append(tile)
+
+    if varied:
+        kern = functools.partial(
+            _varied_kernel, float(v_tw) if with_mask else 0.0, with_mask
+        )
+        args = (sae_p, t_arr, pad2(params.a1), pad2(jnp.maximum(params.tau1, 1e-9)),
+                pad2(params.a2), pad2(jnp.maximum(params.tau2, 1e-9)), pad2(params.b))
+        in_specs = [tile, scalar] + [tile] * 5
+    else:
+        consts = jnp.stack(
+            [jnp.float32(v) for v in (params.a1, params.tau1, params.a2,
+                                      params.tau2, params.b,
+                                      v_tw if with_mask else 0.0)]
+        ).reshape(1, 6)
+        kern = functools.partial(_uniform_kernel, with_mask)
+        args = (sae_p, t_arr, consts)
+        in_specs = [tile, scalar, pl.BlockSpec((1, 6), lambda i, j: (0, 0))]
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if with_mask else out_specs[0],
+        out_shape=out_shape if with_mask else out_shape[0],
+        interpret=interpret,
+    )(*args)
+
+    if with_mask:
+        v, m = out
+        return v[:h, :w], m[:h, :w].astype(jnp.bool_)
+    return out[:h, :w]

@@ -1,0 +1,3 @@
+# Launchers: mesh.py (production mesh), dryrun.py (multi-pod AOT
+# compile sweep), roofline.py (three-term roofline from the dry-run),
+# train.py / serve.py (drivers).

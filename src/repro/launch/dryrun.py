@@ -1,0 +1,596 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, from ShapeDtypeStructs only (no allocation):
+  * compiled.memory_analysis()  — bytes/device: does it fit 16 GB HBM?
+  * compiled.cost_analysis()    — per-device FLOPs / bytes accessed
+  * the collective schedule     — parsed from the optimized HLO
+  * (optionally) 1/2-layer unrolled probe lowerings per layer kind for
+    exact scan-corrected totals (see launch/roofline.py)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out dryrun_results
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (batch_spec, cache_seq_axes, data_axes,
+                                        fsdp_axes, logical_rules,
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.train.loop import make_train_step
+from repro.train.optimizer import Schedule, make_optimizer
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ----------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins; never allocated)
+# ----------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh=None, spec: Optional[P] = None):
+    sh = NamedSharding(mesh, spec) if (mesh is not None and spec is not None) else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeSpec, mesh,
+) -> Dict[str, Any]:
+    """All model inputs for this (arch, shape) as sharded abstract values."""
+    b, s = shape.global_batch, shape.seq_len
+    bspec = batch_spec(mesh, b)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        s_tok = s - (cfg.frontend_seq if cfg.frontend != "none" else 0)
+        out["tokens"] = _sds((b, s_tok), jnp.int32, mesh, P(*bspec, None))
+        out["labels"] = _sds((b, s_tok), jnp.int32, mesh, P(*bspec, None))
+        if cfg.frontend != "none":
+            out["embeds"] = _sds((b, cfg.frontend_seq, cfg.d_model),
+                                 cfg.activation_dtype, mesh,
+                                 P(*bspec, None, None))
+        out["step"] = _sds((), jnp.int32)
+    elif shape.kind == "prefill":
+        s_tok = s - (cfg.frontend_seq if cfg.frontend != "none" else 0)
+        out["tokens"] = _sds((b, s_tok), jnp.int32, mesh, P(*bspec, None))
+        if cfg.frontend != "none":
+            out["embeds"] = _sds((b, cfg.frontend_seq, cfg.d_model),
+                                 cfg.activation_dtype, mesh,
+                                 P(*bspec, None, None))
+    else:  # decode
+        out["tokens"] = _sds((b, 1), jnp.int32, mesh, P(*bspec, None))
+        out["caches"] = abstract_cache_specs(cfg, b, s, mesh)
+        out["position"] = _sds((), jnp.int32)
+    return out
+
+
+def abstract_cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh):
+    """Decode caches as sharded ShapeDtypeStructs.
+
+    KV ring buffers: batch over the data axes it divides; the sequence dim
+    over the remaining axes + "model" (flash-decoding layout).  SSM states:
+    batch axes only (they are small).
+    """
+    caches = T.abstract_decode_caches(cfg, batch, max_len)
+    bspec = batch_spec(mesh, batch)
+    # explicit batch entry so the seq entry never shifts onto dim 0 when
+    # the batch is unsharded (e.g. long_500k's global_batch=1)
+    b_ent = tuple(bspec) if len(bspec) else (None,)
+    if T.uniform_layers(cfg):
+        # stacked layout for decode_step_scan: add a leading layers dim
+        c = caches[0]
+        n_l = cfg.n_layers
+        stacked = {}
+        if "k" in c:
+            s_len = c["k"].shape[1]
+            seq_axes = cache_seq_axes(mesh, batch, s_len)
+            kv_spec = P(None, *b_ent, seq_axes if seq_axes else None, None, None)
+            pos_spec = P(None, *b_ent, seq_axes if seq_axes else None)
+            stacked["k"] = _sds((n_l,) + c["k"].shape, c["k"].dtype, mesh, kv_spec)
+            stacked["v"] = _sds((n_l,) + c["v"].shape, c["v"].dtype, mesh, kv_spec)
+            if "k_scale" in c:
+                stacked["k_scale"] = _sds((n_l,) + c["k_scale"].shape,
+                                          c["k_scale"].dtype, mesh, kv_spec)
+                stacked["v_scale"] = _sds((n_l,) + c["v_scale"].shape,
+                                          c["v_scale"].dtype, mesh, kv_spec)
+            stacked["pos"] = _sds((n_l,) + c["pos"].shape, c["pos"].dtype,
+                                  mesh, pos_spec)
+        if "ssm" in c:
+            from repro.models.ssm import ssm_dims
+
+            _, h_ssm, _, _ = ssm_dims(cfg)
+            h_ax = "model" if (h_ssm % mesh.shape["model"] == 0) else None
+            stacked["ssm"] = {
+                "conv": jax.tree_util.tree_map(
+                    lambda a: _sds((n_l,) + a.shape, a.dtype, mesh,
+                                   P(None, *b_ent, None, None)),
+                    c["ssm"]["conv"],
+                ),
+                "state": _sds((n_l,) + c["ssm"]["state"].shape,
+                              c["ssm"]["state"].dtype, mesh,
+                              P(None, *b_ent, h_ax, None, None)),
+            }
+        return stacked
+    out = []
+    for c in caches:
+        cc = {}
+        if "k" in c:
+            s_len = c["k"].shape[1]
+            seq_axes = cache_seq_axes(mesh, batch, s_len)
+            kv_spec = P(*b_ent, seq_axes if seq_axes else None, None, None)
+            pos_spec = P(*b_ent, seq_axes if seq_axes else None)
+            cc["k"] = _sds(c["k"].shape, c["k"].dtype, mesh, kv_spec)
+            cc["v"] = _sds(c["v"].shape, c["v"].dtype, mesh, kv_spec)
+            if "k_scale" in c:
+                cc["k_scale"] = _sds(c["k_scale"].shape, c["k_scale"].dtype,
+                                     mesh, kv_spec)
+                cc["v_scale"] = _sds(c["v_scale"].shape, c["v_scale"].dtype,
+                                     mesh, kv_spec)
+            cc["pos"] = _sds(c["pos"].shape, c["pos"].dtype, mesh, pos_spec)
+        if "ssm" in c:
+            from repro.models.ssm import ssm_dims
+
+            _, h_ssm, _, _ = ssm_dims(cfg)
+            h_ax = "model" if (h_ssm % mesh.shape["model"] == 0) else None
+            cc["ssm"] = {
+                "conv": jax.tree_util.tree_map(
+                    lambda a: _sds(a.shape, a.dtype, mesh,
+                                   P(*b_ent, None, None)),
+                    c["ssm"]["conv"],
+                ),
+                "state": _sds(c["ssm"]["state"].shape, c["ssm"]["state"].dtype,
+                              mesh, P(*b_ent, h_ax, None, None)),
+            }
+        out.append(cc)
+    return out
+
+
+def abstract_params(cfg: ModelConfig, mesh):
+    defs = T.param_defs(cfg)
+    shardings = param_shardings(cfg, mesh)
+    ab = M.abstract_params(defs)
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, _param_dtype(cfg), sharding=s),
+        ab, shardings,
+    )
+
+
+def _param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def abstract_opt_state(cfg: ModelConfig, params_abs, mesh):
+    """Abstract optimizer state with shardings derived from param specs."""
+    opt = make_optimizer(cfg.optimizer, Schedule(1e-4))
+    state = jax.eval_shape(opt.init, params_abs)
+    pspecs = M.partition_specs(T.param_defs(cfg), logical_rules(cfg, mesh))
+    if cfg.n_experts:
+        from repro.models.moe import expert_weight_specs
+
+        up, down = expert_weight_specs(
+            cfg, mesh.shape["model"], fsdp_axes(cfg, mesh)
+        )
+        moe = pspecs["layers"]["moe"]
+        moe["we_gate"] = P(None, *up)
+        moe["we_up"] = P(None, *up)
+        moe["we_down"] = P(None, *down)
+
+    def norm(spec: P, ndim: int) -> Tuple:
+        t = tuple(spec)
+        return t + (None,) * (ndim - len(t))
+
+    def state_spec(path_spec: P, leaf_abs, param_ndim: int):
+        # m/v mirror the param; factored vr/vc drop one dim
+        nd = leaf_abs.ndim
+        full = norm(path_spec, param_ndim)
+        if nd == param_ndim:
+            return P(*full)
+        if nd == param_ndim - 1:
+            # vr drops last dim; vc drops second-to-last (keeps last)
+            return None  # disambiguated below by shape
+        return P()
+
+    # walk: state mirrors params structure with per-leaf dicts (adafactor)
+    # or top-level m/v trees (adamw)
+    def assign(state_sub, spec: P, p_abs):
+        param_ndim = p_abs.ndim
+        full = norm(spec, param_ndim)
+
+        def leaf_sharding(leaf):
+            if leaf.ndim == param_ndim:
+                return NamedSharding(mesh, P(*full))
+            if leaf.ndim == param_ndim - 1 and param_ndim >= 2:
+                if leaf.shape == p_abs.shape[:-1]:
+                    return NamedSharding(mesh, P(*full[:-1]))
+                if leaf.shape == p_abs.shape[:-2] + p_abs.shape[-1:]:
+                    return NamedSharding(mesh, P(*(full[:-2] + full[-1:])))
+            return NamedSharding(mesh, P())
+
+        return jax.tree_util.tree_map(
+            lambda leaf: jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype, sharding=leaf_sharding(leaf)
+            ),
+            state_sub,
+        )
+
+    if cfg.optimizer == "adamw":
+        return {
+            k: jax.tree_util.tree_map(
+                lambda leaf, sp, pa: jax.ShapeDtypeStruct(
+                    leaf.shape, leaf.dtype,
+                    sharding=NamedSharding(mesh, P(*norm(sp, pa.ndim))),
+                ),
+                state[k], pspecs, params_abs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+            for k in ("m", "v")
+        }
+    # adafactor: per-param dict leaves
+    return jax.tree_util.tree_map(
+        assign, state, pspecs, params_abs,
+        is_leaf=lambda x: isinstance(x, dict) and "m" in x,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Lowering per cell
+# ----------------------------------------------------------------------------
+
+def _shard_bytes(leaf) -> int:
+    n = 1
+    shard = list(leaf.shape)
+    sh = getattr(leaf, "sharding", None)
+    if sh is not None and getattr(sh, "spec", None) is not None:
+        for i, ent in enumerate(sh.spec):
+            if ent is None:
+                continue
+            axes = (ent,) if isinstance(ent, str) else tuple(ent)
+            div = 1
+            for a in axes:
+                div *= dict(sh.mesh.shape)[a]
+            shard[i] //= div
+    for d in shard:
+        n *= d
+    return n * jnp.dtype(leaf.dtype).itemsize
+
+
+def static_capacity_model(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, float]:
+    """Deterministic per-device capacity model (the TPU ground truth for
+    the persistent state; XLA:CPU temp numbers carry convert artifacts).
+
+    params/opt/caches are summed from the *actual sharded abstract trees*;
+    activation carries use the layer-scan residual formula.
+    """
+    out: Dict[str, float] = {}
+    params_abs = abstract_params(cfg, mesh)
+    out["params"] = sum(_shard_bytes(x) for x in jax.tree_util.tree_leaves(params_abs))
+    n_data = 1
+    for a in data_axes(mesh):
+        n_data *= mesh.shape[a]
+    if shape.kind == "train":
+        opt_abs = abstract_opt_state(cfg, params_abs, mesh)
+        out["opt_state"] = sum(_shard_bytes(x)
+                               for x in jax.tree_util.tree_leaves(opt_abs))
+        acc_b = 2 if cfg.accum_dtype == "bfloat16" else 4
+        if cfg.n_microbatches > 1:
+            out["grad_accum"] = out["params"] // 2 * acc_b
+        rows = max(1, shape.global_batch // cfg.n_microbatches // n_data)
+        # scan saves one bf16 carry per layer (+ssm branch inputs ~1x)
+        out["act_carries"] = cfg.n_layers * rows * shape.seq_len * cfg.d_model * 2
+    elif shape.kind == "decode":
+        caches = abstract_cache_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+        out["kv_cache"] = sum(_shard_bytes(x)
+                              for x in jax.tree_util.tree_leaves(caches))
+    else:  # prefill: cache built as output
+        caches = abstract_cache_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+        out["kv_cache"] = sum(_shard_bytes(x)
+                              for x in jax.tree_util.tree_leaves(caches))
+        rows = max(1, shape.global_batch // n_data)
+        out["act_transient"] = 4 * rows * shape.seq_len * cfg.d_model * 2
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def _unstack_cache_specs(cfg: ModelConfig, stacked):
+    """Stacked (L, ...) cache specs -> per-layer list (probe layout)."""
+    def one(i):
+        return jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype,
+                                           sharding=_drop_lead(a.sharding)),
+            stacked,
+        )
+
+    def _drop_lead(sh):
+        if sh is None or getattr(sh, "spec", None) is None:
+            return None
+        return NamedSharding(sh.mesh, P(*tuple(sh.spec)[1:]))
+
+    return [one(i) for i in range(cfg.n_layers)]
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.is_sub_quadratic:
+        return False, "skipped(full-attention)"
+    return True, ""
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    unroll: bool = False,
+    donate: bool = True,
+):
+    """Lower + compile one cell.  Returns (lowered, compiled)."""
+    axes = data_axes(mesh)
+    params_abs = abstract_params(cfg, mesh)
+    ins = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, Schedule(1e-4))
+        opt_abs = abstract_opt_state(cfg, params_abs, mesh)
+        step_fn = make_train_step(cfg, opt, mesh, unroll=unroll)
+        args = (params_abs, opt_abs, ins["tokens"], ins["labels"], ins["step"])
+        kwargs = {}
+        if "embeds" in ins:
+            fn = lambda p, o, t, l, s, e: step_fn(p, o, t, l, s, embeds=e)
+            args = args + (ins["embeds"],)
+        else:
+            fn = step_fn
+        jfn = jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+    elif shape.kind == "prefill":
+        bspec = batch_spec(mesh, shape.global_batch)
+        seq_axes = cache_seq_axes(mesh, shape.global_batch, shape.seq_len)
+
+        def kv_constraint(a):  # (B, S, K, D)
+            spec = P(*bspec, seq_axes if seq_axes else None, None, None)
+            return jax.lax.with_sharding_constraint(a, spec)
+
+        def fn(p, t, e=None):
+            if unroll:  # probe path: python loop, static-skip attention
+                logits, caches, _ = T.prefill(
+                    p, t, cfg, max_len=shape.seq_len, embeds=e, mesh=mesh,
+                    data_axes=axes, unroll=True, last_logits_only=True)
+                return logits, caches
+            return T.prefill_scan(p, t, cfg, embeds=e, mesh=mesh,
+                                  data_axes=axes, kv_constraint=kv_constraint)
+        if "embeds" in ins:
+            args = (params_abs, ins["tokens"], ins["embeds"])
+        else:
+            args = (params_abs, ins["tokens"])
+        jfn = jax.jit(fn)
+    else:  # decode
+        # scan form for the main lowering (bounded scheduling); the python
+        # loop (unroll) for probes — scan bodies are cost-counted once
+        use_scan = T.uniform_layers(cfg) and not unroll
+        dec = T.decode_step_scan if use_scan else T.decode_step
+        if unroll and T.uniform_layers(cfg):
+            # probes need the per-layer cache list layout
+            ins["caches"] = _unstack_cache_specs(cfg, ins["caches"])
+
+        def fn(p, t, c, pos):
+            return dec(p, t, c, pos, cfg, mesh=mesh, data_axes=axes)
+        args = (params_abs, ins["tokens"], ins["caches"], ins["position"])
+        jfn = jax.jit(fn, donate_argnums=(2,) if donate else ())
+
+    t0 = time.time()
+    lowered = jfn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return lowered, compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1,
+                               "arg_tree": args}
+
+
+# ----------------------------------------------------------------------------
+# Analysis extraction
+# ----------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\(?[^)=]*\)?) (\S+?)\(", line)
+        if not m:
+            continue
+        shape_str, opname = m.groups()
+        base = opname.split(".")[0]
+        if base.rstrip("-start") in COLLECTIVES or base in COLLECTIVES:
+            kind = base.replace("-start", "")
+            if kind not in COLLECTIVES:
+                continue
+            b = _shape_bytes(shape_str)
+            d = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+            d["count"] += 1
+            d["bytes"] += b
+    return out
+
+
+def collective_wire_bytes(colls: Dict[str, Dict[str, float]]) -> float:
+    """Bytes crossing links per device: AR counts ~2x (ring), others ~1x."""
+    total = 0.0
+    for kind, d in colls.items():
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        total += mult * d["bytes"]
+    return total
+
+
+def f32_convert_artifact_bytes(txt: str, arg_tree) -> int:
+    """XLA:CPU has no native bf16 dot: it inserts bf16->f32 input converts,
+    and LICM hoists converts of loop-invariant stacks (layer-stacked weights,
+    KV caches) OUT of the layer loop as full-size f32 copies.  A TPU MXU
+    consumes bf16 directly, so these buffers do not exist on the target.
+    This measures them: for every bf16 input leaf, count one f32 buffer of
+    identical shape found in the compiled text (conservative lower bound).
+    """
+    import numpy as _np
+
+    shapes_in_text = set(re.findall(r"f32\[([\d,]+)\]", txt))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(arg_tree):
+        if getattr(leaf, "dtype", None) != jnp.bfloat16 or leaf.ndim < 2:
+            continue
+        # per-device shard shape: divide sharded dims
+        shard = list(leaf.shape)
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and getattr(sh, "spec", None) is not None:
+            for i, ent in enumerate(sh.spec):
+                if ent is None:
+                    continue
+                axes = (ent,) if isinstance(ent, str) else tuple(ent)
+                div = 1
+                for a in axes:
+                    div *= dict(sh.mesh.shape)[a]
+                shard[i] //= div
+        key = ",".join(str(d) for d in shard)
+        if key in shapes_in_text and _np.prod(shard) * 4 > 2**27:
+            total += int(_np.prod(shard)) * 4
+    return total
+
+
+def analyze(compiled, arg_tree=None) -> Dict[str, Any]:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    colls = parse_collectives(txt)
+    out = {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        "collectives": colls,
+        "collective_bytes_per_device": collective_wire_bytes(colls),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        },
+    }
+    if arg_tree is not None:
+        out["cpu_f32_artifact_bytes"] = f32_convert_artifact_bytes(txt, arg_tree)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Driver
+# ----------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if not ok:
+        rec["status"] = reason
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        with mesh:
+            lowered, compiled, times = lower_cell(cfg, shape, mesh)
+            arg_tree = times.pop("arg_tree")
+            rec.update(times)
+            rec.update(analyze(compiled, arg_tree))
+            rec["status"] = "ok"
+            ma = rec["memory"]
+            hbm = 16 * 1024**3
+            # donated outputs alias their arguments; args+temp is the live set
+            live = ma["argument_bytes"] + ma["temp_bytes"]
+            rec["live_bytes"] = live
+            rec["fits_16GB"] = bool(live <= hbm)
+            # TPU-corrected estimate: remove XLA:CPU bf16->f32 convert hoists
+            art = rec.get("cpu_f32_artifact_bytes", 0)
+            rec["live_bytes_tpu_est"] = live - art
+            rec["fits_16GB_tpu_est"] = bool(live - art <= hbm)
+            # deterministic capacity model (persistent state, TPU ground truth)
+            cap = static_capacity_model(cfg, shape, mesh)
+            rec["capacity_model"] = cap
+            rec["fits_16GB_capacity"] = bool(cap["total"] <= hbm)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["status"] = f"error: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--out", default=None, help="directory for JSON results")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in pods:
+                cells.append((a, s, mp))
+
+    results = []
+    for a, s, mp in cells:
+        t0 = time.time()
+        rec = run_cell(a, s, mp)
+        rec["wall_s"] = time.time() - t0
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" flops/dev={rec['flops_per_device']:.3e}"
+                     f" coll={rec['collective_bytes_per_device']:.3e}B"
+                     f" live={rec['live_bytes']/2**30:.2f}GiB"
+                     f" (tpu-est {rec['live_bytes_tpu_est']/2**30:.2f})"
+                     f" fits={rec['fits_16GB']}/{rec['fits_16GB_tpu_est']}")
+        print(f"[{rec['mesh']}] {a} x {s}: {status}{extra}", flush=True)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            fn = f"{a}__{s}__{'mp' if mp else 'sp'}.json"
+            with open(os.path.join(args.out, fn), "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Aggregate dryrun_results/ + roofline_results/ JSON into the
+EXPERIMENTS.md markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.report --dryrun dryrun_results \
+        --roofline roofline_results
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+GIB = 1024**3
+
+
+def _load(d: str) -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | GFLOP/dev | coll GB/dev | live GiB "
+        "(tpu-est) | capacity GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"].startswith("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                "| — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | |")
+            continue
+        cap = r.get("capacity_model", {}).get("total", 0) / GIB
+        fits = "Y" if r.get("fits_16GB_tpu_est") and cap <= 16 else (
+            "cap-only" if cap <= 16 else "N")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['flops_per_device']/1e9:.0f} "
+            f"| {r['collective_bytes_per_device']/1e9:.2f} "
+            f"| {r['live_bytes']/GIB:.1f} ({r['live_bytes_tpu_est']/GIB:.1f}) "
+            f"| {cap:.1f} | {fits} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | bottleneck "
+        "| MODEL/HLO | roofline % |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"].startswith("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['model_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']*100:.1f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun_results")
+    ap.add_argument("--roofline", default="roofline_results")
+    args = ap.parse_args()
+    if os.path.isdir(args.dryrun):
+        print("## Dry-run table\n")
+        print(dryrun_table(_load(args.dryrun)))
+        print()
+    if os.path.isdir(args.roofline):
+        print("## Roofline table\n")
+        print(roofline_table(_load(args.roofline)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Training driver.
+
+Real execution on this machine uses reduced configs (CPU); on a TPU slice
+the same driver runs the full config on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.events.pipeline import TokenPipeline
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=[None, "int8", "topk"])
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the 16x16 mesh (needs 256 devices)")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_production_mesh() if args.production_mesh else None
+
+    tcfg = TrainerConfig(
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, lr=args.lr,
+        grad_compression=args.grad_compression,
+        decay_steps=max(args.steps, 100),
+    )
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    pipe = TokenPipeline(cfg.vocab, args.batch, args.seq, seed=0)
+    if args.resume and trainer.maybe_restore(pipe):
+        print(f"resumed from step {trainer.step}")
+
+    out = trainer.train(pipe, args.steps, pipeline=pipe,
+                        install_preemption_handler=True)
+    hist = out["history"]
+    for h in hist[:: max(1, len(hist) // 10)]:
+        flag = " [straggler]" if h["straggler"] else ""
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"{h['dt']*1e3:7.1f} ms{flag}")
+    print(f"final step {out['final_step']}, "
+          f"loss {hist[-1]['loss']:.4f} (start {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models import (cnn, frontends, layers, module, moe, ssm,  # noqa: F401
+                          transformer, unet)

@@ -1,0 +1,82 @@
+"""Inception-style CNN classifier (GoogLeNet-lite) for TS classification.
+
+The paper feeds 224x224 TS frames to an ImageNet-pretrained GoogLeNet
+(Sec. IV-D).  No pretrained weights exist offline, so we train a scaled
+GoogLeNet (stem + inception blocks + GAP head) from scratch on the
+synthetic classification streams; what matters for reproduction is the
+*relative* accuracy of TS-vs-baseline inputs, evaluated in
+benchmarks/bench_classify.py.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamDef
+
+
+def _conv_defs(cin: int, cout: int, k: int) -> dict:
+    return {
+        "w": ParamDef((k, k, cin, cout), (None, None, None, None), scale=1.0),
+        "b": ParamDef((cout,), (None,), init="zeros"),
+    }
+
+
+def _conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + p["b"])
+
+
+def _inception_defs(cin: int, c1: int, c3: int, c5: int, cp: int) -> dict:
+    return {
+        "b1": _conv_defs(cin, c1, 1),
+        "b3a": _conv_defs(cin, c3 // 2, 1),
+        "b3b": _conv_defs(c3 // 2, c3, 3),
+        "b5a": _conv_defs(cin, c5 // 2, 1),
+        "b5b": _conv_defs(c5 // 2, c5, 5),
+        "bp": _conv_defs(cin, cp, 1),
+    }
+
+
+def _inception(p, x):
+    b1 = _conv(p["b1"], x)
+    b3 = _conv(p["b3b"], _conv(p["b3a"], x))
+    b5 = _conv(p["b5b"], _conv(p["b5a"], x))
+    pool = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 1, 1, 1), "SAME"
+    )
+    bp = _conv(p["bp"], pool)
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def cnn_defs(in_channels: int, n_classes: int, width: int = 32) -> dict:
+    w = width
+    return {
+        "stem": _conv_defs(in_channels, w, 5),
+        "inc1": _inception_defs(w, w // 2, w, w // 4, w // 4),
+        "inc2": _inception_defs(2 * w, w, 2 * w, w // 2, w // 2),
+        "head": {
+            "w": ParamDef((4 * w, n_classes), (None, None)),
+            "b": ParamDef((n_classes,), (None,), init="zeros"),
+        },
+    }
+
+
+def cnn_apply(params, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    x = _conv(params["stem"], x, stride=2)
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    x = _inception(params["inc1"], x)
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    x = _inception(params["inc2"], x)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]

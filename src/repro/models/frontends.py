@@ -1,0 +1,65 @@
+"""Modality frontends.
+
+Per the assignment, [audio]/[vlm] archs specify the transformer BACKBONE
+only; the modality frontend is a STUB whose ``input_specs()`` provides
+precomputed frame/patch embeddings.  The paper's own technique enters the
+LM pool here as a real frontend: events -> ISC time surface -> patch
+embeddings (``EventTSFrontend``), the integration used by
+examples/train_event_classifier.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import edram
+from repro.core import time_surface as ts
+from repro.models.module import ParamDef
+
+
+def stub_embeddings_spec(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct for precomputed frontend embeddings (vlm/audio)."""
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.frontend_seq, cfg.d_model), cfg.activation_dtype
+    )
+
+
+# ----------------------------------------------------------------------------
+# Event time-surface frontend (the paper's technique as an LM frontend)
+# ----------------------------------------------------------------------------
+
+def event_ts_frontend_defs(cfg: ModelConfig, patch: int = 8, polarities: int = 1):
+    return {
+        "proj": ParamDef(
+            (patch * patch * polarities, cfg.d_model), (None, "embed")
+        ),
+        "pos": ParamDef((cfg.frontend_seq, cfg.d_model), (None, "embed"),
+                        init="embed", scale=0.02),
+    }
+
+
+def event_ts_frontend(
+    params,
+    sae: jax.Array,          # (B, P, H, W) SAE state from the ISC array
+    t_read,
+    cfg: ModelConfig,
+    decay: edram.DecayParams | None = None,
+    tau: float = 24e-3,
+    patch: int = 8,
+) -> jax.Array:
+    """SAE -> (eDRAM or ideal) TS -> non-overlapping patches -> embeddings."""
+    if decay is None:
+        frame = ts.ts_ideal(sae, t_read, tau)
+    else:
+        frame = ts.ts_edram(sae, t_read, decay)
+    b, p, h, w = frame.shape
+    hp, wp = h // patch, w // patch
+    x = frame[:, :, : hp * patch, : wp * patch]
+    x = x.reshape(b, p, hp, patch, wp, patch)
+    x = jnp.moveaxis(x, (2, 4), (1, 2)).reshape(b, hp * wp, p * patch * patch)
+    emb = jnp.einsum("bne,ed->bnd", x.astype(params["proj"].dtype), params["proj"])
+    n = min(emb.shape[1], params["pos"].shape[0])
+    return (emb[:, :n] + params["pos"][None, :n]).astype(cfg.activation_dtype)

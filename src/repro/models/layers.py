@@ -1,0 +1,309 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, gated MLP.
+
+Attention is implemented blockwise (flash-style running-softmax over KV
+chunks) in pure JAX so 32k-token prefill never materializes an (S, S)
+score matrix.  Two lowering modes:
+
+  * ``unroll=False`` (default): lax.scan over KV chunks with masking —
+    compact HLO, used for full-depth lowering and real execution.
+  * ``unroll=True``: python loops with *static causal/window skipping* —
+    exact FLOP accounting, used by the dry-run's 1/2-period probe
+    lowerings (lax.scan bodies are counted once by XLA cost analysis).
+
+Supports: GQA grouping, causal masking, local (sliding-window) layers,
+gemma-style logit softcapping, qwen3-style qk-norm, partial-fraction RoPE.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamDef
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # Variance via an f32-ACCUMULATING einsum on the bf16 tensor: if the
+    # big tensor is ever consumed through a full f32 convert, XLA hoists
+    # that convert into the layer scan's residual stack (f32 carries = 2x
+    # remat memory, measured on gemma3/kimi train_4k).
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    )[..., None] / x.shape[-1]
+    scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * scale * (1.0 + gamma).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    rot_dim = int(head_dim * fraction) // 2 * 2
+    freqs = theta ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    return freqs  # (rot_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float, theta: float) -> jax.Array:
+    """x: (B, S, N, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    freqs = rope_frequencies(d, fraction, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Blockwise attention
+# ----------------------------------------------------------------------------
+
+def _soft_cap(s: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+NEG_INF = -1e30
+
+
+def _block_attend(qi, kj, vj, mask, softcap, scale):
+    """One (q-chunk, kv-chunk) tile. qi: (B, bq, K, G, D); kj/vj: (B, bc, K, D).
+
+    mask: (bq, bc) bool (True = attend) or None.
+    Returns (scores_max (B,bq,K,G), p_sum, pv (B,bq,K,G,D)) partials.
+    """
+    s = jnp.einsum(
+        "bqkgd,bckd->bqkgc", qi, kj, preferred_element_type=jnp.float32
+    ) * scale
+    s = _soft_cap(s, softcap)
+    if mask is not None:
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    # zero out fully-masked rows (m == NEG_INF)
+    p = jnp.where((m > NEG_INF * 0.5)[..., None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vj.dtype), vj,
+                    preferred_element_type=jnp.float32)
+    return m, l, pv
+
+
+def _merge(m1, l1, o1, m2, l2, o2):
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    a1 = jnp.where(m1 > NEG_INF * 0.5, a1, 0.0)
+    a2 = jnp.where(m2 > NEG_INF * 0.5, a2, 0.0)
+    return m, l1 * a1 + l2 * a2, o1 * a1[..., None] + o2 * a2[..., None]
+
+
+def blockwise_attention(
+    q: jax.Array,             # (B, S, H, D)
+    k: jax.Array,             # (B, Sk, K, D)
+    v: jax.Array,             # (B, Sk, K, D)
+    causal: bool = True,
+    window: Optional[int] = None,   # local attention half-width (keys back)
+    softcap: Optional[float] = None,
+    q_offset: int = 0,        # absolute position of q[0] (prefill continuation)
+    bq: int = 512,
+    bc: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, kh, g, d)
+
+    bq = min(bq, s)
+    bc = min(bc, sk)
+    pq, pc = (-s) % bq, (-sk) % bc
+    qg = jnp.pad(qg, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pc), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pc), (0, 0), (0, 0)))
+    nq, nc = (s + pq) // bq, (sk + pc) // bc
+
+    q_pos = q_offset + jnp.arange(s + pq)
+    k_pos = jnp.arange(sk + pc)
+    k_valid = k_pos < sk
+
+    def tile_mask(i, j):
+        qp = q_pos[i * bq : (i + 1) * bq] if unroll else jax.lax.dynamic_slice_in_dim(q_pos, i * bq, bq)
+        kpos = k_pos[j * bc : (j + 1) * bc] if unroll else jax.lax.dynamic_slice_in_dim(k_pos, j * bc, bc)
+        kv = kpos < sk
+        m = jnp.ones((bq, bc), bool) & kv[None, :]
+        if causal:
+            m &= qp[:, None] >= kpos[None, :]
+        if window is not None:
+            m &= (qp[:, None] - kpos[None, :]) < window
+        return m
+
+    if unroll:
+        outs = []
+        for i in range(nq):
+            qi = qg[:, i * bq : (i + 1) * bq]
+            mi = jnp.full((b, bq, kh, g), NEG_INF, jnp.float32)
+            li = jnp.zeros((b, bq, kh, g), jnp.float32)
+            oi = jnp.zeros((b, bq, kh, g, d), jnp.float32)
+            q_lo, q_hi = q_offset + i * bq, q_offset + (i + 1) * bq - 1
+            for j in range(nc):
+                k_lo, k_hi = j * bc, (j + 1) * bc - 1
+                if causal and k_lo > q_hi:
+                    continue  # static causal skip — no wasted FLOPs
+                if window is not None and k_hi < q_lo - window + 1:
+                    continue  # static window skip
+                kj = kp[:, j * bc : (j + 1) * bc]
+                vj = vp[:, j * bc : (j + 1) * bc]
+                need_mask = (causal and k_hi > q_lo) or (
+                    window is not None and k_lo < q_hi - window + 1
+                ) or (j == nc - 1 and pc > 0)
+                msk = tile_mask(i, j) if need_mask else None
+                m2, l2, o2 = _block_attend(qi, kj, vj, msk, softcap, scale)
+                mi, li, oi = _merge(mi, li, oi, m2, l2, o2)
+            outs.append(oi / jnp.maximum(li[..., None], 1e-37))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def q_chunk(i):
+            # remat per q-chunk: without it, the backward keeps the softmax
+            # stacks of every (q, kv) block pair — the full S^2 score matrix
+            # (flash attention's whole point is not materializing that).
+            qi = jax.lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=1)
+
+            def kv_step(carry, j):
+                mi, li, oi = carry
+                kj = jax.lax.dynamic_slice_in_dim(kp, j * bc, bc, axis=1)
+                vj = jax.lax.dynamic_slice_in_dim(vp, j * bc, bc, axis=1)
+                m2, l2, o2 = _block_attend(qi, kj, vj, tile_mask(i, j), softcap, scale)
+                return _merge(mi, li, oi, m2, l2, o2), None
+
+            init = (
+                jnp.full((b, bq, kh, g), NEG_INF, jnp.float32),
+                jnp.zeros((b, bq, kh, g), jnp.float32),
+                jnp.zeros((b, bq, kh, g, d), jnp.float32),
+            )
+            (mi, li, oi), _ = jax.lax.scan(kv_step, init, jnp.arange(nc))
+            return oi / jnp.maximum(li[..., None], 1e-37)
+
+        out = jax.lax.map(q_chunk, jnp.arange(nq))  # (nq, B, bq, K, G, D)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, nq * bq, kh, g, d)
+
+    out = out[:, :s].reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, D)
+    k_cache: jax.Array,      # (B, S, K, D)
+    v_cache: jax.Array,      # (B, S, K, D)
+    kv_positions: jax.Array, # (B, S) int32 absolute pos of each cache slot (-1 empty)
+    q_position: jax.Array,   # (B,) or scalar absolute position of the query
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring) KV cache."""
+    b, s, kh, d = k_cache.shape
+    h = q.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kh, g, d)
+    s_logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s_logits = _soft_cap(s_logits, softcap)
+    qpos = jnp.asarray(q_position)
+    if qpos.ndim == 0:
+        qpos = jnp.full((b,), qpos)
+    valid = (kv_positions >= 0) & (kv_positions <= qpos[:, None])
+    if window is not None:
+        valid &= (qpos[:, None] - kv_positions) < window
+    s_logits = jnp.where(valid[:, None, None, :], s_logits, NEG_INF)
+    p = jax.nn.softmax(s_logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention block (params + apply)
+# ----------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="zeros")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="zeros")
+    return defs
+
+
+def attention_qkv(params, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    params, x, cfg: ModelConfig, kind: str, positions, unroll: bool = False
+) -> jax.Array:
+    """Full self-attention block (prefill/train path)."""
+    q, k, v = attention_qkv(params, x, cfg, positions)
+    window = cfg.window if kind == "local" else None
+    out = blockwise_attention(
+        q, k, v, causal=True, window=window,
+        softcap=cfg.attn_logit_softcap, unroll=unroll,
+    )
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ----------------------------------------------------------------------------
+# Gated MLP
+# ----------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "wi_gate": ParamDef((d, f), ("embed", "mlp")),
+        "wi_up": ParamDef((d, f), ("embed", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_block(params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(dt))
+    up = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(dt))
+    h = jax.nn.gelu(gate.astype(jnp.float32)).astype(dt) * up
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dt))

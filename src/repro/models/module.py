@@ -1,0 +1,109 @@
+"""Minimal parameter/module system (no flax on this machine).
+
+A model is described by a nested dict of ``ParamDef``s — shape, logical
+axis names, initializer — from which we derive, consistently and from one
+source of truth:
+
+  * ``init_params``       materialized parameter pytree
+  * ``partition_specs``   jax.sharding.PartitionSpec pytree via logical rules
+  * ``abstract_params``   ShapeDtypeStruct pytree (dry-run: no allocation)
+
+Logical axis names are mapped to mesh axes by a rules dict, e.g.
+``{"vocab": "model", "embed": None, "mlp": "model", ...}``.  FSDP is a
+rules change ("embed" -> "data"), not a model change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis name per dim
+    init: str = "normal"                   # normal | zeros | ones | embed
+    scale: float = 1.0                     # stddev multiplier / fan-in override
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _initialize(key: jax.Array, d: ParamDef) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape) * d.scale).astype(d.dtype)
+    if d.init == "normal":
+        # fan-in scaled (truncated-normal-ish) init; last-but-one dim = fan_in
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    raise ValueError(d.init)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a nested dict of ParamDef into arrays (split keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_initialize(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def partition_specs(defs, rules: Dict[str, Any]):
+    """PartitionSpec pytree from logical axes + rules.
+
+    A rule value may be None (replicate), a mesh axis name, or a tuple of
+    mesh axis names.  Unknown logical names replicate.
+    """
+
+    def one(d: ParamDef) -> P:
+        return P(*(rules.get(a) if a is not None else None for a in d.axes))
+
+    return jax.tree_util.tree_map(one, defs, is_leaf=_is_def)
+
+
+def stack_layer_defs(defs, n_layers: int):
+    """Prepend a scanned 'layers' dim to every ParamDef in a subtree."""
+
+    def one(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(
+            d, shape=(n_layers,) + d.shape, axes=("layers",) + d.axes
+        )
+
+    return jax.tree_util.tree_map(one, defs, is_leaf=_is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_def)
+    return sum(math.prod(d.shape) for d in leaves)
+
+
+def cast_floating(tree, dtype):
+    """Cast floating leaves (used to run compute in bf16 from f32 master)."""
+
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(one, tree)

@@ -1,0 +1,237 @@
+"""Mamba-2 SSD blocks (state-space duality, arXiv:2405.21060) in pure JAX.
+
+The SSD recurrence  h_t = a_t h_{t-1} + dt_t * (B_t (x) x_t),
+y_t = C_t . h_t + D x_t  is evaluated with the chunked matmul algorithm
+(MXU-friendly): intra-chunk attention-like einsums + an inter-chunk
+elementwise decay recurrence.  The inter-chunk recurrence is exactly the
+paper's eDRAM decay primitive — on TPU it runs through the same
+``decay_scan`` kernel that implements the streaming time surface
+(``use_pallas=True``; the pure-jnp oracle otherwise, identical math).
+
+Projections are kept SEPARATE (z/x/B/C/dt) rather than fused so the big
+ones (z, x, out — d x d_inner) tensor-shard over "model" on the head dim
+(a fused in_proj cannot shard without crossing split boundaries; measured
++56 GiB/device replicated state on mamba2-2.7b train_4k).
+
+Decode keeps a per-layer (B, H, P, N) state + (B, K-1, *) conv rings —
+O(1) per token, the reason the ssm/hybrid archs run long_500k.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.module import ParamDef
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, heads, headdim, state)."""
+    if cfg.family == "hybrid":
+        d_inner = cfg.d_model            # hymba: parallel heads, no expansion
+    else:
+        d_inner = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_headdim
+    h = cfg.ssm_heads or d_inner // p
+    n = cfg.ssm_state
+    assert h * p == d_inner, (h, p, d_inner)
+    return d_inner, h, p, n
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, h, p, n = ssm_dims(cfg)
+    k = cfg.conv_kernel
+    return {
+        "z_proj": ParamDef((d, di), ("embed", "ssm_inner")),
+        "x_proj": ParamDef((d, di), ("embed", "ssm_inner")),
+        "b_proj": ParamDef((d, n), ("embed", None)),
+        "c_proj": ParamDef((d, n), ("embed", None)),
+        "dt_proj": ParamDef((d, h), ("embed", "ssm_heads")),
+        "conv_x_w": ParamDef((k, di), (None, "ssm_inner"), scale=0.5),
+        "conv_x_b": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "conv_b_w": ParamDef((k, n), (None, None), scale=0.5),
+        "conv_b_b": ParamDef((n,), (None,), init="zeros"),
+        "conv_c_w": ParamDef((k, n), (None, None), scale=0.5),
+        "conv_c_b": ParamDef((n,), (None,), init="zeros"),
+        "a_log": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, bias: jax.Array,
+            state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  x: (B, T, C); w: (K, C).
+
+    With ``state`` (B, K-1, C) the conv continues a stream; returns
+    (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xc = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xc[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    y = jax.nn.silu((y + bias[None, None, :]).astype(jnp.float32)).astype(x.dtype)
+    return y, xc[:, -(k - 1):, :] if k > 1 else state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., q) -> (..., q, q) lower-triangular segment sums (log space)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    d = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, T, H, P)
+    a_log: jax.Array,    # (B, T, H)   per-step log decay (<= 0)
+    b_in: jax.Array,     # (B, T, N)
+    c_in: jax.Array,     # (B, T, N)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (B, H, P, N)
+    use_pallas: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    bsz, t, h, p = x.shape
+    n = b_in.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a_log.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc_ = b_in.reshape(bsz, nc, chunk, n)
+    cc = c_in.reshape(bsz, nc, chunk, n)
+
+    a_hc = jnp.moveaxis(ac, -1, 1)                  # (B, H, nc, q)
+    a_cum = jnp.cumsum(a_hc, axis=-1)               # (B, H, nc, q)
+
+    # 1) intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(_segsum(a_hc))                  # (B, H, nc, q, q)
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp", cc, bc_, l_mat.astype(cc.dtype), xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # 2) chunk -> final-state contributions
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)   # (B, H, nc, q)
+    states = jnp.einsum(
+        "bcln,bhcl,bclhp->bchpn", bc_, decay_states.astype(bc_.dtype), xc,
+        preferred_element_type=jnp.float32,
+    )  # (B, nc, H, P, N)
+
+    # 3) inter-chunk recurrence — the paper's decay primitive
+    chunk_decay = jnp.exp(a_cum[..., -1])            # (B, H, nc)
+    a_seq = jnp.moveaxis(chunk_decay, -1, 1).reshape(bsz, nc, h, 1, 1)
+    a_seq = jnp.broadcast_to(a_seq, states.shape).reshape(bsz, nc, -1)
+    x_seq = states.reshape(bsz, nc, -1)
+    s0 = None if initial_state is None else initial_state.reshape(bsz, -1)
+    from repro.kernels import ops as kops
+    all_states, final = kops.decay_scan(a_seq, x_seq, s0, use_ref=not use_pallas)
+    # states *entering* each chunk: shift right by one
+    prev = jnp.concatenate(
+        [jnp.zeros_like(all_states[:, :1]) if s0 is None else s0[:, None],
+         all_states[:, :-1]], axis=1,
+    ).reshape(bsz, nc, h, p, n)
+
+    # 4) inter-chunk (off-diagonal) output
+    out_decay = jnp.exp(a_cum)                       # (B, H, nc, q)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", cc, prev.astype(cc.dtype),
+        out_decay.astype(cc.dtype), preferred_element_type=jnp.float32,
+    )
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, p)[:, :t]
+    return y.astype(x.dtype), final.reshape(bsz, h, p, n)
+
+
+def _project(params, x: jax.Array, cfg: ModelConfig,
+             conv_state: Optional[Dict[str, jax.Array]] = None):
+    """Shared z/x/B/C/dt projections + causal convs.  Returns
+    (z, xs, b_in, c_in, dt_raw, new_conv_state)."""
+    dt_ = x.dtype
+    pj = lambda w: jnp.einsum("bsd,de->bse", x, params[w].astype(dt_))
+    z, xs, b_in, c_in, dt_raw = (pj(w) for w in
+                                 ("z_proj", "x_proj", "b_proj", "c_proj",
+                                  "dt_proj"))
+    cs = conv_state or {}
+    xs, cx = _conv1d(xs, params["conv_x_w"].astype(dt_),
+                     params["conv_x_b"].astype(dt_), cs.get("x"))
+    b_in, cb = _conv1d(b_in, params["conv_b_w"].astype(dt_),
+                       params["conv_b_b"].astype(dt_), cs.get("b"))
+    c_in, ccv = _conv1d(c_in, params["conv_c_w"].astype(dt_),
+                        params["conv_c_b"].astype(dt_), cs.get("c"))
+    return z, xs, b_in, c_in, dt_raw, {"x": cx, "b": cb, "c": ccv}
+
+
+def _gate_out(params, y, z, cfg: ModelConfig, dt_):
+    from repro.models.layers import rms_norm
+    y = rms_norm(y.astype(dt_) * jax.nn.silu(z.astype(jnp.float32)).astype(dt_),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    return out.astype(dt_)
+
+
+def ssm_block(
+    params, x: jax.Array, cfg: ModelConfig,
+    conv_state: Optional[Dict[str, jax.Array]] = None,
+    ssm_state: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+):
+    """Full-sequence mamba2 block.  Returns (y, (conv_state, ssm_state))."""
+    di, h, p, n = ssm_dims(cfg)
+    dt_ = x.dtype
+    z, xs, b_in, c_in, dt_raw, new_conv = _project(params, x, cfg, conv_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))                     # (H,)
+    a_log_step = dt * a[None, None, :]
+    xh = xs.reshape(*xs.shape[:2], h, p) * dt[..., None].astype(dt_)
+    y, final = ssd_chunked(xh, a_log_step, b_in, c_in, cfg.ssm_chunk,
+                           ssm_state, use_pallas)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(*xs.shape[:2], di)
+    return _gate_out(params, y, z, cfg, dt_), (new_conv, final)
+
+
+def ssm_decode_step(
+    params, x: jax.Array, cfg: ModelConfig,
+    conv_state: Dict[str, jax.Array], ssm_state: jax.Array,
+):
+    """O(1) single-token update.  x: (B, 1, D)."""
+    di, h, p, n = ssm_dims(cfg)
+    dt_ = x.dtype
+    z, xs, b_in, c_in, dt_raw, new_conv = _project(params, x, cfg, conv_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,1,H)
+    a = jnp.exp(dt * (-jnp.exp(params["a_log"].astype(jnp.float32)))[None, None, :])
+    xh = (xs.reshape(x.shape[0], 1, h, p) * dt[..., None].astype(dt_))[:, 0]  # (B,H,P)
+    # h_new = a*h + B (outer) x
+    upd = jnp.einsum("bn,bhp->bhpn", b_in[:, 0].astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    new_state = a[:, 0, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_in[:, 0].astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, di)
+    return _gate_out(params, y, z, cfg, dt_), (new_conv, new_state)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, h, p, n = ssm_dims(cfg)
+    k = cfg.conv_kernel
+    return {
+        "conv": {
+            "x": jnp.zeros((batch, k - 1, di), dtype),
+            "b": jnp.zeros((batch, k - 1, n), dtype),
+            "c": jnp.zeros((batch, k - 1, n), dtype),
+        },
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+    }

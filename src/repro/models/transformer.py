@@ -1,0 +1,648 @@
+"""Decoder LM supporting all 10 assigned architectures.
+
+One composable stack: GQA attention (RoPE / qk-norm / softcap / local
+windows), dense or MoE FFN, Mamba-2 SSD blocks, hymba-style hybrid
+(parallel attn+SSM heads), and stub modality frontends.
+
+Lowering structure
+  * train/prefill: ``lax.scan`` over layer *periods* (the repeating
+    local/global pattern is unrolled inside the scan body so every branch
+    is static), with per-period remat.  ``unroll=True`` switches to a
+    python loop — exact-FLOP probe lowering for the roofline.
+  * decode: python loop over layers (heterogeneous per-layer caches:
+    ring buffers for local layers, full buffers for global, SSM states
+    for ssm/hybrid) — O(1)/O(window) memory per local/ssm layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.module import ParamDef, stack_layer_defs
+
+BIG_WINDOW = 1 << 30  # "global" == window larger than any sequence
+
+
+# ----------------------------------------------------------------------------
+# Parameter definitions
+# ----------------------------------------------------------------------------
+
+def _layer_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"ln1": ParamDef((d,), ("embed",), init="zeros")}
+    if cfg.family == "ssm":
+        defs["ssm"] = SSM.ssm_defs(cfg)
+        return defs
+    if cfg.family == "hybrid":
+        defs["attn"] = L.attention_defs(cfg)
+        defs["ssm"] = SSM.ssm_defs(cfg)
+        defs["attn_out_norm"] = ParamDef((d,), ("embed",), init="zeros")
+        defs["ssm_out_norm"] = ParamDef((d,), ("embed",), init="zeros")
+    else:
+        defs["attn"] = L.attention_defs(cfg)
+    defs["ln2"] = ParamDef((d,), ("embed",), init="zeros")
+    if cfg.n_experts:
+        defs["moe"] = MOE.moe_defs(cfg)
+    elif cfg.d_ff:
+        defs["mlp"] = L.mlp_defs(cfg)
+    return defs
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 256 so it shards over any model axis."""
+    return -(-cfg.vocab // 256) * 256
+
+
+def layer_windows(cfg: ModelConfig):
+    """Static per-layer attention window (None = global)."""
+    wins = []
+    for k in cfg.layer_kinds():
+        if k in ("global", "hybrid_global"):
+            wins.append(None)
+        else:
+            wins.append(cfg.window)
+    return wins
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    v = padded_vocab(cfg)
+    defs = {
+        "embed": ParamDef((v, cfg.d_model), ("vocab", "embed"),
+                          init="embed", scale=0.02),
+        "layers": stack_layer_defs(_layer_defs(cfg), cfg.n_layers),
+        "ln_f": ParamDef((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, v), ("embed", "vocab"))
+    return defs
+
+
+# ----------------------------------------------------------------------------
+# Layer application
+# ----------------------------------------------------------------------------
+
+def _attn_or_hybrid(
+    lp, x, cfg: ModelConfig, kind: str, positions, unroll, mesh, data_axes,
+    window_override=None,
+):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        y, _ = SSM.ssm_block(lp["ssm"], h, cfg)
+        return x + y
+    window = window_override
+    if window is None:
+        window = cfg.window if kind.endswith("local") or kind == "hybrid" else None
+    if cfg.family == "hybrid":
+        attn = _windowed_attn(lp["attn"], h, cfg, window, positions, unroll)
+        ssm_y, _ = SSM.ssm_block(lp["ssm"], h, cfg)
+        fused = 0.5 * (
+            L.rms_norm(attn, lp["attn_out_norm"], cfg.norm_eps)
+            + L.rms_norm(ssm_y, lp["ssm_out_norm"], cfg.norm_eps)
+        )
+        x = x + fused
+    else:
+        x = x + _windowed_attn(lp["attn"], h, cfg, window, positions, unroll)
+    return x
+
+
+def _windowed_attn(ap, h, cfg, window, positions, unroll):
+    q, k, v = L.attention_qkv(ap, h, cfg, positions)
+    out = L.blockwise_attention(
+        q, k, v, causal=True, window=window,
+        softcap=cfg.attn_logit_softcap, unroll=unroll,
+    )
+    return jnp.einsum("bshe,hed->bsd", out, ap["wo"].astype(h.dtype))
+
+
+def _ffn(lp, x, cfg: ModelConfig, mesh, data_axes, aux_sink: Optional[list]):
+    if cfg.family == "ssm":
+        return x
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        if mesh is not None:
+            y, aux = MOE.moe_sharded(
+                lp["moe"], h, cfg, mesh, data_axes=data_axes,
+                fsdp_axis=data_axes if cfg.fsdp else None,
+            )
+        else:
+            y, aux = MOE.moe_dense(lp["moe"], h, cfg)
+        if aux_sink is not None:
+            aux_sink.append(aux)
+    else:
+        y = L.mlp_block(lp["mlp"], h)
+    return x + y
+
+
+def apply_layer(lp, x, cfg, kind, positions, unroll, mesh, data_axes,
+                aux_sink=None, window_override=None):
+    x = _attn_or_hybrid(lp, x, cfg, kind, positions, unroll, mesh, data_axes,
+                        window_override)
+    return _ffn(lp, x, cfg, mesh, data_axes, aux_sink)
+
+
+# ----------------------------------------------------------------------------
+# Forward (train / prefill logits)
+# ----------------------------------------------------------------------------
+
+def constrain_act(x, mesh, data_axes):
+    """Pin activations to (batch over data axes, replicated elsewhere).
+
+    Without this, FSDP param shardings win GSPMD's propagation fight and
+    activations end up batch-replicated / d-sharded (measured +16 GiB on
+    qwen3-8b train_4k).
+    """
+    if mesh is None or not data_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(data_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, embeds=None,
+                 mesh=None, data_axes=()):
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    if cfg.frontend != "none" and embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return constrain_act(x, mesh, data_axes)
+
+
+def forward(
+    params,
+    tokens: jax.Array,                 # (B, S_tok) int32
+    cfg: ModelConfig,
+    embeds: Optional[jax.Array] = None,  # (B, F, D) frontend stub output
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits (B, S_tok, V), aux losses dict)."""
+    x = embed_tokens(params, tokens, cfg, embeds, mesh, data_axes)
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total)
+    kinds = cfg.layer_kinds()
+    wins = layer_windows(cfg)
+    zero_aux = {"lb_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+
+    if unroll:
+        aux_sink: List[dict] = []
+        for i, kind in enumerate(kinds):
+            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            fn = functools.partial(
+                apply_layer, cfg=cfg, kind=kind, positions=positions,
+                unroll=True, mesh=mesh, data_axes=data_axes,
+                aux_sink=aux_sink, window_override=wins[i],
+            )
+            if cfg.remat:  # match the scanned program's recompute FLOPs
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            x = fn(lp, x)
+            x = constrain_act(x, mesh, data_axes)
+        aux = _merge_aux(aux_sink) if aux_sink else zero_aux
+    else:
+        uniform = len(set(wins)) == 1
+        win_arr = jnp.array(
+            [BIG_WINDOW if w is None else w for w in wins], jnp.int32
+        )
+
+        def body(carry, xs):
+            lp, win = xs
+            sink: List[dict] = []
+            # uniform patterns keep the static window (cleaner HLO); mixed
+            # local/global patterns (gemma2/3, hymba) get the traced window
+            wov = wins[0] if uniform else win
+            y = apply_layer(lp, carry, cfg, kinds[0], positions, False, mesh,
+                            data_axes, sink, window_override=wov)
+            y = constrain_act(y, mesh, data_axes)
+            return y, (_merge_aux(sink) if sink else zero_aux)
+
+        body = _maybe_remat(body, cfg)
+        x, aux_l = jax.lax.scan(body, x, (params["layers"], win_arr))
+        aux = jax.tree_util.tree_map(jnp.mean, aux_l)
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, aux
+
+
+def unembed(params, x, cfg: ModelConfig):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _maybe_remat(body, cfg: ModelConfig):
+    if cfg.remat:
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    return body
+
+
+def _merge_aux(aux_sink: List[dict]) -> Dict[str, jax.Array]:
+    if not aux_sink:
+        return {"lb_loss": jnp.float32(0.0), "z_loss": jnp.float32(0.0)}
+    out = {}
+    for k in aux_sink[0]:
+        out[k] = jnp.mean(jnp.stack([a[k] for a in aux_sink]))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Serving: prefill + decode with per-layer caches
+# ----------------------------------------------------------------------------
+
+def kv_quantize(x: jax.Array):
+    """Per-(token, head) symmetric int8 quantization of K/V: (q8, scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind.endswith("local") or kind == "hybrid":
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_decode_caches(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=None
+) -> List[dict]:
+    """Per-layer cache pytrees (ring buffers for local layers)."""
+    dtype = dtype or cfg.activation_dtype
+    caches = []
+    for kind in cfg.layer_kinds():
+        c: Dict[str, Any] = {}
+        if cfg.family != "ssm":
+            s = _cache_len(cfg, kind, max_len)
+            kh, hd = cfg.n_kv_heads, cfg.head_dim
+            if cfg.kv_cache_dtype == "int8":
+                c["k"] = jnp.zeros((batch, s, kh, hd), jnp.int8)
+                c["v"] = jnp.zeros((batch, s, kh, hd), jnp.int8)
+                c["k_scale"] = jnp.zeros((batch, s, kh, 1), jnp.bfloat16)
+                c["v_scale"] = jnp.zeros((batch, s, kh, 1), jnp.bfloat16)
+            else:
+                c["k"] = jnp.zeros((batch, s, kh, hd), dtype)
+                c["v"] = jnp.zeros((batch, s, kh, hd), dtype)
+            c["pos"] = jnp.full((batch, s), -1, jnp.int32)
+        if cfg.family in ("ssm", "hybrid"):
+            c["ssm"] = SSM.init_ssm_cache(cfg, batch, dtype)
+        caches.append(c)
+    return caches
+
+
+def abstract_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct caches for the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_decode_caches(cfg, batch, max_len)
+    )
+
+
+def decode_step(
+    params,
+    tokens: jax.Array,        # (B, 1) int32
+    caches: List[dict],
+    position: jax.Array,      # scalar int32 — absolute position of this token
+    cfg: ModelConfig,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+):
+    """One token for the whole batch.  Returns (logits (B,1,V), caches)."""
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    kinds = cfg.layer_kinds()
+    new_caches = []
+    pos_arr = jnp.asarray(position)[None]
+    for i, kind in enumerate(kinds):
+        lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+        c = dict(caches[i])
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        branches = []
+        if cfg.family != "ssm":
+            ap = lp["attn"]
+            q, k, v = L.attention_qkv(ap, h, cfg, pos_arr)
+            s_cache = c["k"].shape[1]
+            slot = position % s_cache
+            if cfg.kv_cache_dtype == "int8":
+                kq, ks = kv_quantize(k)
+                vq, vs = kv_quantize(v)
+                for name, val in (("k", kq), ("v", vq), ("k_scale", ks),
+                                  ("v_scale", vs)):
+                    c[name] = jax.lax.dynamic_update_slice_in_dim(
+                        c[name], val, slot, axis=1)
+                k_full = kv_dequantize(c["k"], c["k_scale"], x.dtype)
+                v_full = kv_dequantize(c["v"], c["v_scale"], x.dtype)
+            else:
+                c["k"] = jax.lax.dynamic_update_slice_in_dim(c["k"], k, slot, axis=1)
+                c["v"] = jax.lax.dynamic_update_slice_in_dim(c["v"], v, slot, axis=1)
+                k_full, v_full = c["k"], c["v"]
+            c["pos"] = jax.lax.dynamic_update_slice_in_dim(
+                c["pos"], jnp.broadcast_to(position, (c["pos"].shape[0], 1)).astype(jnp.int32),
+                slot, axis=1,
+            )
+            window = cfg.window if (kind.endswith("local") or kind == "hybrid") else None
+            attn = L.decode_attention(
+                q, k_full, v_full, c["pos"], position, window=window,
+                softcap=cfg.attn_logit_softcap,
+            )
+            attn = jnp.einsum("bshe,hed->bsd", attn, ap["wo"].astype(x.dtype))
+            branches.append((attn, "attn"))
+        if cfg.family in ("ssm", "hybrid"):
+            y, (conv, state) = SSM.ssm_decode_step(
+                lp["ssm"], h, cfg, c["ssm"]["conv"], c["ssm"]["state"]
+            )
+            c["ssm"] = {"conv": conv, "state": state}
+            branches.append((y, "ssm"))
+        if cfg.family == "hybrid":
+            fused = 0.5 * (
+                L.rms_norm(branches[0][0], lp["attn_out_norm"], cfg.norm_eps)
+                + L.rms_norm(branches[1][0], lp["ssm_out_norm"], cfg.norm_eps)
+            )
+            x = x + fused
+        else:
+            x = x + branches[0][0]
+        x = _ffn(lp, x, cfg, mesh, data_axes, None)
+        new_caches.append(c)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, new_caches
+
+
+def prefill(
+    params,
+    tokens: jax.Array,               # (B, S) int32
+    cfg: ModelConfig,
+    max_len: int,
+    embeds: Optional[jax.Array] = None,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    unroll: bool = False,
+    last_logits_only: bool = False,
+):
+    """Forward pass that also builds decode caches.
+
+    Runs the layer stack unrolled (matching decode's heterogeneous cache
+    layout); local layers keep only the trailing ``window`` positions.
+    ``last_logits_only`` unembeds just the final position (serving never
+    needs the (B, S, V) logits tensor — at 32k x 256k vocab it would be
+    hundreds of GB).  Returns (logits, caches, next_position).
+    """
+    x = embed_tokens(params, tokens, cfg, embeds, mesh, data_axes)
+    b, s_total = x.shape[:2]
+    positions = jnp.arange(s_total)
+    kinds = cfg.layer_kinds()
+    caches: List[dict] = []
+    for i, kind in enumerate(kinds):
+        lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+        c: Dict[str, Any] = {}
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        window = cfg.window if (kind.endswith("local") or kind == "hybrid") else None
+        if cfg.family != "ssm":
+            ap = lp["attn"]
+            q, k, v = L.attention_qkv(ap, h, cfg, positions)
+            attn = L.blockwise_attention(
+                q, k, v, causal=True,
+                window=None if kind in ("global", "hybrid_global") else window,
+                softcap=cfg.attn_logit_softcap, unroll=unroll,
+            )
+            attn = jnp.einsum("bshe,hed->bsd", attn, ap["wo"].astype(x.dtype))
+            # cache layout: ring of size _cache_len, filled with the tail
+            s_cache = _cache_len(cfg, kind, max_len)
+            c.update(_fill_ring(k, v, s_total, s_cache))
+            branches = [(attn, "attn")]
+        else:
+            branches = []
+        if cfg.family in ("ssm", "hybrid"):
+            y, (conv, state) = SSM.ssm_block(lp["ssm"], h, cfg)
+            c["ssm"] = {"conv": conv, "state": state}
+            branches.append((y, "ssm"))
+        if cfg.family == "hybrid":
+            fused = 0.5 * (
+                L.rms_norm(branches[0][0], lp["attn_out_norm"], cfg.norm_eps)
+                + L.rms_norm(branches[1][0], lp["ssm_out_norm"], cfg.norm_eps)
+            )
+            x = x + fused
+        else:
+            x = x + branches[0][0]
+        x = _ffn(lp, x, cfg, mesh, data_axes, None)
+        x = constrain_act(x, mesh, data_axes)
+        caches.append(c)
+    if last_logits_only:
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, caches, s_total
+
+
+def uniform_layers(cfg: ModelConfig) -> bool:
+    """True when every layer has the same kind (=> same cache shape)."""
+    return len(set(cfg.layer_kinds())) == 1
+
+
+def decode_step_scan(
+    params,
+    tokens: jax.Array,        # (B, 1)
+    caches: Dict[str, Any],   # STACKED: k/v (L,B,S,K,D), pos (L,B,S), ssm {...}
+    position: jax.Array,
+    cfg: ModelConfig,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+):
+    """Scan-over-layers decode for uniform-cache archs.
+
+    The python-loop ``decode_step`` is kept for mixed local/global stacks
+    (heterogeneous ring sizes); for uniform stacks the scan form stops the
+    scheduler from hoisting every layer's FSDP weight gathers to the front
+    (measured 300 GiB -> ~10 GiB on kimi-k2 decode_32k).
+    """
+    assert uniform_layers(cfg)
+    kind = cfg.layer_kinds()[0]
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    pos_arr = jnp.asarray(position)[None]
+    window = cfg.window if (kind.endswith("local") or kind == "hybrid") else None
+
+    def body(carry, xs):
+        lp, c = xs
+        # barrier: stops XLA:CPU from hoisting the per-layer bf16->f32
+        # weight converts out of the loop as full-stack f32 copies (a CPU
+        # lowering artifact; TPU consumes bf16 natively) — measured
+        # 29 GiB -> in-loop transients on kimi decode_32k.
+        lp, c = jax.lax.optimization_barrier((lp, c))
+        c = dict(c)
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        branches = []
+        if cfg.family != "ssm":
+            ap = lp["attn"]
+            q, k, v = L.attention_qkv(ap, h, cfg, pos_arr)
+            s_cache = c["k"].shape[1]
+            slot = position % s_cache
+            if cfg.kv_cache_dtype == "int8":
+                kq, ks = kv_quantize(k)
+                vq, vs = kv_quantize(v)
+                for name, val in (("k", kq), ("v", vq), ("k_scale", ks),
+                                  ("v_scale", vs)):
+                    c[name] = jax.lax.dynamic_update_slice_in_dim(
+                        c[name], val, slot, axis=1)
+                k_full = kv_dequantize(c["k"], c["k_scale"], carry.dtype)
+                v_full = kv_dequantize(c["v"], c["v_scale"], carry.dtype)
+            else:
+                c["k"] = jax.lax.dynamic_update_slice_in_dim(c["k"], k, slot, axis=1)
+                c["v"] = jax.lax.dynamic_update_slice_in_dim(c["v"], v, slot, axis=1)
+                k_full, v_full = c["k"], c["v"]
+            c["pos"] = jax.lax.dynamic_update_slice_in_dim(
+                c["pos"],
+                jnp.broadcast_to(position, (c["pos"].shape[0], 1)).astype(jnp.int32),
+                slot, axis=1,
+            )
+            attn = L.decode_attention(
+                q, k_full, v_full, c["pos"], position, window=window,
+                softcap=cfg.attn_logit_softcap,
+            )
+            branches.append(jnp.einsum("bshe,hed->bsd", attn,
+                                       ap["wo"].astype(carry.dtype)))
+        if cfg.family in ("ssm", "hybrid"):
+            y, (conv, state) = SSM.ssm_decode_step(
+                lp["ssm"], h, cfg, c["ssm"]["conv"], c["ssm"]["state"]
+            )
+            c["ssm"] = {"conv": conv, "state": state}
+            branches.append(y)
+        if cfg.family == "hybrid":
+            y = carry + 0.5 * (
+                L.rms_norm(branches[0], lp["attn_out_norm"], cfg.norm_eps)
+                + L.rms_norm(branches[1], lp["ssm_out_norm"], cfg.norm_eps)
+            )
+        else:
+            y = carry + branches[0]
+        y = _ffn(lp, y, cfg, mesh, data_axes, None)
+        return y, c
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, new_caches
+
+
+def stack_caches(caches: List[dict]):
+    """Per-layer cache list -> stacked pytree (uniform archs only)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def prefill_scan(
+    params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    embeds: Optional[jax.Array] = None,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    kv_constraint=None,   # fn(array) -> array with cache sharding pinned
+):
+    """Scan-over-layers prefill for the dry-run: last-position logits +
+    stacked full-length caches (L, B, S, K, D).
+
+    The python-loop ``prefill`` is the serving path (heterogeneous ring
+    caches); this scan form bounds compile memory scheduling at 32k/500k
+    and lets the cache ys carry an explicit sequence sharding.
+    """
+    x = embed_tokens(params, tokens, cfg, embeds, mesh, data_axes)
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total)
+    kinds = cfg.layer_kinds()
+    wins = layer_windows(cfg)
+    uniform = len(set(wins)) == 1
+    win_arr = jnp.array([BIG_WINDOW if w is None else w for w in wins],
+                        jnp.int32)
+    ident = (lambda a: a) if kv_constraint is None else kv_constraint
+
+    def body(carry, xs):
+        lp, win = xs
+        wov = wins[0] if uniform else win
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        outs: Dict[str, Any] = {}
+        branches = []
+        if cfg.family != "ssm":
+            q, k, v = L.attention_qkv(lp["attn"], h, cfg, positions)
+            k, v = ident(k), ident(v)
+            attn = L.blockwise_attention(
+                q, k, v, causal=True, window=wov,
+                softcap=cfg.attn_logit_softcap,
+            )
+            attn = jnp.einsum("bshe,hed->bsd", attn,
+                              lp["attn"]["wo"].astype(carry.dtype))
+            outs["k"], outs["v"] = k, v
+            branches.append(attn)
+        if cfg.family in ("ssm", "hybrid"):
+            ssm_y, (conv, st) = SSM.ssm_block(lp["ssm"], h, cfg)
+            outs["ssm"] = {"conv": conv, "state": st}
+            branches.append(ssm_y)
+        if cfg.family == "hybrid":
+            y = carry + 0.5 * (
+                L.rms_norm(branches[0], lp["attn_out_norm"], cfg.norm_eps)
+                + L.rms_norm(branches[1], lp["ssm_out_norm"], cfg.norm_eps)
+            )
+        else:
+            y = carry + branches[0]
+        y = _ffn(lp, y, cfg, mesh, data_axes, None)
+        y = constrain_act(y, mesh, data_axes)
+        return y, outs
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], win_arr))
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)
+    return logits, caches
+
+
+def _fill_ring(k: jax.Array, v: jax.Array, s_total: int, s_cache: int) -> dict:
+    """Place the (tail of the) prefilled K/V into a ring-buffer cache whose
+    slot index is ``pos % s_cache`` — consistent with decode_step writes."""
+    b = k.shape[0]
+    pos = jnp.arange(s_total, dtype=jnp.int32)
+    if s_total <= s_cache:
+        pad = s_cache - s_total
+        kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pp = jnp.pad(pos, (0, pad), constant_values=-1)
+        # rotate so that entry at slot (p % s_cache) holds position p
+        return {"k": kk, "v": vv,
+                "pos": jnp.broadcast_to(pp[None], (b, s_cache))}
+    tail = s_total - s_cache
+    kk, vv = k[:, tail:], v[:, tail:]
+    pp = pos[tail:]
+    # slot of position p is p % s_cache: roll the tail accordingly
+    shift = tail % s_cache
+    kk = jnp.roll(kk, shift, axis=1)
+    vv = jnp.roll(vv, shift, axis=1)
+    pp = jnp.roll(pp, shift)
+    return {"k": kk, "v": vv, "pos": jnp.broadcast_to(pp[None], (b, s_cache))}
+
+
+def loss_fn(
+    params, tokens, labels, cfg: ModelConfig,
+    embeds=None, mesh=None, data_axes=("data",), unroll=False,
+    lb_coef: float = 0.01, z_coef: float = 1e-3,
+):
+    logits, aux = forward(params, tokens, cfg, embeds=embeds, mesh=mesh,
+                          data_axes=data_axes, unroll=unroll)
+    # frontends prepend embeddings: only the token tail predicts labels
+    tok_logits = logits[:, -tokens.shape[1]:, :]
+    lp = jax.nn.log_softmax(tok_logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    total = loss + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+    metrics = {"loss": loss, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"]}
+    return total, metrics

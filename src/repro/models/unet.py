@@ -1,0 +1,84 @@
+"""Small UNet for event-to-intensity reconstruction (paper Sec. IV-E).
+
+TS frames in, grayscale intensity out, trained with an L1+SSIM-friendly
+objective against the paired synthetic APS frames; SSIM is evaluated in
+benchmarks/bench_recon.py (paper Table III protocol).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import _conv, _conv_defs
+from repro.models.module import ParamDef
+
+
+def _block_defs(cin: int, cout: int) -> dict:
+    return {"c1": _conv_defs(cin, cout, 3), "c2": _conv_defs(cout, cout, 3)}
+
+
+def _block(p, x):
+    return _conv(p["c2"], _conv(p["c1"], x))
+
+
+def unet_defs(in_channels: int, width: int = 16) -> dict:
+    w = width
+    return {
+        "enc1": _block_defs(in_channels, w),
+        "enc2": _block_defs(w, 2 * w),
+        "enc3": _block_defs(2 * w, 4 * w),
+        "dec2": _block_defs(4 * w + 2 * w, 2 * w),
+        "dec1": _block_defs(2 * w + w, w),
+        "out": _conv_defs(w, 1, 1),
+    }
+
+
+def _down(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME"
+    )
+
+
+def _up(x, target_hw: Tuple[int, int]):
+    return jax.image.resize(
+        x, (x.shape[0], *target_hw, x.shape[-1]), method="bilinear"
+    )
+
+
+def unet_apply(params, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C) -> intensity (B, H, W) in [0, 1]."""
+    e1 = _block(params["enc1"], x)
+    e2 = _block(params["enc2"], _down(e1))
+    e3 = _block(params["enc3"], _down(e2))
+    d2 = _block(params["dec2"],
+                jnp.concatenate([_up(e3, e2.shape[1:3]), e2], axis=-1))
+    d1 = _block(params["dec1"],
+                jnp.concatenate([_up(d2, e1.shape[1:3]), e1], axis=-1))
+    y = jax.lax.conv_general_dilated(
+        d1, params["out"]["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + params["out"]["b"]
+    return jax.nn.sigmoid(y[..., 0])
+
+
+def ssim(a: jax.Array, b: jax.Array, window: int = 7, c1=0.01**2, c2=0.03**2):
+    """Mean local SSIM between (..., H, W) images in [0, 1]."""
+    def local_mean(x):
+        k = jnp.ones((window, window), x.dtype) / window**2
+        return jax.lax.conv_general_dilated(
+            x[..., None], k[..., None, None], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )[..., 0]
+
+    flat_a = a.reshape((-1,) + a.shape[-2:])
+    flat_b = b.reshape((-1,) + b.shape[-2:])
+    mu_a, mu_b = local_mean(flat_a), local_mean(flat_b)
+    var_a = local_mean(flat_a * flat_a) - mu_a**2
+    var_b = local_mean(flat_b * flat_b) - mu_b**2
+    cov = local_mean(flat_a * flat_b) - mu_a * mu_b
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2)) / (
+        (mu_a**2 + mu_b**2 + c1) * (var_a + var_b + c2)
+    )
+    return s.mean()

@@ -1,0 +1,1 @@
+from repro.serve.engine import Request, Result, ServeEngine  # noqa: F401

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + lockstep decode with slot management.
+
+A fixed pool of batch slots; each request prefs into its slot's cache and
+decodes greedily until EOS/max-tokens.  Finished slots are masked (their
+tokens keep decoding but are discarded) — the static-shape analogue of
+continuous batching; slot re-use happens between ``serve`` calls.
+
+jit boundary: one compiled ``decode_step`` regardless of which slots are
+live.  The production mesh version shards the batch over data axes and
+the KV-cache sequence over "model" (see launch/dryrun.py's serve cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1            # -1: never stops early
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: np.ndarray
+    n_prefill: int
+    n_decoded: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 mesh=None):
+        self.cfg, self.params, self.max_len, self.mesh = cfg, params, max_len, mesh
+        self._decode = jax.jit(
+            lambda p, t, c, pos: T.decode_step(p, t, c, pos, cfg, mesh=mesh)
+        )
+        self._prefill = jax.jit(
+            lambda p, t: T.prefill(p, t, cfg, max_len=max_len, mesh=mesh)
+        )
+
+    def serve(self, requests: Sequence[Request]) -> List[Result]:
+        cfg = self.cfg
+        b = len(requests)
+        s0 = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((b, s0), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, s0 - len(r.prompt):] = r.prompt  # left-pad
+        logits, caches, pos = self._prefill(self.params, jnp.asarray(prompts))
+        max_new = max(r.max_new_tokens for r in requests)
+        # sample within the true vocab (vocab is padded for sharding)
+        cur = jnp.argmax(logits[:, -1:, : cfg.vocab], axis=-1).astype(jnp.int32)
+        outs = [cur]
+        live = np.ones(b, bool)
+        decoded = np.zeros(b, np.int32)
+        for t in range(max_new - 1):
+            for i, r in enumerate(requests):
+                if live[i] and (int(outs[-1][i, 0]) == r.eos_id
+                                or decoded[i] + 1 >= r.max_new_tokens):
+                    live[i] = False
+            decoded += live.astype(np.int32)
+            if not live.any():
+                break
+            logits, caches = self._decode(self.params, cur, caches,
+                                          jnp.int32(s0 + t))
+            cur = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+            outs.append(cur)
+        gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
+        return [
+            Result(tokens=gen[i, : requests[i].max_new_tokens],
+                   n_prefill=len(requests[i].prompt),
+                   n_decoded=int(min(gen.shape[1], requests[i].max_new_tokens)))
+            for i in range(b)
+        ]

@@ -1,0 +1,1 @@
+from repro.train import compression, loop, optimizer  # noqa: F401

@@ -1,0 +1,95 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+At 1000+ nodes the cross-pod (DCI) gradient all-reduce is the scaling
+bottleneck; compressing gradients before the reduction trades a little
+optimizer fidelity for 4-32x less DCI traffic.  Both compressors carry an
+error-feedback residual so the bias vanishes over steps (Karimireddy et
+al. 2019):
+
+  * ``int8``  — per-tensor scale, symmetric int8 quantization (4x)
+  * ``topk``  — keep the largest k-fraction entries (sparsity, ~1/k x)
+
+The compressors wrap any ``Optimizer``; the residual lives in optimizer
+state and shards like the gradients.  On the wire the compressed payload
+is what a production deployment would all-reduce across pods; in-graph we
+compress -> decompress around the update, which preserves the *numerics*
+(what tests validate) while XLA still sees the dense collective (the
+dry-run measures the uncompressed upper bound; EXPERIMENTS.md §Perf
+quotes the DCI-byte savings analytically).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer
+
+
+def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g: jax.Array, frac: float) -> jax.Array:
+    if g.size <= 16:
+        return jnp.ones_like(g, dtype=bool)
+    k = max(1, int(g.size * frac))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh)
+
+
+def compressed(
+    opt: Optimizer, kind: str = "int8", topk_frac: float = 0.05
+) -> Optimizer:
+    """Wrap an optimizer with error-feedback gradient compression."""
+
+    def init(params):
+        return {
+            "inner": opt.init(params),
+            "residual": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+        }
+
+    def update(grads, state, params, step):
+        def comp(g, r):
+            g = g.astype(jnp.float32) + r
+            if kind == "int8":
+                q, s = int8_compress(g)
+                gc = int8_decompress(q, s)
+            elif kind == "topk":
+                m = topk_mask(g, topk_frac)
+                gc = jnp.where(m, g, 0.0)
+            else:
+                raise ValueError(kind)
+            return gc, g - gc
+
+        out = jax.tree_util.tree_map(comp, grads, state["residual"])
+        is_pair = lambda x: isinstance(x, tuple)
+        gc = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
+        res = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
+        new_params, inner = opt.update(gc, state["inner"], params, step)
+        return new_params, {"inner": inner, "residual": res}
+
+    return Optimizer(init, update)
+
+
+def wire_bytes(params, kind: str = "int8", topk_frac: float = 0.05) -> dict:
+    """Analytic DCI traffic per step: dense fp32 vs compressed."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    dense = 4 * n
+    if kind == "int8":
+        comp = n + 4 * len(jax.tree_util.tree_leaves(params))
+    else:
+        comp = int(n * topk_frac) * 8  # value+index
+    return {"dense_bytes": dense, "compressed_bytes": comp,
+            "ratio": dense / max(comp, 1)}

@@ -1,0 +1,169 @@
+"""Optimizers built from scratch (no optax here): AdamW and Adafactor.
+
+Adafactor (factored second moment, bf16 first moment) is the memory story
+that makes trillion-parameter training fit the pod (DESIGN.md capacity
+analysis): ~4.1 bytes/param of optimizer state vs AdamW's 8.
+
+Both are expressed as (init, update) pairs over arbitrary pytrees and are
+wrapped by the gradient-compression decorators in train/compression.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Schedule(NamedTuple):
+    base_lr: float
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_ratio: float = 0.1
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(self.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - self.warmup_steps)
+            / jnp.maximum(self.decay_steps - self.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.base_lr * warm * (self.min_ratio + (1 - self.min_ratio) * cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw(
+    schedule: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    max_grad_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1 - b1**t
+        c2 = 1 - b2**t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            step_ = mh / (jnp.sqrt(vh) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    schedule: Schedule,
+    b1: float = 0.9,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    max_grad_norm: float = 1.0,
+) -> Optimizer:
+    """Factored second moment over the two largest dims; bf16 momentum."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    "m": jnp.zeros(p.shape, jnp.bfloat16),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32),
+                    "m": jnp.zeros(p.shape, jnp.bfloat16)}
+
+        return jax.tree_util.tree_map(one, params)
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(step)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = decay * s["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., :, None]
+                    * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps)
+                )
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            m = b1 * s["m"].astype(jnp.float32) + (1 - b1) * u
+            new_s["m"] = m.astype(jnp.bfloat16)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), new_s
+
+        out = jax.tree_util.tree_map(
+            one, grads, state, params,
+            is_leaf=lambda x: isinstance(x, dict) and ("m" in x),
+        )
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=is_pair)
+        new_s = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(kind: str, schedule: Schedule, **kw) -> Optimizer:
+    if kind == "adamw":
+        return adamw(schedule, **kw)
+    if kind == "adafactor":
+        return adafactor(schedule, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,77 @@
+"""Dry-run machinery regression test on an 8-device CPU mesh (subprocess;
+the full 512-device sweep is exercised by launch/dryrun.py itself)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, n_devices: int = 8) -> str:
+    script = "import os\n" \
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={n_devices}'\n" \
+        + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_lower_compile_all_kinds_small_mesh():
+    """lower+compile train/prefill/decode for reduced archs of every family
+    on a (2,4) mesh, with memory/cost/collective extraction."""
+    _run("""
+    import dataclasses, jax
+    from repro.configs import get_config
+    from repro.configs.base import ShapeSpec
+    from repro.launch import dryrun as D
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    shapes = [ShapeSpec("t", 64, 8, "train"), ShapeSpec("p", 64, 8, "prefill"),
+              ShapeSpec("d", 64, 8, "decode")]
+    for arch in ("qwen3-8b", "kimi-k2-1t-a32b", "mamba2-2.7b", "hymba-1.5b",
+                 "gemma2-27b"):
+        cfg = get_config(arch).reduced(
+            n_layers=2, n_microbatches=2, dtype="bfloat16",
+            n_experts=4 if get_config(arch).n_experts else 0,
+        )
+        for shape in shapes:
+            with mesh:
+                _, compiled, times = D.lower_cell(cfg, shape, mesh)
+                a = D.analyze(compiled, times["arg_tree"])
+                assert a["flops_per_device"] > 0, (arch, shape.kind)
+                assert a["memory"]["argument_bytes"] > 0
+        print(arch, "OK")
+    print("ALL-OK")
+    """)
+
+
+def test_mesh_shapes():
+    _run("""
+    from repro.launch.mesh import make_production_mesh
+    # device count is 512 in this subprocess
+    m1 = make_production_mesh()
+    assert dict(m1.shape) == {"data": 16, "model": 16}
+    m2 = make_production_mesh(multi_pod=True)
+    assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+    print("MESH-OK")
+    """, n_devices=512)
+
+
+def test_collective_parser():
+    from repro.launch import dryrun as D
+
+    txt = """
+  %ar = f32[256,8192]{1,0} all-reduce(%x), replica_groups=...
+  %ag.1 = bf16[64,1024]{1,0} all-gather(%y), dimensions={0}
+  %foo = f32[2,2]{1,0} add(%a, %b)
+"""
+    colls = D.parse_collectives(txt)
+    assert colls["all-reduce"]["bytes"] == 256 * 8192 * 4
+    assert colls["all-gather"]["bytes"] == 64 * 1024 * 2
+    assert "add" not in colls
+    wire = D.collective_wire_bytes(colls)
+    assert wire == 2 * 256 * 8192 * 4 + 64 * 1024 * 2  # AR counts 2x

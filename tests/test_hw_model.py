@@ -1,0 +1,63 @@
+"""Hardware analytic model tests: the paper's headline ratios must be
+*derived* by the models within tolerance bands (Fig. 7 / Fig. 8)."""
+import pytest
+
+from repro.hw import constants as C
+from repro.hw import energy_model as em
+
+
+def test_fig7_power_ratio():
+    r = em.compare_2d_3d()
+    assert 0.75 * C.PAPER_POWER_RATIO_2D_OVER_3D <= r["power_ratio"] \
+        <= 1.25 * C.PAPER_POWER_RATIO_2D_OVER_3D, r["power_ratio"]
+
+
+def test_fig7_area_ratio():
+    r = em.compare_2d_3d()
+    assert abs(r["area_ratio"] - C.PAPER_AREA_RATIO_2D_OVER_3D) < 0.2
+
+
+def test_fig7_delay_ratio():
+    r = em.compare_2d_3d()
+    assert abs(r["delay_ratio"] - C.PAPER_LATENCY_RATIO_2D_OVER_3D) < 0.15
+    # absolute latencies (Fig. 7 discussion): ~11 ns vs ~5 ns
+    assert 9e-9 < r["lat2d_s"] < 13e-9
+    assert 4.5e-9 < r["lat3d_s"] < 6e-9
+
+
+def test_fig7_power_breakdown_fractions():
+    d2 = em.arch_2d()
+    tot = d2.total_power
+    assert abs(d2.power_w["encdec"] / tot - C.P2D_FRAC_ENCDEC) < 0.05
+    assert abs(d2.power_w["buffers"] / tot - C.P2D_FRAC_BUFFER) < 0.05
+
+
+def test_fig8_sram_power_ratios():
+    r = em.compare_isc_sram()
+    assert 0.5 * C.PAPER_SRAM53_POWER_RATIO < r["power_ratio_ref53"] \
+        < 2.0 * C.PAPER_SRAM53_POWER_RATIO
+    assert 0.5 * C.PAPER_SRAM26_POWER_RATIO < r["power_ratio_ref26"] \
+        < 2.0 * C.PAPER_SRAM26_POWER_RATIO
+    # "three orders of magnitude" headline
+    assert r["power_ratio_ref53"] > 1e3 and r["power_ratio_ref26"] > 1e3
+
+
+def test_fig8_sram_area_ratios():
+    r = em.compare_isc_sram()
+    assert abs(r["area_ratio_ref53"] - C.PAPER_SRAM53_AREA_RATIO) < 0.5
+    assert abs(r["area_ratio_ref26"] - C.PAPER_SRAM26_AREA_RATIO) < 0.5
+
+
+def test_cell_energy_scale():
+    """20 fF at 1.2 V: ~29 fJ/write — 3 orders below SRAM's 82 pJ/event."""
+    e_isc = em.cell_write_energy()
+    e_sram = C.SRAM_WRITE_ENERGY_PER_BIT_J * C.TIMESTAMP_BITS
+    assert e_isc < 50e-15
+    assert e_sram / e_isc > 1000
+
+
+def test_event_rate_scaling():
+    """Dynamic power scales linearly with event rate; static doesn't."""
+    lo = em.arch_3d(rate_eps=1e6).total_power
+    hi = em.arch_3d(rate_eps=100e6).total_power
+    assert 50 < hi / lo < 101

@@ -1,0 +1,129 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edram
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _sae(shape, key, frac_never=0.25, t_max=0.05):
+    k1, k2 = jax.random.split(key)
+    t = jax.random.uniform(k2, shape, minval=0.0, maxval=t_max)
+    return jnp.where(jax.random.uniform(k1, shape) < frac_never, -jnp.inf, t)
+
+
+@pytest.mark.parametrize("hw", [(8, 128), (1, 1), (240, 320), (37, 211), (65, 129)])
+@pytest.mark.parametrize("block", [(8, 128), (16, 256)])
+def test_ts_decay_shapes(hw, block):
+    sae = _sae(hw, jax.random.fold_in(KEY, hw[0] * 1000 + hw[1]))
+    params = edram.decay_params_for_cmem()
+    got = ops.ts_decay(sae, 0.06, params, block=block)
+    want = ref.ts_decay_ref(sae, 0.06, params)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("cmem", [10e-15, 20e-15, 40e-15])
+def test_ts_decay_cmem_sweep(cmem):
+    sae = _sae((64, 96), jax.random.fold_in(KEY, int(cmem * 1e16)))
+    params = edram.decay_params_for_cmem(cmem)
+    np.testing.assert_allclose(
+        ops.ts_decay(sae, 0.03, params),
+        ref.ts_decay_ref(sae, 0.03, params),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_ts_decay_varied_params():
+    shape = (50, 170)
+    sae = _sae(shape, KEY)
+    base = edram.decay_params_for_cmem()
+    pvar = edram.sample_variability(jax.random.fold_in(KEY, 7), shape, base)
+    np.testing.assert_allclose(
+        ops.ts_decay(sae, 0.05, pvar),
+        ref.ts_decay_ref(sae, 0.05, pvar),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_ts_decay_leading_dims():
+    sae = _sae((2, 3, 24, 40), KEY)
+    params = edram.decay_params_for_cmem()
+    np.testing.assert_allclose(
+        ops.ts_decay(sae, 0.05, params),
+        ref.ts_decay_ref(sae, 0.05, params),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_ts_decay_fused_mask():
+    sae = _sae((48, 130), KEY)
+    params = edram.decay_params_for_cmem()
+    v_tw = float(edram.v_tw_for_window(0.024, params))
+    v, m = ops.ts_decay_with_mask(sae, 0.05, params, v_tw)
+    vr, mr = ref.ts_decay_ref(sae, 0.05, params, v_tw=v_tw)
+    np.testing.assert_allclose(v, vr, rtol=1e-6, atol=1e-7)
+    assert bool((m == mr).all())
+
+
+@pytest.mark.parametrize("hw", [(8, 16), (240, 320), (31, 77)])
+@pytest.mark.parametrize("radius", [1, 2, 3])
+@pytest.mark.parametrize("include_self", [False, True])
+def test_stcf_support_sweep(hw, radius, include_self):
+    key = jax.random.fold_in(KEY, hw[0] * 31 + radius)
+    mask = jax.random.uniform(key, hw) < 0.3
+    got = ops.stcf_support(mask, radius=radius, include_self=include_self)
+    want = ref.stcf_support_ref(mask, radius, include_self)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_h", [8, 16])
+def test_stcf_fused(block_h):
+    sae = _sae((60, 100), KEY)
+    params = edram.decay_params_for_cmem()
+    v_tw = float(edram.v_tw_for_window(0.024, params))
+    got = ops.stcf_support_fused(sae, params, v_tw, 0.05, radius=3,
+                                 block_h=block_h)
+    want = ref.stcf_support_fused_ref(sae, 3, params, v_tw, 0.05)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("btc", [(1, 1, 1), (2, 200, 70), (3, 128, 128),
+                                 (1, 513, 5), (4, 64, 257)])
+@pytest.mark.parametrize("block", [(64, 64), (128, 128)])
+def test_decay_scan_shapes(btc, block):
+    b, t, c = btc
+    key = jax.random.fold_in(KEY, b * 100000 + t * 100 + c)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jnp.exp(-jax.random.uniform(k1, btc, minval=0.0, maxval=0.3))
+    x = jax.random.normal(k2, btc)
+    s0 = jax.random.normal(k3, (b, c))
+    st, fin = ops.decay_scan(a, x, s0, block=block)
+    st_r, fin_r = ref.decay_scan_ref(a, x, s0)
+    np.testing.assert_allclose(st, st_r, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(fin, fin_r, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decay_scan_dtypes(dtype):
+    b, t, c = 2, 96, 40
+    k1, k2 = jax.random.split(KEY)
+    a = jnp.exp(-jax.random.uniform(k1, (b, t, c), minval=0.0, maxval=0.2)).astype(dtype)
+    x = jax.random.normal(k2, (b, t, c)).astype(dtype)
+    st, fin = ops.decay_scan(a, x)
+    st_r, fin_r = ref.decay_scan_ref(a, x)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(st, st_r, rtol=tol, atol=tol)
+
+
+def test_decay_scan_no_initial_state():
+    a = jnp.full((1, 10, 3), 0.9)
+    x = jnp.ones((1, 10, 3))
+    st, fin = ops.decay_scan(a, x)
+    # closed form: s_t = sum_{k<=t} 0.9^(t-k)
+    want = jnp.cumsum(0.9 ** jnp.arange(10)[::-1]) / (0.9 ** jnp.arange(10)[::-1])
+    s = np.array([sum(0.9**j for j in range(i + 1)) for i in range(10)])
+    np.testing.assert_allclose(st[0, :, 0], s, rtol=1e-5)

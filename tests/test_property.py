@@ -1,0 +1,127 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis as hyp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edram, stcf
+from repro.core import time_surface as ts
+from repro.events import aer, synthetic as syn
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hyp.HealthCheck.too_slow])
+
+
+def _batch(xs, ys, tvals, h, w):
+    n = len(xs)
+    return ts.EventBatch(
+        x=jnp.array(xs, jnp.int32) % w,
+        y=jnp.array(ys, jnp.int32) % h,
+        t=jnp.sort(jnp.array(tvals, jnp.float32)),
+        p=jnp.zeros(n, jnp.int32),
+        valid=jnp.ones(n, bool),
+    )
+
+
+events_strategy = st.integers(1, 40).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(0, 1000), min_size=n, max_size=n),
+        st.lists(st.integers(0, 1000), min_size=n, max_size=n),
+        st.lists(st.floats(0.0, 0.1, allow_nan=False), min_size=n, max_size=n),
+    )
+)
+
+
+@hyp.given(events_strategy)
+@hyp.settings(**SETTINGS)
+def test_sae_permutation_invariant(evs):
+    """SAE is a max — event order within a batch must not matter."""
+    xs, ys, tv = evs
+    h, w = 16, 16
+    b1 = _batch(xs, ys, tv, h, w)
+    perm = np.random.RandomState(0).permutation(len(xs))
+    b2 = ts.EventBatch(b1.x[perm], b1.y[perm], b1.t[perm], b1.p[perm],
+                       b1.valid[perm])
+    s1 = ts.sae_update(ts.empty_sae(h, w), b1)
+    s2 = ts.sae_update(ts.empty_sae(h, w), b2)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+@hyp.given(events_strategy, st.floats(0.11, 0.5))
+@hyp.settings(**SETTINGS)
+def test_ts_bounded_and_decaying(evs, t_read):
+    xs, ys, tv = evs
+    b = _batch(xs, ys, tv, 16, 16)
+    sae = ts.sae_update(ts.empty_sae(16, 16), b)
+    f = ts.ts_ideal(sae, t_read, 0.024)
+    assert float(f.min()) >= 0.0 and float(f.max()) <= 1.0
+    f2 = ts.ts_ideal(sae, t_read + 0.01, 0.024)
+    assert bool((f2 <= f + 1e-7).all())
+
+
+@hyp.given(events_strategy, st.floats(0.11, 0.3))
+@hyp.settings(**SETTINGS)
+def test_edram_window_mask_equals_ideal_window(evs, t_read):
+    """Comparator semantics: V_mem > V_tw  <=>  age < tau_tw (monotone f)."""
+    xs, ys, tv = evs
+    b = _batch(xs, ys, tv, 16, 16)
+    sae = ts.sae_update(ts.empty_sae(16, 16), b)
+    params = edram.decay_params_for_cmem()
+    v_tw = edram.v_tw_for_window(0.024, params)
+    m_hw = ts.window_mask_edram(sae, t_read, params, v_tw)
+    m_ideal = ts.window_mask_ideal(sae, t_read, 0.024)
+    agree = float((m_hw == m_ideal).mean())
+    assert agree > 0.99, agree
+
+
+@hyp.given(st.integers(1, 200), st.integers(1, 50), st.integers(1, 6))
+@hyp.settings(**SETTINGS)
+def test_decay_scan_any_shape(t_len, c_len, b_len):
+    key = jax.random.PRNGKey(t_len * 1000 + c_len)
+    a = jnp.exp(-jax.random.uniform(key, (b_len, t_len, c_len), maxval=0.2))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b_len, t_len, c_len))
+    st_k, f_k = ops.decay_scan(a, x, block=(32, 32))
+    st_r, f_r = ref.decay_scan_ref(a, x)
+    np.testing.assert_allclose(st_k, st_r, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(f_k, f_r, rtol=3e-5, atol=3e-5)
+
+
+@hyp.given(st.integers(0, 2**31 - 1))
+@hyp.settings(max_examples=20, deadline=None)
+def test_aer_pack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 64))
+    s = syn.EventStream(
+        x=rng.integers(0, 640, n).astype(np.int32),
+        y=rng.integers(0, 480, n).astype(np.int32),
+        t=np.sort(rng.uniform(0, 100, n)).astype(np.float32),
+        p=rng.integers(0, 2, n).astype(np.int32),
+        is_signal=np.ones(n, bool), h=480, w=640,
+    )
+    back = aer.unpack(aer.pack(s), 480, 640)
+    np.testing.assert_array_equal(back.x, s.x)
+    np.testing.assert_array_equal(back.y, s.y)
+    np.testing.assert_array_equal(back.p, s.p)
+    assert np.abs(back.t - s.t).max() < 1e-5
+
+
+@hyp.given(st.integers(1, 8), st.integers(0, 3))
+@hyp.settings(max_examples=15, deadline=None)
+def test_stcf_threshold_monotone(th, radius):
+    """Raising the support threshold can only remove passed events."""
+    key = jax.random.PRNGKey(th * 10 + radius)
+    ks = jax.random.split(key, 3)
+    n, h, w = 96, 16, 16
+    b = ts.EventBatch(
+        x=jax.random.randint(ks[0], (n,), 0, w),
+        y=jax.random.randint(ks[1], (n,), 0, h),
+        t=jnp.sort(jax.random.uniform(ks[2], (n,), maxval=0.05)),
+        p=jnp.zeros(n, jnp.int32), valid=jnp.ones(n, bool),
+    )
+    cfg_lo = stcf.STCFConfig(radius=max(radius, 1), threshold=th)
+    cfg_hi = stcf.STCFConfig(radius=max(radius, 1), threshold=th + 1)
+    _, sig_lo = stcf.stcf_chunked(b, h, w, cfg_lo, chunk=32)
+    _, sig_hi = stcf.stcf_chunked(b, h, w, cfg_hi, chunk=32)
+    assert bool((~sig_hi | sig_lo).all())  # hi-pass set is a subset

@@ -1,0 +1,216 @@
+"""Training/serving substrate tests: optimizers, compression, checkpoint,
+fault tolerance, data pipeline, serving engine."""
+import os
+import signal
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.distributed import fault
+from repro.events.pipeline import TokenPipeline
+from repro.models import module as M
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+from repro.train import compression
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import Schedule, adafactor, adamw, make_optimizer
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=48, n_heads=4,
+    n_kv_heads=2, head_dim=12, d_ff=96, vocab=128, dtype="float32",
+    remat=False,
+)
+
+
+def _quad_problem():
+    key = jax.random.PRNGKey(1)
+    target = {"w": jax.random.normal(key, (8, 16)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (16,))}
+    params = jax.tree_util.tree_map(jnp.zeros_like, target)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree_util.tree_leaves(p),
+                                   jax.tree_util.tree_leaves(target)))
+
+    return params, target, loss
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_converges(kind):
+    params, target, loss = _quad_problem()
+    opt = make_optimizer(kind, Schedule(0.05, warmup_steps=0, decay_steps=500))
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for step in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, jnp.int32(step))
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((64, 128)), "small": jnp.zeros((4,))}
+    opt = adafactor(Schedule(1e-3))
+    st = opt.init(params)
+    assert st["big"]["vr"].shape == (64,)
+    assert st["big"]["vc"].shape == (128,)
+    assert st["big"]["m"].dtype == jnp.bfloat16
+    assert st["small"]["v"].shape == (4,)
+    # memory check: factored state is ~half of AdamW's
+    n_af = sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(st))
+    st_adam = adamw(Schedule(1e-3)).init(params)
+    n_ad = sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(st_adam))
+    assert n_af < 0.45 * n_ad
+
+
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_compressed_optimizer_converges(kind):
+    params, target, loss = _quad_problem()
+    opt = compression.compressed(
+        adamw(Schedule(0.05, warmup_steps=0, decay_steps=500)), kind
+    )
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for step in range(250):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params, jnp.int32(step))
+    assert float(loss(params)) < 0.1 * l0  # error feedback recovers the bias
+
+
+def test_int8_roundtrip_error_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = compression.int8_compress(g)
+    back = compression.int8_decompress(q, s)
+    assert float(jnp.abs(back - g).max()) <= float(s) * 0.51 + 1e-6
+
+
+def test_wire_bytes_ratio():
+    params = {"w": jnp.zeros((1024, 1024))}
+    r = compression.wire_bytes(params, "int8")
+    assert 3.5 < r["ratio"] <= 4.1
+
+
+# ----------------------------------------------------------------------------
+# Checkpointing
+# ----------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td, keep=2)
+        for s in (1, 2, 3):
+            ck.save(s, tree, {"step": s})
+        assert ck.all_steps() == [2, 3]  # GC kept last 2
+        got, extra = ck.restore(tree)
+        assert extra["step"] == 3
+        np.testing.assert_array_equal(got["a"], tree["a"])
+        assert got["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_atomic():
+    tree = {"w": jnp.ones((256, 256))}
+    with tempfile.TemporaryDirectory() as td:
+        ck = Checkpointer(td)
+        ck.save(7, tree, block=False)
+        ck.wait()
+        assert ck.latest_step() == 7
+        assert not any(d.endswith(".tmp") for d in os.listdir(td))
+
+
+def test_trainer_preemption_saves_and_stops():
+    with tempfile.TemporaryDirectory() as td:
+        tr = Trainer(TINY, TrainerConfig(ckpt_dir=td, ckpt_every=1000))
+        pipe = TokenPipeline(TINY.vocab, batch=4, seq=16, seed=0)
+        tr.preempt = fault.PreemptionHandler(signals=(signal.SIGUSR1,))
+        os.kill(os.getpid(), signal.SIGUSR1)
+        out = tr.train(pipe, 50, pipeline=pipe)
+        assert out["final_step"] == 1  # stopped after the first step
+        assert tr.ckpt.latest_step() == 1
+        tr.preempt.restore()
+
+
+def test_trainer_restart_supervision():
+    """run_with_restarts + checkpoint restore = crash recovery."""
+    with tempfile.TemporaryDirectory() as td:
+        crashes = {"n": 0}
+
+        def attempt(i):
+            tr = Trainer(TINY, TrainerConfig(ckpt_dir=td, ckpt_every=2,
+                                             async_ckpt=False))
+            pipe = TokenPipeline(TINY.vocab, batch=4, seq=16, seed=0)
+            tr.maybe_restore(pipe)
+            start = tr.step
+            tr.train(pipe, 4 - start if start < 4 else 0, pipeline=pipe)
+            if i == 0:
+                crashes["n"] += 1
+                raise RuntimeError("injected node failure")
+            return tr.step
+
+        final = fault.run_with_restarts(attempt, max_restarts=2)
+        assert crashes["n"] == 1 and final >= 4
+
+
+def test_heartbeat_monitor():
+    with tempfile.TemporaryDirectory() as td:
+        hb = fault.HeartbeatMonitor(td, "host0", timeout_s=10)
+        hb.beat(t=1000.0)
+        other = fault.HeartbeatMonitor(td, "host1", timeout_s=10)
+        other.beat(t=900.0)  # stale
+        assert hb.dead_hosts(now=1005.0) == ["host1"]
+
+
+def test_straggler_watchdog():
+    wd = fault.StragglerWatchdog(threshold=3.0, warmup=2)
+    flags = [wd.observe(i, dt) for i, dt in
+             enumerate([1.0, 1.0, 1.0, 1.1, 9.0, 1.0])]
+    assert flags == [False, False, False, False, True, False]
+    assert wd.flagged == [4]
+    assert wd.ema < 2.0  # straggler did not poison the EMA
+
+
+# ----------------------------------------------------------------------------
+# Pipeline / serving
+# ----------------------------------------------------------------------------
+
+def test_token_pipeline_deterministic_resume():
+    p1 = TokenPipeline(100, 2, 8, seed=5)
+    a = [next(p1)[0] for _ in range(3)]
+    st = p1.state_dict()
+    b = next(p1)[0]
+    p2 = TokenPipeline(100, 2, 8, seed=5)
+    p2.load_state_dict(st)
+    np.testing.assert_array_equal(next(p2)[0], b)
+
+
+def test_serve_engine_batched():
+    params = M.init_params(T.param_defs(TINY), jax.random.PRNGKey(0))
+    eng = ServeEngine(TINY, params, max_len=48)
+    res = eng.serve([
+        Request(np.array([1, 2, 3], np.int32), max_new_tokens=4),
+        Request(np.array([9, 8], np.int32), max_new_tokens=6),
+    ])
+    assert res[0].tokens.shape == (4,)
+    assert res[1].tokens.shape == (6,)
+    assert all((r.tokens < TINY.vocab).all() for r in res)
+
+
+def test_serve_matches_forward_greedy():
+    """Greedy generation must equal repeated full forward argmax."""
+    params = M.init_params(T.param_defs(TINY), jax.random.PRNGKey(3))
+    prompt = np.array([5, 17, 40], np.int32)
+    eng = ServeEngine(TINY, params, max_len=32)
+    got = eng.serve([Request(prompt, max_new_tokens=4)])[0].tokens
+    seq = list(prompt)
+    for _ in range(4):
+        logits, _ = T.forward(params, jnp.asarray([seq]), TINY)
+        seq.append(int(jnp.argmax(logits[0, -1, : TINY.vocab])))
+    np.testing.assert_array_equal(got, np.array(seq[len(prompt):]))
