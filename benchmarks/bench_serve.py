@@ -1,0 +1,87 @@
+"""Serving-engine throughput: ingest events/sec and batched readout
+latency vs the number of concurrent sensors (CPU wall-times; the batched
+readout is one kernel call whatever the sensor count).
+
+Also asserts the serving invariant: engine readout is bit-identical to the
+offline ``events/pipeline`` + ``core/time_surface`` path on each stream.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import time_surface as ts
+from repro.events import aer, datasets, pipeline
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 120, 160
+DURATION = 0.1
+
+
+def _offline_surface(cfg, stream, t_read):
+    """The offline path: window the stream (each event written once), fold
+    the chunks through the shared SurfaceState, read with the shared
+    kernel entry point."""
+    chunks = pipeline.window_chunks(stream, window_s=0.02,
+                                    capacity_per_window=1 << 15)
+    state = ts.surface_init(cfg.h, cfg.w)
+    for i in range(chunks.x.shape[0]):
+        chunk = jax.tree_util.tree_map(lambda f: f[i], chunks)
+        state = ts.surface_update(state, chunk)
+    return ts.surface_read_kernel(state, t_read, cfg.decay_params(),
+                                  backend=cfg.backend)
+
+
+def rows():
+    out = []
+    streams = [
+        datasets.dnd21_like("driving" if i % 2 else "hotel_bar",
+                            h=H, w=W, duration=DURATION, seed=i)
+        for i in range(8)
+    ]
+    words = [aer.unpack(aer.pack(s), H, W) for s in streams]
+
+    for n_sensors in (1, 2, 4, 8):
+        cfg = TSEngineConfig(h=H, w=W, n_slots=n_sensors,
+                             chunk_capacity=1 << 14, mode="edram")
+        eng = TimeSurfaceEngine(cfg)
+        slots = [eng.acquire() for _ in range(n_sensors)]
+        items = list(zip(slots, words[:n_sensors]))
+        n_events = sum(s.n for s in streams[:n_sensors])
+
+        # warm up ingest + readout jits, then wipe state back
+        eng.ingest(items)
+        jax.block_until_ready(eng.readout(DURATION))
+        for s in slots:
+            eng.release(s)
+        slots = [eng.acquire() for _ in range(n_sensors)]
+        items = list(zip(slots, words[:n_sensors]))
+
+        t0 = time.perf_counter()
+        eng.ingest(items)
+        jax.block_until_ready(eng.state.surfaces.sae)
+        dt_ingest = time.perf_counter() - t0
+
+        n_read = 5
+        t0 = time.perf_counter()
+        for _ in range(n_read):
+            surf = eng.readout(DURATION)
+        jax.block_until_ready(surf)
+        dt_read = (time.perf_counter() - t0) / n_read
+
+        # serving invariant: bit-identical to the offline pipeline per slot
+        for slot, stream in zip(slots, words[:n_sensors]):
+            want = _offline_surface(cfg, stream, DURATION)
+            got = surf[slot]
+            assert bool((np.asarray(got) == np.asarray(want)).all()), (
+                f"engine readout differs from offline pipeline (slot {slot})"
+            )
+
+        out.append((f"serve_ingest_{n_sensors}sensors_us",
+                    dt_ingest * 1e6, n_events / dt_ingest / 1e6))  # Meps
+        out.append((f"serve_readout_{n_sensors}sensors_us",
+                    dt_read * 1e6,
+                    n_sensors * H * W / dt_read / 1e6))  # Mpix/s
+    return out

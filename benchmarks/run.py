@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_denoise  — Fig. 10 ROC/AUC + Fig. 12 polarity ablation
   * bench_classify — Table II frame/video accuracy protocol
   * bench_recon    — Table III SSIM protocol
+  * bench_serve    — streaming engine: events/sec + readout latency vs
+                     concurrent sensor count
 
 Run everything:    PYTHONPATH=src python -m benchmarks.run
 Run a subset:      PYTHONPATH=src python -m benchmarks.run --only hw,edram
@@ -18,7 +20,7 @@ import sys
 import time
 import traceback
 
-MODULES = ["edram", "hw", "ts", "denoise", "classify", "recon"]
+MODULES = ["edram", "hw", "ts", "denoise", "classify", "recon", "serve"]
 
 
 def main() -> None:

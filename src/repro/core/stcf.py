@@ -98,6 +98,96 @@ def stcf_reference(
     return support, (support >= cfg.threshold) & ev.valid
 
 
+def resolve_edram(
+    cfg: STCFConfig,
+    mode: str,
+    params: edram.DecayParams | None = None,
+    v_tw: float | jax.Array | None = None,
+):
+    """Fill in (params, v_tw) defaults for the analog comparator path."""
+    if mode != "edram":
+        return None, None
+    params_ = params if params is not None else edram.decay_params_for_cmem()
+    v_tw_ = v_tw if v_tw is not None else edram.v_tw_for_window(cfg.tau_tw, params_)
+    return params_, v_tw_
+
+
+def stcf_chunk_support(
+    sae: jax.Array,          # (P, H, W) pre-chunk SAE state
+    ch: ts.EventBatch,       # one fixed-size event chunk
+    cfg: STCFConfig,
+    mode: str = "ideal",
+    params: edram.DecayParams | None = None,
+    v_tw: float | jax.Array | None = None,
+    intra_chunk: bool = True,
+) -> jax.Array:
+    """Support of one chunk's events against the pre-chunk SAE state.
+
+    Pure read — does not advance the SAE.  Vmapped over a slot axis this is
+    the serving engine's per-ingest denoise labeling; with the scatter added
+    (``stcf_chunk_step``) it is the scan body of ``stcf_chunked``.
+    ``params``/``v_tw`` must be pre-resolved (see ``resolve_edram``) when
+    ``mode == "edram"``.
+    """
+    pols = sae.shape[0]
+    r = cfg.radius
+
+    # support against the pre-chunk array state, read at each event's time
+    if mode == "ideal":
+        # mask depends on each event's own t -> evaluate per event.
+        # (t_i - sae_patch) < tau: gather patch timestamps then compare.
+        mask_fn = lambda t: (t - sae) < cfg.tau_tw
+    else:
+        mask_fn = lambda t: edram.v_mem(t - sae, params) > v_tw
+
+    # Gather per-event patch support (vmap over events in the chunk).
+    def one(x, y, t, p):
+        return _patch_support_at(mask_fn(t), x[None], y[None], p[None], cfg)[0]
+
+    sup = jax.vmap(one)(ch.x, ch.y, ch.t, ch.p)
+
+    if intra_chunk:
+        # pairwise: event j supports event i if j is earlier, valid,
+        # within the patch, and (for edram) still above threshold at t_i.
+        dy = ch.y[:, None] - ch.y[None, :]
+        dx = ch.x[:, None] - ch.x[None, :]
+        near = (jnp.abs(dy) <= r) & (jnp.abs(dx) <= r)
+        if not cfg.include_self:
+            near = near & ~((dy == 0) & (dx == 0))
+        earlier = (ch.t[None, :] < ch.t[:, None]) & ch.valid[None, :]
+        if cfg.polarity_sensitive and pols > 1:
+            near = near & (ch.p[:, None] == ch.p[None, :])
+        dt = ch.t[:, None] - ch.t[None, :]
+        if mode == "ideal":
+            inwin = dt < cfg.tau_tw
+        else:
+            inwin = edram.v_mem(jnp.maximum(dt, 0.0), params) > v_tw
+        sup = sup + (near & earlier & inwin).sum(axis=-1).astype(jnp.int32)
+
+    return sup
+
+
+def stcf_chunk_step(
+    sae: jax.Array,
+    ch: ts.EventBatch,
+    cfg: STCFConfig,
+    mode: str = "ideal",
+    params: edram.DecayParams | None = None,
+    v_tw: float | jax.Array | None = None,
+    intra_chunk: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """One STCF step: chunk support, then scatter the chunk into the SAE.
+
+    Returns ``(new_sae, support (chunk,) int32)``.
+    """
+    sup = stcf_chunk_support(
+        sae, ch, cfg, mode=mode, params=params, v_tw=v_tw,
+        intra_chunk=intra_chunk,
+    )
+    sae = ts.sae_update(sae, ch, merge_polarity=not cfg.polarity_sensitive)
+    return sae, sup
+
+
 def stcf_chunked(
     ev: ts.EventBatch,
     h: int,
@@ -117,50 +207,17 @@ def stcf_chunked(
     assert n % chunk == 0, "pad the event batch to a multiple of the chunk size"
     k = n // chunk
     pols = 2 if cfg.polarity_sensitive else 1
-    if mode == "edram":
-        params_ = params if params is not None else edram.decay_params_for_cmem()
-        v_tw_ = v_tw if v_tw is not None else edram.v_tw_for_window(cfg.tau_tw, params_)
+    params_, v_tw_ = resolve_edram(cfg, mode, params, v_tw)
 
     resh = lambda a: a.reshape(k, chunk)
     chunks = ts.EventBatch(*(resh(f) for f in ev))
     sae0 = ts.empty_sae(h, w, pols)
-    r = cfg.radius
 
     def step(sae, ch):
-        # support against the pre-chunk array state, read at each event's time
-        if mode == "ideal":
-            # mask depends on each event's own t -> evaluate per event.
-            # (t_i - sae_patch) < tau: gather patch timestamps then compare.
-            mask_fn = lambda t: (t - sae) < cfg.tau_tw
-        else:
-            mask_fn = lambda t: edram.v_mem(t - sae, params_) > v_tw_
-
-        # Gather per-event patch support (vmap over events in the chunk).
-        def one(x, y, t, p):
-            return _patch_support_at(mask_fn(t), x[None], y[None], p[None], cfg)[0]
-
-        sup = jax.vmap(one)(ch.x, ch.y, ch.t, ch.p)
-
-        if intra_chunk:
-            # pairwise: event j supports event i if j is earlier, valid,
-            # within the patch, and (for edram) still above threshold at t_i.
-            dy = ch.y[:, None] - ch.y[None, :]
-            dx = ch.x[:, None] - ch.x[None, :]
-            near = (jnp.abs(dy) <= r) & (jnp.abs(dx) <= r)
-            if not cfg.include_self:
-                near = near & ~((dy == 0) & (dx == 0))
-            earlier = (ch.t[None, :] < ch.t[:, None]) & ch.valid[None, :]
-            if cfg.polarity_sensitive and pols > 1:
-                near = near & (ch.p[:, None] == ch.p[None, :])
-            dt = ch.t[:, None] - ch.t[None, :]
-            if mode == "ideal":
-                inwin = dt < cfg.tau_tw
-            else:
-                inwin = edram.v_mem(jnp.maximum(dt, 0.0), params_) > v_tw_
-            sup = sup + (near & earlier & inwin).sum(axis=-1).astype(jnp.int32)
-
-        sae = ts.sae_update(sae, ch, merge_polarity=not cfg.polarity_sensitive)
-        return sae, sup
+        return stcf_chunk_step(
+            sae, ch, cfg, mode=mode, params=params_, v_tw=v_tw_,
+            intra_chunk=intra_chunk,
+        )
 
     _, support = jax.lax.scan(step, sae0, chunks)
     support = support.reshape(n)

@@ -43,6 +43,80 @@ def empty_sae(h: int, w: int, polarities: int = 1) -> jax.Array:
     return jnp.full((polarities, h, w), NEVER, dtype=jnp.float32)
 
 
+class SurfaceState(NamedTuple):
+    """Pytree state of one sensor's surface — the unit of slot state.
+
+    Pure-function updates on this pytree are shared by the offline batch
+    pipeline (scan over chunks) and the streaming serving engine (vmap over
+    a slot axis); both paths therefore write each event exactly once into
+    the same SAE semantics.
+    """
+
+    sae: jax.Array        # (P, H, W) float32 last-write times; -inf = never
+    t_last: jax.Array     # () float32 — latest valid event time ingested
+    n_events: jax.Array   # () int32  — running count of valid events
+
+
+def surface_init(h: int, w: int, polarities: int = 1) -> SurfaceState:
+    """Fresh per-sensor surface state ('never written' everywhere)."""
+    return SurfaceState(
+        sae=empty_sae(h, w, polarities),
+        t_last=jnp.float32(0.0),
+        n_events=jnp.int32(0),
+    )
+
+
+def surface_update(
+    state: SurfaceState, ev: "EventBatch", merge_polarity: bool = False
+) -> SurfaceState:
+    """Scatter one event chunk into the state (jit/vmap-friendly)."""
+    sae = sae_update(state.sae, ev, merge_polarity=merge_polarity)
+    t_valid = jnp.where(ev.valid, ev.t, NEVER)
+    return SurfaceState(
+        sae=sae,
+        t_last=jnp.maximum(state.t_last, t_valid.max(initial=NEVER)).astype(
+            jnp.float32
+        ),
+        n_events=state.n_events + ev.valid.sum().astype(jnp.int32),
+    )
+
+
+def surface_read(
+    state: SurfaceState,
+    t_now,
+    tau: Optional[float] = None,
+    params=None,
+) -> jax.Array:
+    """Read the TS off a SurfaceState: ideal (``tau``) or eDRAM (``params``).
+
+    Pure-jnp form, for use inside scans.  For the kernel-backed form shared
+    with the serving engine use ``surface_read_kernel``.
+    """
+    if params is not None:
+        return ts_edram(state.sae, t_now, params)
+    assert tau is not None, "pass tau (ideal) or params (edram)"
+    return ts_ideal(state.sae, t_now, tau)
+
+
+def surface_read_kernel(
+    state: SurfaceState,
+    t_now,
+    params,
+    block=(8, 128),
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Kernel-backed readout of a SurfaceState (any leading batch dims).
+
+    The serving engine reads its whole slot pool through this same entry
+    point, so an offline reader and the engine are bit-identical given
+    equal SAE state — the readout is one shared compiled program, not two
+    differently-fused XLA graphs that can drift by an ULP.
+    """
+    from repro.kernels import ops  # deferred: kernels sit above core
+
+    return ops.ts_decay(state.sae, t_now, params, block=block, backend=backend)
+
+
 def sae_update(sae: jax.Array, ev: EventBatch, merge_polarity: bool = False) -> jax.Array:
     """Scatter the batch's timestamps into the SAE (max-combine).
 
@@ -137,16 +211,13 @@ def streaming_ts(
     total writes + lazy decay at read time only.
     Returns (K, P, H, W).
     """
-    sae0 = empty_sae(h, w, polarities)
+    state0 = surface_init(h, w, polarities)
 
-    def step(sae, inp):
+    def step(state, inp):
         chunk, t_read = inp
-        sae = sae_update(sae, chunk)
-        if params is None:
-            frame = ts_ideal(sae, t_read, tau)
-        else:
-            frame = ts_edram(sae, t_read, params)
-        return sae, frame
+        state = surface_update(state, chunk)
+        frame = surface_read(state, t_read, tau=tau, params=params)
+        return state, frame
 
-    _, frames = jax.lax.scan(step, sae0, (chunks, read_times))
+    _, frames = jax.lax.scan(step, state0, (chunks, read_times))
     return frames

@@ -1,7 +1,20 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels, behind one backend switch.
 
-On CPU (this container) the kernels run in interpret mode; on TPU they
-compile natively.  ``interpret=None`` -> auto-detect.
+Every op takes an explicit ``backend`` selector instead of per-call
+``use_ref``/``interpret`` flags:
+
+  * ``backend="pallas"``    compiled Pallas kernel (TPU)
+  * ``backend="interpret"`` the same kernel through the Pallas interpreter
+                            (bit-accurate CPU path used by tests and CI)
+  * ``backend="ref"``       the pure-jnp oracle in ``kernels.ref``
+  * ``backend=None``        auto: "pallas" on TPU, "interpret" elsewhere
+
+The selector is static (part of the jit cache key): each backend value
+compiles its own entry, and switching between them adds a trace without
+invalidating the others.  ``resolve_backend`` is the single place the
+``None`` -> platform-default rule lives; callers that hold a backend for
+their lifetime (e.g. the serving engine) resolve once up front and pass
+the canonical name through.
 """
 from __future__ import annotations
 
@@ -9,59 +22,69 @@ import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import decay_scan as _dscan
 from repro.kernels import ref as _ref
 from repro.kernels import stcf as _stcf
 from repro.kernels import ts_decay as _tsd
 
-
-def _auto_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+BACKENDS = ("pallas", "interpret", "ref")
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "use_ref"))
+def resolve_backend(backend: Optional[str]) -> str:
+    """Canonicalize a backend name; ``None`` -> platform default."""
+    if backend is None:
+        return "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS} or None"
+        )
+    return backend
+
+
+def _vmap_leading(fn, arr):
+    """Apply ``fn`` over the last two dims, vmapping any leading dims."""
+    flat = arr.reshape((-1,) + arr.shape[-2:])
+    out = jax.vmap(fn)(flat)
+    return out.reshape(arr.shape[:-2] + out.shape[-2:])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
 def ts_decay(
     sae: jax.Array,
     t_now,
     params,
     block: Tuple[int, int] = (8, 128),
-    interpret: Optional[bool] = None,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
 ):
     """Time-surface readout over a (..., H, W) SAE (leading dims vmapped)."""
-    if use_ref:
+    backend = resolve_backend(backend)
+    if backend == "ref":
         fn = lambda s: _ref.ts_decay_ref(s, t_now, params)
     else:
         fn = lambda s: _tsd.ts_decay_pallas(
-            s, t_now, params, block=block, interpret=_auto_interpret(interpret)
+            s, t_now, params, block=block, interpret=backend == "interpret"
         )
-    flat = sae.reshape((-1,) + sae.shape[-2:])
-    out = jax.vmap(fn)(flat)
-    return out.reshape(sae.shape)
+    return _vmap_leading(fn, sae)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("v_tw_static", "block", "interpret", "use_ref")
-)
+@functools.partial(jax.jit, static_argnames=("v_tw_static", "block", "backend"))
 def ts_decay_with_mask(
     sae: jax.Array,
     t_now,
     params,
     v_tw_static: float,
     block: Tuple[int, int] = (8, 128),
-    interpret: Optional[bool] = None,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
 ):
-    if use_ref:
+    """Readout plus the fused comparator mask (V > v_tw), one surface pass."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
         fn = lambda s: _ref.ts_decay_ref(s, t_now, params, v_tw=v_tw_static)
     else:
         fn = lambda s: _tsd.ts_decay_pallas(
             s, t_now, params, v_tw=v_tw_static, block=block,
-            interpret=_auto_interpret(interpret),
+            interpret=backend == "interpret",
         )
     flat = sae.reshape((-1,) + sae.shape[-2:])
     v, m = jax.vmap(fn)(flat)
@@ -69,34 +92,30 @@ def ts_decay_with_mask(
 
 
 @functools.partial(
-    jax.jit,
-    static_argnames=("radius", "include_self", "block_h", "interpret", "use_ref"),
+    jax.jit, static_argnames=("radius", "include_self", "block_h", "backend")
 )
 def stcf_support(
     mask: jax.Array,
     radius: int = 3,
     include_self: bool = False,
     block_h: int = 8,
-    interpret: Optional[bool] = None,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
 ):
     """Patch support count of a (..., H, W) boolean/float mask."""
-    if use_ref:
+    backend = resolve_backend(backend)
+    if backend == "ref":
         fn = lambda m: _ref.stcf_support_ref(m, radius, include_self)
     else:
         fn = lambda m: _stcf.stcf_support_pallas(
             m, radius=radius, include_self=include_self, block_h=block_h,
-            interpret=_auto_interpret(interpret),
+            interpret=backend == "interpret",
         )
-    flat = mask.reshape((-1,) + mask.shape[-2:])
-    out = jax.vmap(fn)(flat)
-    return out.reshape(mask.shape)
+    return _vmap_leading(fn, mask)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("radius", "include_self", "v_tw", "block_h", "interpret",
-                     "use_ref"),
+    static_argnames=("radius", "include_self", "v_tw", "block_h", "backend"),
 )
 def stcf_support_fused(
     sae: jax.Array,
@@ -106,11 +125,11 @@ def stcf_support_fused(
     radius: int = 3,
     include_self: bool = False,
     block_h: int = 8,
-    interpret: Optional[bool] = None,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
 ):
     """Fused SAE -> decay -> comparator -> support (uniform cell params)."""
-    if use_ref:
+    backend = resolve_backend(backend)
+    if backend == "ref":
         fn = lambda s: _ref.stcf_support_fused_ref(
             s, radius, params, v_tw, t_now, include_self
         )
@@ -118,25 +137,23 @@ def stcf_support_fused(
         fn = lambda s: _stcf.stcf_support_pallas(
             s, radius=radius, include_self=include_self,
             fused_decay=(params, v_tw, t_now), block_h=block_h,
-            interpret=_auto_interpret(interpret),
+            interpret=backend == "interpret",
         )
-    flat = sae.reshape((-1,) + sae.shape[-2:])
-    out = jax.vmap(fn)(flat)
-    return out.reshape(sae.shape)
+    return _vmap_leading(fn, sae)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "use_ref"))
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
 def decay_scan(
     a: jax.Array,
     x: jax.Array,
     s0: Optional[jax.Array] = None,
     block: Tuple[int, int] = (128, 128),
-    interpret: Optional[bool] = None,
-    use_ref: bool = False,
+    backend: Optional[str] = None,
 ):
     """s_t = a_t*s_{t-1} + x_t over (B, T, C).  Returns (states, final)."""
-    if use_ref:
+    backend = resolve_backend(backend)
+    if backend == "ref":
         return _ref.decay_scan_ref(a, x, s0)
     return _dscan.decay_scan_pallas(
-        a, x, s0, block=block, interpret=_auto_interpret(interpret)
+        a, x, s0, block=block, interpret=backend == "interpret"
     )

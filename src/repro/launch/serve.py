@@ -1,7 +1,15 @@
-"""Serving driver: batched prefill+decode on a (reduced) arch config.
+"""Serving drivers.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b --reduced \
-        --requests 4 --new-tokens 16
+Two engines behind one entrypoint:
+
+  * ``tokens``  — batched LM prefill+decode on a (reduced) arch config
+  * ``sensors`` — the streaming multi-sensor time-surface engine: AER
+                  event streams in, decayed surfaces / STCF masks out
+
+    PYTHONPATH=src python -m repro.launch.serve tokens --arch gemma2-27b \
+        --reduced --requests 4 --new-tokens 16
+    PYTHONPATH=src python -m repro.launch.serve sensors --sensors 4 \
+        --duration 0.2 --hw 120x160
 """
 from __future__ import annotations
 
@@ -15,17 +23,10 @@ from repro.configs import get_config
 from repro.models import module as M
 from repro.models import transformer as T
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
-
+def run_tokens(args) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -46,6 +47,78 @@ def main() -> None:
         print(f"req {i}: prefill {r.n_prefill:3d} -> {r.tokens[:8]}...")
     print(f"{total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s batched on CPU)")
+
+
+def run_sensors(args) -> None:
+    from repro.events import aer, datasets
+
+    try:
+        h, w = (int(v) for v in args.hw.split("x"))
+    except ValueError:
+        raise SystemExit(
+            f"--hw must be HxW (e.g. 240x320), got {args.hw!r}"
+        ) from None
+    cfg = TSEngineConfig(
+        h=h, w=w, n_slots=args.slots, chunk_capacity=args.chunk,
+        mode=args.mode, backend=args.backend,
+    )
+    eng = TimeSurfaceEngine(cfg)
+
+    kinds = ("hotel_bar", "driving")
+    slots, words = [], []
+    for i in range(args.sensors):
+        s = datasets.dnd21_like(kinds[i % 2], h=h, w=w,
+                                duration=args.duration, seed=i)
+        slots.append(eng.acquire())
+        words.append(aer.pack(s))
+        print(f"sensor {i}: slot {slots[-1]}, {s.n} events "
+              f"({kinds[i % 2]}-like)")
+
+    t0 = time.time()
+    eng.ingest(list(zip(slots, words)))
+    surfaces = eng.readout(args.duration)
+    jax.block_until_ready(surfaces)
+    dt = time.time() - t0
+    n_total = sum(len(wd) for wd in words)
+    print(f"ingest+readout {n_total} events over {args.sensors} sensors in "
+          f"{dt*1e3:.1f} ms ({n_total/dt/1e6:.2f} Meps)")
+
+    _, mask = eng.readout_with_mask(args.duration)
+    stats = eng.stats()
+    unit = " V" if args.mode == "edram" else ""
+    for i, slot in enumerate(slots):
+        occ = float(np.asarray(mask[slot]).mean())
+        print(f"sensor {i}: surface max {float(surfaces[slot].max()):.3f}{unit}, "
+              f"window occupancy {occ:.4f}, "
+              f"events ingested {stats['n_events'][slot]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="engine", required=True)
+
+    tp = sub.add_parser("tokens", help="LM prefill+decode serving")
+    tp.add_argument("--arch", required=True)
+    tp.add_argument("--reduced", action="store_true")
+    tp.add_argument("--requests", type=int, default=4)
+    tp.add_argument("--new-tokens", type=int, default=16)
+    tp.add_argument("--max-len", type=int, default=128)
+
+    sp = sub.add_parser("sensors", help="streaming time-surface serving")
+    sp.add_argument("--sensors", type=int, default=4)
+    sp.add_argument("--slots", type=int, default=8)
+    sp.add_argument("--hw", default="120x160", help="HxW, e.g. 240x320")
+    sp.add_argument("--duration", type=float, default=0.2)
+    sp.add_argument("--chunk", type=int, default=4096)
+    sp.add_argument("--mode", choices=("edram", "ideal"), default="edram")
+    sp.add_argument("--backend", choices=("pallas", "interpret", "ref"),
+                    default=None)
+
+    args = ap.parse_args()
+    if args.engine == "tokens":
+        run_tokens(args)
+    else:
+        run_sensors(args)
 
 
 if __name__ == "__main__":

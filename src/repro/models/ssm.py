@@ -138,7 +138,9 @@ def ssd_chunked(
     x_seq = states.reshape(bsz, nc, -1)
     s0 = None if initial_state is None else initial_state.reshape(bsz, -1)
     from repro.kernels import ops as kops
-    all_states, final = kops.decay_scan(a_seq, x_seq, s0, use_ref=not use_pallas)
+    all_states, final = kops.decay_scan(
+        a_seq, x_seq, s0, backend=None if use_pallas else "ref"
+    )
     # states *entering* each chunk: shift right by one
     prev = jnp.concatenate(
         [jnp.zeros_like(all_states[:, :1]) if s0 is None else s0[:, None],

@@ -1,1 +1,4 @@
 from repro.serve.engine import Request, Result, ServeEngine  # noqa: F401
+from repro.serve.ts_engine import (  # noqa: F401
+    EngineState, TSEngineConfig, TimeSurfaceEngine,
+)

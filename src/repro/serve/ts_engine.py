@@ -1,0 +1,396 @@
+"""Batched streaming time-surface serving engine (multi-sensor front end).
+
+A fixed pool of per-sensor *slots*, each holding one ``SurfaceState``
+(SAE + polarity metadata), batched along a leading slot axis so the whole
+pool is one pytree:
+
+  * **ingest** — variable-length AER event chunks (packed 64-bit words or
+    host ``EventStream``s) are padded to a fixed chunk capacity and
+    scattered into the batched SAE with a single jit'd max-combine scatter,
+    regardless of how many sensors ingest in one call.  O(#events) writes —
+    the paper's event-driven cost structure, served.
+  * **readout** — the Pallas ``ts_decay`` kernel runs batched over all
+    slots (leading dims vmapped inside ``kernels.ops``), optionally with
+    the STCF comparator fused so the denoiser front end never re-reads the
+    surface.  Backend selection (``"pallas" | "interpret" | "ref"``) is one
+    static argument threaded through ``kernels.ops``.
+
+Slots are acquired/released between calls (the static-shape analogue of
+continuous batching, mirroring ``serve.engine.ServeEngine``); releasing and
+re-acquiring a slot resets its surface to "never written", so sensors can
+come and go without retracing anything.
+
+Both decay modes run through the *same* kernel: the ideal exponential TS is
+the double-exponential eDRAM transient with ``a1=1, a2=0, b=0, tau1=tau``,
+so readout is bit-identical to the offline ``core.time_surface`` pipeline
+in either mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edram
+from repro.core import stcf as stcf_mod
+from repro.core import time_surface as ts
+from repro.events import aer
+from repro.events import pipeline
+from repro.events import synthetic as syn
+from repro.hw import constants as C
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class TSEngineConfig:
+    """Static engine configuration (part of every jit cache key)."""
+
+    h: int = C.QVGA_H
+    w: int = C.QVGA_W
+    polarities: int = 1
+    n_slots: int = 8                     # sensor pool size
+    chunk_capacity: int = 2048           # events per ingest chunk (padded)
+    mode: str = "edram"                  # "edram" | "ideal"
+    tau: float = C.MEMORY_WINDOW_S       # ideal-TS decay constant
+    tau_tw: float = C.MEMORY_WINDOW_S    # STCF correlation window
+    cmem_f: float = C.ISC_CMEM_F
+    stcf_radius: int = 3
+    stcf_threshold: int = 2
+    backend: Optional[str] = None        # kernels.ops backend selector
+    block: Tuple[int, int] = (8, 128)    # ts_decay tile
+
+    def __post_init__(self):
+        assert self.mode in ("edram", "ideal"), self.mode
+        ops.resolve_backend(self.backend)  # fail fast on typos
+
+    def decay_params(self) -> edram.DecayParams:
+        """Uniform decay params; ideal TS as a degenerate double-exp."""
+        if self.mode == "ideal":
+            f32 = jnp.float32
+            return edram.DecayParams(
+                a1=f32(1.0), tau1=f32(self.tau), a2=f32(0.0), tau2=f32(1.0),
+                b=f32(0.0),
+            )
+        return edram.decay_params_for_cmem(self.cmem_f)
+
+    def v_tw(self) -> float:
+        """Comparator threshold equivalent to the ``tau_tw`` window."""
+        if self.mode == "ideal":
+            return float(np.exp(-self.tau_tw / self.tau))
+        return float(edram.v_tw_for_window(self.tau_tw, self.decay_params()))
+
+    def stcf_config(self) -> stcf_mod.STCFConfig:
+        return stcf_mod.STCFConfig(
+            radius=self.stcf_radius, tau_tw=self.tau_tw,
+            threshold=self.stcf_threshold,
+            polarity_sensitive=self.polarities > 1,
+        )
+
+
+class EngineState(NamedTuple):
+    """The full slot pool as one pytree (leading axis = slot).
+
+    Liveness is host-side bookkeeping (the engine's free list); device
+    state holds only what jitted computations read.
+    """
+
+    surfaces: ts.SurfaceState   # sae (S, P, H, W), t_last (S,), n_events (S,)
+    generation: jax.Array       # (S,) int32 — bumped on every acquire
+
+
+def init_state(cfg: TSEngineConfig) -> EngineState:
+    s, p, h, w = cfg.n_slots, cfg.polarities, cfg.h, cfg.w
+    return EngineState(
+        surfaces=ts.SurfaceState(
+            sae=jnp.full((s, p, h, w), ts.NEVER, jnp.float32),
+            t_last=jnp.zeros((s,), jnp.float32),
+            n_events=jnp.zeros((s,), jnp.int32),
+        ),
+        generation=jnp.zeros((s,), jnp.int32),
+    )
+
+
+# ----------------------------------------------------------------------------
+# jit'd state transitions (pure; the engine class only does host bookkeeping)
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("polarities",))
+def ingest_step(
+    state: EngineState,
+    slot_ids: jax.Array,     # (B,) int32 — target slot per chunk
+    ev: ts.EventBatch,       # (B, N) fields — one padded chunk per row
+    polarities: int = 1,
+) -> EngineState:
+    """Scatter B event chunks into their slots in one fused max-combine.
+
+    Duplicate slot ids in one call are fine (max/add combine); padding
+    events carry t=-inf and never win the max.  O(B*N) writes total.
+    """
+    sur = state.surfaces
+    pol = ev.p if polarities > 1 else jnp.zeros_like(ev.p)
+    t = jnp.where(ev.valid, ev.t, ts.NEVER)
+    sid = jnp.broadcast_to(slot_ids[:, None], ev.t.shape)
+    sae = sur.sae.at[sid, pol, ev.y, ev.x].max(t, mode="drop")
+    t_last = sur.t_last.at[slot_ids].max(
+        t.max(axis=1, initial=ts.NEVER), mode="drop"
+    )
+    n_events = sur.n_events.at[slot_ids].add(
+        ev.valid.sum(axis=1).astype(jnp.int32), mode="drop"
+    )
+    return state._replace(
+        surfaces=ts.SurfaceState(sae=sae, t_last=t_last, n_events=n_events)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_stcf", "mode", "intra_chunk"),
+)
+def ingest_support(
+    state: EngineState,
+    slot_ids: jax.Array,
+    ev: ts.EventBatch,
+    cfg_stcf: stcf_mod.STCFConfig,
+    mode: str,
+    params: edram.DecayParams,
+    v_tw,
+    intra_chunk: bool = True,
+) -> jax.Array:
+    """STCF support of each chunk's events vs its slot's pre-ingest SAE.
+
+    Returns (B, N) int32.  Runs the same ``stcf_chunk_support`` the offline
+    ``stcf_chunked`` path scans with, vmapped over the slot gather.
+    """
+    sae_b = state.surfaces.sae[slot_ids]          # (B, P, H, W)
+    sup = jax.vmap(
+        lambda s, c: stcf_mod.stcf_chunk_support(
+            s, c, cfg_stcf, mode=mode, params=params, v_tw=v_tw,
+            intra_chunk=intra_chunk,
+        )
+    )(sae_b, ev)
+    return sup
+
+
+@functools.partial(jax.jit, static_argnames=("bump_generation",))
+def reset_slot(
+    state: EngineState, slot: jax.Array, bump_generation: bool = True,
+) -> EngineState:
+    """Wipe one slot back to 'never written'; acquire also bumps its
+    generation, release just wipes."""
+    sur = state.surfaces
+    gen = state.generation
+    return EngineState(
+        surfaces=ts.SurfaceState(
+            sae=sur.sae.at[slot].set(ts.NEVER),
+            t_last=sur.t_last.at[slot].set(0.0),
+            n_events=sur.n_events.at[slot].set(0),
+        ),
+        generation=gen.at[slot].add(1) if bump_generation else gen,
+    )
+
+
+# ----------------------------------------------------------------------------
+# the engine
+# ----------------------------------------------------------------------------
+
+#: an ingest item: (slot id, packed AER words | host EventStream | EventBatch)
+IngestItem = Tuple[int, Union[np.ndarray, syn.EventStream, ts.EventBatch]]
+
+
+class TimeSurfaceEngine:
+    """Host-facing multi-sensor serving engine over the batched slot state.
+
+    Typical use::
+
+        eng = TimeSurfaceEngine(TSEngineConfig(h=240, w=320, n_slots=8))
+        slot = eng.acquire()
+        eng.ingest([(slot, packed_aer_words)])
+        surface = eng.readout(t_now)[slot]       # (P, H, W)
+        eng.release(slot)
+    """
+
+    def __init__(self, cfg: TSEngineConfig):
+        self.cfg = cfg
+        self.state = init_state(cfg)
+        self._free: List[int] = list(range(cfg.n_slots))
+        self._params = cfg.decay_params()
+        self._v_tw = cfg.v_tw()
+        self._stcf_cfg = cfg.stcf_config()
+        self._backend = ops.resolve_backend(cfg.backend)
+
+    # -- slot pool ----------------------------------------------------------
+    def acquire(self) -> int:
+        """Claim a free slot (resetting its surface); raises when full."""
+        if not self._free:
+            raise RuntimeError(
+                f"no free sensor slots (pool size {self.cfg.n_slots})"
+            )
+        slot = self._free.pop(0)
+        self.state = reset_slot(self.state, jnp.int32(slot))
+        return slot
+
+    def _check_acquired(self, slot: int) -> None:
+        if not 0 <= slot < self.cfg.n_slots:
+            raise ValueError(
+                f"slot {slot} out of range [0, {self.cfg.n_slots})"
+            )
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is not acquired")
+
+    def release(self, slot: int) -> None:
+        """Free a slot, wiping its surface (released slots read as zero)."""
+        self._check_acquired(slot)
+        self.state = reset_slot(self.state, jnp.int32(slot),
+                                bump_generation=False)
+        self._free.append(slot)
+        self._free.sort()
+
+    @property
+    def n_live(self) -> int:
+        return self.cfg.n_slots - len(self._free)
+
+    # -- ingest --------------------------------------------------------------
+    def _as_chunks(self, item) -> List[ts.EventBatch]:
+        """Normalize one ingest payload to fixed-capacity EventBatch chunks."""
+        cap = self.cfg.chunk_capacity
+        if isinstance(item, ts.EventBatch):
+            assert item.x.shape[0] == cap, (
+                f"EventBatch capacity {item.x.shape[0]} != engine chunk "
+                f"capacity {cap}"
+            )
+            return [item]
+        if isinstance(item, np.ndarray):  # packed 64-bit AER words
+            item = aer.unpack(item.astype(np.uint64), self.cfg.h, self.cfg.w)
+        assert isinstance(item, syn.EventStream), type(item)
+        out = []
+        for lo in range(0, max(item.n, 1), cap):
+            sub = syn.EventStream(
+                x=item.x[lo:lo + cap], y=item.y[lo:lo + cap],
+                t=item.t[lo:lo + cap], p=item.p[lo:lo + cap],
+                is_signal=item.is_signal[lo:lo + cap], h=self.cfg.h,
+                w=self.cfg.w,
+            )
+            out.append(pipeline.to_event_batch(sub, cap))
+        return out
+
+    @staticmethod
+    def _pad_batch(n: int) -> int:
+        """Pad the ingest batch to a power of two: bounded jit retraces."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def ingest(
+        self,
+        items: Sequence[IngestItem],
+        with_support: bool = False,
+    ):
+        """Scatter event payloads into their slots under one jit call.
+
+        ``items`` pairs a slot id with packed AER words (uint64), a host
+        ``EventStream``, or a pre-padded ``EventBatch``.  Payloads longer
+        than ``chunk_capacity`` are split host-side.  With
+        ``with_support=True`` also returns, per input item, the STCF
+        support of its events against the slot's surface (concatenated over
+        split chunks) and the signal verdicts ``support >= threshold``.
+
+        The plain path fuses every chunk into one scatter call.  The
+        ``with_support`` path instead processes chunks *sequentially* —
+        each chunk's support sees all earlier chunks' writes — which makes
+        the labels exactly those of the offline ``stcf_chunked`` scan with
+        ``chunk=chunk_capacity``, at the cost of one jit call per chunk.
+        """
+        slot_ids: List[int] = []
+        chunks: List[ts.EventBatch] = []
+        spans: List[Tuple[int, int]] = []   # chunk range per input item
+        for slot, payload in items:
+            self._check_acquired(slot)
+            cs = self._as_chunks(payload)
+            spans.append((len(chunks), len(chunks) + len(cs)))
+            chunks.extend(cs)
+            slot_ids.extend([slot] * len(cs))
+        if not chunks:
+            return [] if with_support else None
+
+        if with_support:
+            sups, valids = [], []
+            for slot, chunk in zip(slot_ids, chunks):
+                sid = jnp.asarray([slot], jnp.int32)
+                ev1 = jax.tree_util.tree_map(lambda f: f[None], chunk)
+                sups.append(ingest_support(
+                    self.state, sid, ev1, self._stcf_cfg, self.cfg.mode,
+                    self._params, jnp.float32(self._v_tw),
+                ))
+                valids.append(chunk.valid)
+                self.state = ingest_step(
+                    self.state, sid, ev1, polarities=self.cfg.polarities
+                )
+            sup_np = np.concatenate([np.asarray(s)[0] for s in sups])
+            valid = np.concatenate([np.asarray(v) for v in valids])
+            cap = self.cfg.chunk_capacity
+            out = []
+            for lo, hi in spans:
+                s = sup_np[lo * cap:hi * cap]
+                v = valid[lo * cap:hi * cap]
+                out.append((s[v], s[v] >= self.cfg.stcf_threshold))
+            return out
+
+        b = self._pad_batch(len(chunks))
+        pad = b - len(chunks)
+        if pad:
+            empty = jax.tree_util.tree_map(jnp.zeros_like, chunks[0])
+            chunks.extend([empty] * pad)
+            slot_ids.extend([0] * pad)  # all-invalid: scatter is a no-op
+        ev = jax.tree_util.tree_map(lambda *fs: jnp.stack(fs), *chunks)
+        sids = jnp.asarray(slot_ids, jnp.int32)
+        self.state = ingest_step(
+            self.state, sids, ev, polarities=self.cfg.polarities
+        )
+        return None
+
+    # -- readout -------------------------------------------------------------
+    def readout(self, t_now) -> jax.Array:
+        """Decayed TS over the whole pool: (S, P, H, W) via the ts_decay
+        kernel (dead slots read as all-zero surfaces).
+
+        Goes through ``time_surface.surface_read_kernel`` — the same entry
+        point offline readers use — so engine and offline readouts of equal
+        SAE state are bit-identical.
+        """
+        return ts.surface_read_kernel(
+            self.state.surfaces, jnp.float32(t_now), self._params,
+            block=self.cfg.block, backend=self._backend,
+        )
+
+    def readout_with_mask(self, t_now):
+        """Surface plus the fused comparator mask V > V_tw: one HBM pass."""
+        return ops.ts_decay_with_mask(
+            self.state.surfaces.sae, jnp.float32(t_now), self._params,
+            v_tw_static=self._v_tw, block=self.cfg.block,
+            backend=self._backend,
+        )
+
+    def support_map(self, t_now) -> jax.Array:
+        """Dense STCF support count per pixel over all slots (S, P, H, W):
+        SAE -> decay -> comparator -> patch sum, fused in one kernel."""
+        return ops.stcf_support_fused(
+            self.state.surfaces.sae, self._params, self._v_tw,
+            jnp.float32(t_now), radius=self.cfg.stcf_radius,
+            backend=self._backend,
+        )
+
+    # -- telemetry ------------------------------------------------------------
+    def stats(self) -> dict:
+        s = self.state
+        return {
+            "live": [i not in self._free for i in range(self.cfg.n_slots)],
+            "generation": np.asarray(s.generation).tolist(),
+            "n_events": np.asarray(s.surfaces.n_events).tolist(),
+            "t_last": np.asarray(s.surfaces.t_last).tolist(),
+            "free_slots": list(self._free),
+        }

@@ -8,6 +8,9 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.models import module as M
 from repro.models import transformer as T
 
+# compile-heavy LM-arch sweep: excluded from the CI fast gate
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 32
 
 

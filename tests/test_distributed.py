@@ -12,6 +12,9 @@ import textwrap
 
 import pytest
 
+# 8-device subprocess runs: excluded from the CI fast gate
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -5,6 +5,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# subprocess compile sweeps: excluded from the CI fast gate
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -59,6 +59,7 @@ def test_int8_cache_is_smaller():
     assert b8 < 0.65 * b16  # int8 + scales ~ 9/16 of bf16
 
 
+@pytest.mark.slow  # 8-device subprocess train run
 def test_gather_once_train_parity():
     """fsdp_gather_once must produce the same loss/params as plain FSDP."""
     script = """

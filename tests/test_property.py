@@ -1,9 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
-import hypothesis as hyp
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
+"""Hypothesis property tests on the system's invariants.
+
+Skipped (not a collection error) when hypothesis is missing; CI installs
+it via the ``dev`` extra so these always run there.
+"""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core import edram, stcf
 from repro.core import time_surface as ts

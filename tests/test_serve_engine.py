@@ -1,0 +1,279 @@
+"""Streaming time-surface serving engine tests: slot lifecycle, offline
+equivalence (bit-identical), and backend dispatch parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stcf
+from repro.core import time_surface as ts
+from repro.events import aer, datasets, pipeline
+from repro.kernels import ops
+from repro.serve.ts_engine import (
+    TSEngineConfig, TimeSurfaceEngine, init_state, ingest_step,
+)
+
+H, W = 48, 64
+
+
+def _cfg(**kw):
+    base = dict(h=H, w=W, n_slots=4, chunk_capacity=512, mode="edram",
+                backend="interpret")
+    base.update(kw)
+    return TSEngineConfig(**base)
+
+
+def _stream(kind="hotel_bar", seed=0, duration=0.06):
+    return datasets.dnd21_like(kind, h=H, w=W, duration=duration, seed=seed)
+
+
+def _offline_state(stream, capacity=1 << 14):
+    whole = pipeline.to_event_batch(stream, capacity)
+    state = ts.surface_init(H, W)
+    return ts.surface_update(state, whole)
+
+
+# ----------------------------------------------------------------------------
+# slot lifecycle
+# ----------------------------------------------------------------------------
+
+def test_slot_acquire_release_reuse():
+    eng = TimeSurfaceEngine(_cfg())
+    slots = [eng.acquire() for _ in range(4)]
+    assert slots == [0, 1, 2, 3] and eng.n_live == 4
+    with pytest.raises(RuntimeError):
+        eng.acquire()
+
+    eng.ingest([(slots[1], _stream(seed=1))])
+    assert eng.stats()["n_events"][1] > 0
+
+    eng.release(slots[1])
+    assert eng.n_live == 3
+    # released slots read as all-zero surfaces immediately
+    assert float(eng.readout(0.1)[1].max()) == 0.0
+    with pytest.raises(ValueError):
+        eng.release(slots[1])          # double release
+    with pytest.raises(ValueError):
+        eng.ingest([(slots[1], _stream())])   # ingest into a free slot
+    with pytest.raises(ValueError):
+        eng.release(99)                # out-of-range slot id
+    with pytest.raises(ValueError):
+        eng.ingest([(99, _stream())])  # out-of-range slot id
+
+    s = eng.acquire()                  # reuse wipes the surface
+    assert s == 1
+    st = eng.stats()
+    assert st["n_events"][1] == 0 and st["generation"][1] == 2
+    assert float(eng.readout(0.1)[1].max()) == 0.0
+
+
+def test_released_slot_does_not_leak_into_neighbor():
+    eng = TimeSurfaceEngine(_cfg())
+    a, b = eng.acquire(), eng.acquire()
+    eng.ingest([(a, _stream(seed=1)), (b, _stream(seed=2, kind="driving"))])
+    before = np.asarray(eng.readout(0.08)[a])
+    eng.release(b)
+    eng.acquire()
+    after = np.asarray(eng.readout(0.08)[a])
+    np.testing.assert_array_equal(before, after)
+
+
+# ----------------------------------------------------------------------------
+# ingest-then-readout equivalence vs the offline pipeline path
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["edram", "ideal"])
+def test_engine_matches_offline_pipeline_bit_identical(mode):
+    """Engine readout == offline events/pipeline surface, bitwise, both
+    modes, including the packed-AER ingest route."""
+    cfg = _cfg(mode=mode)
+    eng = TimeSurfaceEngine(cfg)
+    streams = [_stream(seed=i, kind=k)
+               for i, k in enumerate(("hotel_bar", "driving"))]
+    slots = [eng.acquire() for _ in streams]
+    # sensor 0 ships packed AER words, sensor 1 a host stream; quantize the
+    # offline copy identically (AER timestamps are microsecond ticks).
+    unpacked = [aer.unpack(aer.pack(s), H, W) for s in streams]
+    eng.ingest([(slots[0], aer.pack(streams[0])), (slots[1], streams[1])])
+
+    got = eng.readout(0.08)
+    for slot, offline_stream in zip(slots, (unpacked[0], streams[1])):
+        state = _offline_state(offline_stream)
+        want = ts.surface_read_kernel(
+            state, jnp.float32(0.08), cfg.decay_params(), backend=cfg.backend
+        )
+        np.testing.assert_array_equal(np.asarray(got[slot]), np.asarray(want))
+
+
+def test_multi_chunk_split_matches_single_shot():
+    """A stream longer than chunk_capacity splits host-side; the scattered
+    state must equal one whole-stream scatter."""
+    cfg = _cfg(chunk_capacity=256)    # force a split (streams are larger)
+    eng = TimeSurfaceEngine(cfg)
+    stream = _stream(seed=3)
+    assert stream.n > 256
+    slot = eng.acquire()
+    eng.ingest([(slot, stream)])
+    sae_split = np.asarray(eng.state.surfaces.sae[slot])
+    sae_whole = np.asarray(_offline_state(stream).sae)
+    np.testing.assert_array_equal(sae_split, sae_whole)
+    assert eng.stats()["n_events"][slot] == stream.n
+
+
+def test_interleaved_windows_match_streaming_ts():
+    """Windowed multi-sensor ingest reproduces the offline streaming_ts
+    frames for each sensor."""
+    cfg = _cfg(mode="ideal", chunk_capacity=1024)
+    eng = TimeSurfaceEngine(cfg)
+    streams = [_stream(seed=i) for i in range(2)]
+    slots = [eng.acquire() for _ in streams]
+    window_s = 0.02
+    chunks = [pipeline.window_chunks(s, window_s, 1024) for s in streams]
+    n_win = min(c.x.shape[0] for c in chunks)
+    reads = jnp.arange(1, n_win + 1) * window_s
+    want = [ts.streaming_ts(c, H, W, reads, tau=cfg.tau) for c in chunks]
+
+    for wi in range(n_win):
+        eng.ingest([
+            (slot, ts.EventBatch(*(f[wi] for f in c)))
+            for slot, c in zip(slots, chunks)
+        ])
+        got = eng.readout(float(reads[wi]))
+        for slot, w_frames in zip(slots, want):
+            np.testing.assert_allclose(
+                np.asarray(got[slot]), np.asarray(w_frames[wi]),
+                rtol=1e-6, atol=1e-7,
+            )
+
+
+# ----------------------------------------------------------------------------
+# backend dispatch
+# ----------------------------------------------------------------------------
+
+def test_backend_parity_interpret_vs_ref():
+    stream = _stream(seed=5)
+    outs = {}
+    for backend in ("interpret", "ref"):
+        eng = TimeSurfaceEngine(_cfg(backend=backend))
+        slot = eng.acquire()
+        eng.ingest([(slot, stream)])
+        outs[backend] = {
+            "surface": np.asarray(eng.readout(0.08)),
+            "mask": np.asarray(eng.readout_with_mask(0.08)[1]),
+            "support": np.asarray(eng.support_map(0.08)),
+        }
+    for k in outs["interpret"]:
+        np.testing.assert_allclose(
+            outs["interpret"][k], outs["ref"][k], rtol=1e-6, atol=1e-6,
+            err_msg=k,
+        )
+
+
+def test_resolve_backend_rejects_unknown():
+    with pytest.raises(ValueError):
+        ops.resolve_backend("tpu")
+    with pytest.raises(ValueError):
+        TSEngineConfig(backend="cuda")
+    assert ops.resolve_backend(None) in ("pallas", "interpret")
+
+
+def test_ops_backend_parity_direct():
+    """ops-level parity: the same SAE through all three entry points."""
+    key = jax.random.PRNGKey(0)
+    sae = jnp.where(jax.random.uniform(key, (2, 40, 70)) < 0.3, -jnp.inf,
+                    jax.random.uniform(jax.random.fold_in(key, 1), (2, 40, 70),
+                                       maxval=0.05))
+    from repro.core import edram
+    params = edram.decay_params_for_cmem()
+    v_tw = float(edram.v_tw_for_window(0.024, params))
+    for fn in (
+        lambda b: ops.ts_decay(sae, 0.06, params, backend=b),
+        lambda b: ops.ts_decay_with_mask(sae, 0.06, params, v_tw, backend=b)[0],
+        lambda b: ops.stcf_support_fused(sae, params, v_tw, 0.06, backend=b),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(fn("interpret")), np.asarray(fn("ref")),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+# ----------------------------------------------------------------------------
+# STCF support labels at ingest
+# ----------------------------------------------------------------------------
+
+def test_ingest_support_matches_offline_stcf():
+    """Per-event support labels from the engine equal the offline
+    stcf_chunked support when fed the same single chunk."""
+    cfg = _cfg(chunk_capacity=512, mode="edram")
+    eng = TimeSurfaceEngine(cfg)
+    slot = eng.acquire()
+    stream = _stream(seed=7)
+    n = min(stream.n, 512)
+    import dataclasses
+    sub = dataclasses.replace(
+        stream, x=stream.x[:n], y=stream.y[:n], t=stream.t[:n],
+        p=stream.p[:n], is_signal=stream.is_signal[:n],
+    )
+    (sup, is_sig), = eng.ingest([(slot, sub)], with_support=True)
+    assert sup.shape == (n,)
+
+    batch = pipeline.to_event_batch(sub, 512)
+    scfg = cfg.stcf_config()
+    params, v_tw = stcf.resolve_edram(scfg, "edram")
+    sup_off, sig_off = stcf.stcf_chunked(
+        batch, H, W, scfg, chunk=512, mode="edram", params=params, v_tw=v_tw,
+    )
+    np.testing.assert_array_equal(sup, np.asarray(sup_off)[:n])
+    np.testing.assert_array_equal(is_sig, np.asarray(sig_off)[:n])
+
+
+def test_multi_chunk_support_matches_offline_stcf():
+    """A payload spanning several chunks must label exactly like the
+    offline stcf_chunked scan with chunk=chunk_capacity (later chunks see
+    earlier chunks' writes)."""
+    cap = 256
+    cfg = _cfg(chunk_capacity=cap, mode="ideal")
+    eng = TimeSurfaceEngine(cfg)
+    slot = eng.acquire()
+    stream = _stream(seed=9)
+    assert stream.n > 2 * cap          # forces >= 3 chunks
+    (sup, is_sig), = eng.ingest([(slot, stream)], with_support=True)
+    assert sup.shape == (stream.n,)
+
+    n_pad = -stream.n % cap
+    batch = pipeline.to_event_batch(stream, stream.n + n_pad)
+    sup_off, sig_off = stcf.stcf_chunked(
+        batch, H, W, cfg.stcf_config(), chunk=cap, mode="ideal",
+    )
+    np.testing.assert_array_equal(sup, np.asarray(sup_off)[:stream.n])
+    np.testing.assert_array_equal(is_sig, np.asarray(sig_off)[:stream.n])
+
+
+def test_ingest_batch_padding_is_noop():
+    """Padding the ingest batch to a power of two must not disturb state:
+    3 items pad to 4; the pad chunk lands on slot 0 as a no-op."""
+    eng = TimeSurfaceEngine(_cfg())
+    slots = [eng.acquire() for _ in range(3)]
+    streams = [_stream(seed=i) for i in range(3)]
+    eng.ingest(list(zip(slots, streams)))          # B=3 -> padded to 4
+    want = np.asarray(_offline_state(streams[0]).sae)
+    np.testing.assert_array_equal(
+        np.asarray(eng.state.surfaces.sae[slots[0]]), want
+    )
+
+
+def test_ingest_step_is_jit_stable():
+    """Same (B, N) shapes must hit the same compiled ingest."""
+    cfg = _cfg()
+    state = init_state(cfg)
+    n1 = ingest_step._cache_size()
+    ev = ts.EventBatch(
+        x=jnp.zeros((2, 8), jnp.int32), y=jnp.zeros((2, 8), jnp.int32),
+        t=jnp.zeros((2, 8), jnp.float32), p=jnp.zeros((2, 8), jnp.int32),
+        valid=jnp.zeros((2, 8), bool),
+    )
+    sids = jnp.array([0, 1], jnp.int32)
+    ingest_step(state, sids, ev, polarities=cfg.polarities)
+    n2 = ingest_step._cache_size()
+    ingest_step(state, sids, ev, polarities=cfg.polarities)
+    assert ingest_step._cache_size() == n2 > n1 - 1
