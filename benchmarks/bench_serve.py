@@ -1,12 +1,20 @@
 """Serving-engine throughput: ingest events/sec and batched readout
 latency vs the number of concurrent sensors (CPU wall-times; the batched
-readout is one kernel call whatever the sensor count).
+readout is one kernel call whatever the sensor count), plus the
+device-parallel sweep: the same pool sharded over 1/2/4/8 emulated host
+devices (subprocess, so the main process stays single-device).
 
-Also asserts the serving invariant: engine readout is bit-identical to the
-offline ``events/pipeline`` + ``core/time_surface`` path on each stream.
+Also asserts the serving invariants: engine readout is bit-identical to
+the offline ``events/pipeline`` + ``core/time_surface`` path on each
+stream, and the sharded engine is bit-identical to the unsharded engine
+at every device count.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -18,6 +26,99 @@ from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 H, W = 120, 160
 DURATION = 0.1
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Runs under 8 emulated host devices; prints one CSV row per measurement.
+# The unsharded engine built in the same process is the bit-identical
+# oracle for every device count.
+_SHARDED_SWEEP = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import time
+import jax, numpy as np
+from repro.events import aer, datasets
+from repro.launch.mesh import make_host_mesh
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W, DURATION, N = {h}, {w}, {duration}, 8
+streams = [
+    datasets.dnd21_like('driving' if i % 2 else 'hotel_bar',
+                        h=H, w=W, duration=DURATION, seed=i)
+    for i in range(N)
+]
+words = [aer.pack(s) for s in streams]
+n_events = sum(s.n for s in streams)
+cfg = TSEngineConfig(h=H, w=W, n_slots=N, chunk_capacity=1 << 14,
+                     mode='edram')
+
+ref = TimeSurfaceEngine(cfg)
+ref_slots = [ref.acquire() for _ in range(N)]
+ref.ingest(list(zip(ref_slots, words)))
+want = np.asarray(ref.readout(DURATION))
+want_sup = np.asarray(ref.support_map(DURATION))
+
+for nd in (1, 2, 4, 8):
+    eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(nd))
+    slots = [eng.acquire() for _ in range(N)]
+    items = list(zip(slots, words))
+
+    eng.ingest(items)                       # warm the jits, then reset
+    jax.block_until_ready(eng.readout(DURATION))
+    jax.block_until_ready(eng.support_map(DURATION))
+    for s in slots:
+        eng.release(s)
+    slots = [eng.acquire() for _ in range(N)]
+    items = list(zip(slots, words))
+
+    t0 = time.perf_counter()
+    eng.ingest(items)
+    jax.block_until_ready(eng.state.surfaces.sae)
+    dt_ingest = time.perf_counter() - t0
+
+    n_read = 5
+    t0 = time.perf_counter()
+    for _ in range(n_read):
+        surf = eng.readout(DURATION)
+    jax.block_until_ready(surf)
+    dt_read = (time.perf_counter() - t0) / n_read
+
+    got = np.asarray(surf)
+    assert (got[:N] == want).all(), f'sharded readout != unsharded (nd={{nd}})'
+    sup = np.asarray(eng.support_map(DURATION))
+    assert (sup[:N] == want_sup).all(), f'sharded support != unsharded (nd={{nd}})'
+
+    print(f'serve_sharded_ingest_{{nd}}dev_us,'
+          f'{{dt_ingest * 1e6:.1f}},{{n_events / dt_ingest / 1e6:.4f}}')
+    print(f'serve_sharded_readout_{{nd}}dev_us,'
+          f'{{dt_read * 1e6:.1f}},{{N * H * W / dt_read / 1e6:.4f}}')
+"""
+
+
+def sharded_rows(h=H, w=W, duration=DURATION):
+    """1/2/4/8-device sweep rows from the subprocess (bit-identical gate
+    runs inside it; a non-zero exit surfaces as a harness ERROR row)."""
+    script = textwrap.dedent(
+        _SHARDED_SWEEP.format(h=h, w=w, duration=duration)
+    )
+    src = os.path.join(_REPO, "src")
+    inherited = os.environ.get("PYTHONPATH")
+    env = dict(os.environ, PYTHONPATH=(
+        src + os.pathsep + inherited if inherited else src
+    ))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=1800)
+    assert out.returncode == 0, (
+        f"sharded sweep failed\nSTDOUT:\n{out.stdout}\n"
+        f"STDERR:\n{out.stderr[-3000:]}"
+    )
+    rows_ = []
+    for line in out.stdout.splitlines():
+        if line.startswith("serve_sharded_"):
+            name, us, derived = line.split(",")
+            rows_.append((name, float(us), float(derived)))
+    assert len(rows_) == 8, out.stdout
+    return rows_
 
 
 def _offline_surface(cfg, stream, t_read):
@@ -84,4 +185,6 @@ def rows():
         out.append((f"serve_readout_{n_sensors}sensors_us",
                     dt_read * 1e6,
                     n_sensors * H * W / dt_read / 1e6))  # Mpix/s
+
+    out.extend(sharded_rows())  # 1/2/4/8-device sweep (Meps / Mpix/s)
     return out

@@ -31,6 +31,7 @@ def main() -> None:
     which = args.only.split(",") if args.only else MODULES
 
     print("name,us_per_call,derived")
+    failed = []
     for name in which:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["rows"])
         t0 = time.time()
@@ -42,7 +43,13 @@ def main() -> None:
         except Exception:  # noqa: BLE001 — keep the harness running
             print(f"bench_{name},ERROR,", flush=True)
             traceback.print_exc(file=sys.stderr)
+            failed.append(name)
         print(f"# bench_{name} wall: {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        # every remaining module still ran, but CI must see the failure
+        # (bench_serve's rows assert bit-identity gates, not just timings)
+        print(f"# FAILED: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,30 +7,20 @@ fused comparator in a single batched kernel call.  Mid-run, sensor 1
 disconnects and a new sensor reuses its slot (fresh surface, no retrace).
 
     PYTHONPATH=src python examples/serve_sensors.py
+    PYTHONPATH=src python examples/serve_sensors.py --mesh 2   # sharded pool
 """
-import numpy as np
+import argparse
 
-from repro.events import aer, datasets, synthetic as syn
-from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+import numpy as np
 
 H, W = 64, 86
 WINDOW_S = 0.02
 DURATION = 0.2
 
-cfg = TSEngineConfig(h=H, w=W, n_slots=4, chunk_capacity=4096, mode="edram")
-eng = TimeSurfaceEngine(cfg)
 
-kinds = ["driving", "driving", "hotel_bar", "hotel_bar"]
-streams = [
-    datasets.dnd21_like(k, h=H, w=W, duration=DURATION, seed=i)
-    for i, k in enumerate(kinds)
-]
-slots = [eng.acquire() for _ in streams]
-print(f"{len(streams)} sensors on slots {slots}: "
-      f"{[s.n for s in streams]} events")
+def window(s, lo: float, hi: float) -> np.ndarray:
+    from repro.events import aer, synthetic as syn
 
-
-def window(s: syn.EventStream, lo: float, hi: float) -> np.ndarray:
     m = (s.t >= lo) & (s.t < hi)
     return aer.pack(syn.EventStream(
         x=s.x[m], y=s.y[m], t=s.t[m], p=s.p[m], is_signal=s.is_signal[m],
@@ -38,24 +28,61 @@ def window(s: syn.EventStream, lo: float, hi: float) -> np.ndarray:
     ))
 
 
-n_win = int(round(DURATION / WINDOW_S))
-for wi in range(n_win):
-    lo, hi = wi * WINDOW_S, (wi + 1) * WINDOW_S
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard the slot pool over N emulated host devices")
+    args = ap.parse_args()
 
-    if wi == n_win // 2:  # sensor 1 disconnects; a new sensor takes the slot
-        eng.release(slots[1])
-        slots[1] = eng.acquire()
-        streams[1] = datasets.dnd21_like("hotel_bar", h=H, w=W,
-                                         duration=DURATION, seed=99)
-        print(f"window {wi}: sensor 1 swapped (slot {slots[1]} reused, "
-              f"generation {eng.stats()['generation'][slots[1]]})")
+    # mesh setup must precede any jax device use (host-device emulation)
+    mesh = None
+    if args.mesh:
+        from repro.launch import mesh as mesh_mod
 
-    items = [(slot, window(s, lo, hi)) for slot, s in zip(slots, streams)]
-    eng.ingest(items)
-    v, mask = eng.readout_with_mask(hi)
-    occ = np.asarray(mask, np.float32).mean(axis=(1, 2, 3))
-    print(f"t={hi*1e3:5.0f} ms  occupancy per slot: "
-          + "  ".join(f"{occ[s]:.3f}" for s in slots))
+        mesh_mod.ensure_host_device_count(args.mesh)
+        mesh = mesh_mod.make_host_mesh(args.mesh)
 
-stats = eng.stats()
-print("final events per slot:", [stats["n_events"][s] for s in slots])
+    from repro.events import datasets
+    from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+    cfg = TSEngineConfig(h=H, w=W, n_slots=4, chunk_capacity=4096,
+                         mode="edram")
+    eng = TimeSurfaceEngine(cfg, mesh=mesh)
+    if mesh is not None:
+        print(f"slot pool sharded over {dict(mesh.shape)} "
+              f"({eng.n_slots_padded} slots incl. padding)")
+
+    kinds = ["driving", "driving", "hotel_bar", "hotel_bar"]
+    streams = [
+        datasets.dnd21_like(k, h=H, w=W, duration=DURATION, seed=i)
+        for i, k in enumerate(kinds)
+    ]
+    slots = [eng.acquire() for _ in streams]
+    print(f"{len(streams)} sensors on slots {slots}: "
+          f"{[s.n for s in streams]} events")
+
+    n_win = int(round(DURATION / WINDOW_S))
+    for wi in range(n_win):
+        lo, hi = wi * WINDOW_S, (wi + 1) * WINDOW_S
+
+        if wi == n_win // 2:  # sensor 1 disconnects; a new one takes the slot
+            eng.release(slots[1])
+            slots[1] = eng.acquire()
+            streams[1] = datasets.dnd21_like("hotel_bar", h=H, w=W,
+                                             duration=DURATION, seed=99)
+            print(f"window {wi}: sensor 1 swapped (slot {slots[1]} reused, "
+                  f"generation {eng.stats()['generation'][slots[1]]})")
+
+        items = [(slot, window(s, lo, hi)) for slot, s in zip(slots, streams)]
+        eng.ingest(items)
+        v, mask = eng.readout_with_mask(hi)
+        occ = np.asarray(mask, np.float32).mean(axis=(1, 2, 3))
+        print(f"t={hi*1e3:5.0f} ms  occupancy per slot: "
+              + "  ".join(f"{occ[s]:.3f}" for s in slots))
+
+    stats = eng.stats()
+    print("final events per slot:", [stats["n_events"][s] for s in slots])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""jax version-portability shims (leaf module: imports jax only).
+
+The repo pins jax 0.4.37 (see pyproject.toml) but tracks APIs that moved
+after it:
+
+  * ``jax.shard_map`` with ``check_vma=`` is the >= 0.6 spelling; 0.4.37
+    has ``jax.experimental.shard_map.shard_map`` with ``check_rep=``.
+  * ``jax.sharding.AxisType`` (handled in ``launch.mesh``) is >= 0.5.
+
+Feature-detect with getattr so the pin works today and newer jax picks up
+the first-class APIs without edits.
+"""
+from __future__ import annotations
+
+import jax
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """``lax.optimization_barrier`` with a differentiation rule.
+
+    0.4.37's primitive has none (added in later jax), so grad through a
+    barriered MoE layer raises NotImplementedError.  The barrier is a
+    scheduling fence — identity math — so its JVP passes tangents through
+    untouched (matching what newer jax registers natively).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return optimization_barrier(x), dx
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` on new jax, the experimental one on the pin.
+
+    ``check`` maps onto ``check_vma`` (new) / ``check_rep`` (0.4.x) — the
+    replication-invariant validation both spell differently.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)

@@ -85,6 +85,46 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh):
     )
 
 
+# ----------------------------------------------------------------------------
+# slot-pool placement (streaming time-surface serving engine)
+# ----------------------------------------------------------------------------
+
+def slot_shard_count(mesh: Mesh) -> int:
+    """How many ways the engine's slot pool splits: the product of the
+    mesh's data axes (the model axis replicates surface state)."""
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return max(n, 1)
+
+
+def pad_pool(n_slots: int, mesh: Mesh) -> int:
+    """Smallest pool size >= n_slots divisible by the mesh's data axes.
+
+    Non-divisible pools shard the *padded* pool; the engine masks the dead
+    tail slots (they are never acquirable and read as all-zero surfaces).
+    """
+    n = slot_shard_count(mesh)
+    return -(-n_slots // n) * n
+
+
+def slot_pool_spec(mesh: Mesh) -> P:
+    """PartitionSpec for a leading-slot-axis leaf of the engine state:
+    slot axis over every data axis, everything else replicated."""
+    axes = data_axes(mesh)
+    return P(axes) if axes else P()
+
+
+def slot_pool_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding placing a (S, ...) engine-state leaf on the mesh.
+
+    The same sharding applies to every leaf of ``EngineState`` (all leaves
+    lead with the slot axis), so callers tree_map one sharding over the
+    whole pytree — the slot-pool analogue of ``param_shardings``.
+    """
+    return NamedSharding(mesh, slot_pool_spec(mesh))
+
+
 def spec_axes(spec: P) -> Tuple[str, ...]:
     """Flatten a PartitionSpec's mesh-axis names (entries may be str/tuple)."""
     out = []

@@ -489,6 +489,8 @@ def f32_convert_artifact_bytes(txt: str, arg_tree) -> int:
 
 def analyze(compiled, arg_tree=None) -> Dict[str, Any]:
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax <= 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     txt = compiled.as_text()
     colls = parse_collectives(txt)

@@ -1,24 +1,100 @@
 """Production mesh construction.
 
-A FUNCTION (not a module-level constant) so importing this module never
+FUNCTIONS (not module-level constants) so importing this module never
 touches jax device state.  Single pod: 16x16 = 256 chips ("data","model");
 multi-pod: 2x16x16 = 512 chips ("pod","data","model").
+
+``jax.sharding.AxisType`` (explicit Auto/Explicit axis kinds) only exists
+on jax >= 0.5; the pinned 0.4.37 has neither the enum nor the
+``axis_types=`` kwarg on ``jax.make_mesh``.  ``_axis_types_kwargs`` does
+getattr-based feature detection so newer jax still gets explicit Auto
+axes while the pin keeps working.
 """
 from __future__ import annotations
 
+import os
+import re
+from typing import Optional, Sequence
+
 import jax
+
+
+def _axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` when this jax has AxisType, else nothing."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests (host platform devices)."""
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
+
+
+# ----------------------------------------------------------------------------
+# host-device emulation (CPU "devices" via --xla_force_host_platform_device_count)
+# ----------------------------------------------------------------------------
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_device_count(n: int) -> None:
+    """Request ``n`` emulated host-platform devices.
+
+    Must run before the jax backend initializes (XLA reads ``XLA_FLAGS``
+    once, at first device use).  Raises if the backend is already up with
+    fewer devices — the caller started jax too early to honor the request.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    present = re.search(rf"{_HOST_COUNT_FLAG}=(\d+)", flags)
+    if present is None:
+        os.environ["XLA_FLAGS"] = f"{flags} {_HOST_COUNT_FLAG}={n}".strip()
+    elif int(present.group(1)) < n:
+        # raise an existing smaller count; only effective if the backend
+        # has not initialized yet — the check below catches the other case
+        os.environ["XLA_FLAGS"] = flags.replace(
+            present.group(0), f"{_HOST_COUNT_FLAG}={n}"
+        )
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"asked for {n} host devices but the jax backend already "
+            f"initialized with {len(jax.devices())}; set "
+            f"XLA_FLAGS={_HOST_COUNT_FLAG}={n} before any jax device use"
+        )
+
+
+def make_host_mesh(
+    n_devices: Optional[int] = None,
+    axes: Sequence[str] = ("data",),
+    devices=None,
+):
+    """1-D (by default) mesh over the first ``n_devices`` local devices.
+
+    The host-device analogue of ``make_test_mesh`` for the serving engine:
+    one ``"data"`` axis the slot pool shards over.  ``n_devices=None``
+    takes every visible device; asking for more than are visible raises
+    with the ``--xla_force_host_platform_device_count`` hint.
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = len(devs) if n_devices is None else n_devices
+    if n > len(devs):
+        raise RuntimeError(
+            f"asked for a {n}-device mesh but only {len(devs)} devices are "
+            f"visible; on CPU, export XLA_FLAGS={_HOST_COUNT_FLAG}={n} "
+            f"(or call ensure_host_device_count) before any jax device use"
+        )
+    if len(axes) != 1:
+        raise ValueError(
+            "make_host_mesh builds 1-D meshes; use make_test_mesh for "
+            f"multi-axis shapes (got axes={tuple(axes)})"
+        )
     return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        (n,), tuple(axes), devices=devs[:n], **_axis_types_kwargs(1)
     )

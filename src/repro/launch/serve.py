@@ -10,6 +10,8 @@ Two engines behind one entrypoint:
         --reduced --requests 4 --new-tokens 16
     PYTHONPATH=src python -m repro.launch.serve sensors --sensors 4 \
         --duration 0.2 --hw 120x160
+    PYTHONPATH=src python -m repro.launch.serve sensors --sensors 8 \
+        --mesh 4          # slot pool sharded over 4 (emulated) devices
 """
 from __future__ import annotations
 
@@ -51,6 +53,7 @@ def run_tokens(args) -> None:
 
 def run_sensors(args) -> None:
     from repro.events import aer, datasets
+    from repro.launch import mesh as mesh_mod
 
     try:
         h, w = (int(v) for v in args.hw.split("x"))
@@ -58,11 +61,22 @@ def run_sensors(args) -> None:
         raise SystemExit(
             f"--hw must be HxW (e.g. 240x320), got {args.hw!r}"
         ) from None
+    mesh = None
+    if args.mesh:
+        # must precede any jax device use (TSEngineConfig resolves the
+        # backend) so XLA still honors the host-device-count flag on CPU
+        mesh_mod.ensure_host_device_count(args.mesh)
+        mesh = mesh_mod.make_host_mesh(args.mesh)
+        print(f"mesh: {dict(mesh.shape)} over "
+              f"{[d.platform for d in mesh.devices.ravel()][0]} devices")
     cfg = TSEngineConfig(
         h=h, w=w, n_slots=args.slots, chunk_capacity=args.chunk,
         mode=args.mode, backend=args.backend,
     )
-    eng = TimeSurfaceEngine(cfg)
+    eng = TimeSurfaceEngine(cfg, mesh=mesh)
+    if mesh is not None and eng.n_slots_padded != cfg.n_slots:
+        print(f"slot pool padded {cfg.n_slots} -> {eng.n_slots_padded} "
+              f"for {eng.stats()['mesh']['n_shards']} shards")
 
     kinds = ("hotel_bar", "driving")
     slots, words = [], []
@@ -113,6 +127,9 @@ def main() -> None:
     sp.add_argument("--mode", choices=("edram", "ideal"), default="edram")
     sp.add_argument("--backend", choices=("pallas", "interpret", "ref"),
                     default=None)
+    sp.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard the slot pool over an N-device mesh "
+                         "(CPU: emulated host devices via XLA_FLAGS)")
 
     args = ap.parse_args()
     if args.engine == "tokens":

@@ -24,6 +24,18 @@ Both decay modes run through the *same* kernel: the ideal exponential TS is
 the double-exponential eDRAM transient with ``a1=1, a2=0, b=0, tau1=tau``,
 so readout is bit-identical to the offline ``core.time_surface`` pipeline
 in either mode.
+
+**Device-parallel mode** — pass a ``mesh`` to ``TimeSurfaceEngine`` and the
+slot pool shards its leading axis over the mesh's data axes
+(``distributed.sharding.slot_pool_sharding``).  Ingest routes each chunk to
+the device owning its slot and scatters under ``shard_map`` with donated
+state; the batched ``ts_decay``/STCF readouts run the same Pallas kernels
+per shard.  Every hot-path op is purely local — zero cross-device traffic.
+Pools not divisible by the device count are padded up
+(``n_slots_padded``); the dead tail slots are never acquirable, stay
+"never written", and read as all-zero surfaces.  Per-slot results are
+bit-identical to the single-device engine at any device count: the math
+per slot never changes, only where the slot lives.
 """
 from __future__ import annotations
 
@@ -34,6 +46,11 @@ from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from repro.core import edram
 from repro.core import stcf as stcf_mod
@@ -102,8 +119,11 @@ class EngineState(NamedTuple):
     generation: jax.Array       # (S,) int32 — bumped on every acquire
 
 
-def init_state(cfg: TSEngineConfig) -> EngineState:
-    s, p, h, w = cfg.n_slots, cfg.polarities, cfg.h, cfg.w
+def init_state(cfg: TSEngineConfig, n_slots: Optional[int] = None) -> EngineState:
+    """Fresh pool state; ``n_slots`` overrides the config for padded
+    (device-divisible) pools in sharded mode."""
+    s = cfg.n_slots if n_slots is None else n_slots
+    p, h, w = cfg.polarities, cfg.h, cfg.w
     return EngineState(
         surfaces=ts.SurfaceState(
             sae=jnp.full((s, p, h, w), ts.NEVER, jnp.float32),
@@ -118,18 +138,14 @@ def init_state(cfg: TSEngineConfig) -> EngineState:
 # jit'd state transitions (pure; the engine class only does host bookkeeping)
 # ----------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("polarities",))
-def ingest_step(
+def _scatter_chunks(
     state: EngineState,
     slot_ids: jax.Array,     # (B,) int32 — target slot per chunk
     ev: ts.EventBatch,       # (B, N) fields — one padded chunk per row
-    polarities: int = 1,
+    polarities: int,
 ) -> EngineState:
-    """Scatter B event chunks into their slots in one fused max-combine.
-
-    Duplicate slot ids in one call are fine (max/add combine); padding
-    events carry t=-inf and never win the max.  O(B*N) writes total.
-    """
+    """The fused max-combine scatter body, shared by the single-device jit
+    and the per-shard ``shard_map`` local step (slot ids are then local)."""
     sur = state.surfaces
     pol = ev.p if polarities > 1 else jnp.zeros_like(ev.p)
     t = jnp.where(ev.valid, ev.t, ts.NEVER)
@@ -144,6 +160,21 @@ def ingest_step(
     return state._replace(
         surfaces=ts.SurfaceState(sae=sae, t_last=t_last, n_events=n_events)
     )
+
+
+@functools.partial(jax.jit, static_argnames=("polarities",))
+def ingest_step(
+    state: EngineState,
+    slot_ids: jax.Array,     # (B,) int32 — target slot per chunk
+    ev: ts.EventBatch,       # (B, N) fields — one padded chunk per row
+    polarities: int = 1,
+) -> EngineState:
+    """Scatter B event chunks into their slots in one fused max-combine.
+
+    Duplicate slot ids in one call are fine (max/add combine); padding
+    events carry t=-inf and never win the max.  O(B*N) writes total.
+    """
+    return _scatter_chunks(state, slot_ids, ev, polarities)
 
 
 @functools.partial(
@@ -194,6 +225,142 @@ def reset_slot(
 
 
 # ----------------------------------------------------------------------------
+# device-parallel plan: shard_map'd state transitions over the slot axis
+# ----------------------------------------------------------------------------
+
+class _ShardPlan:
+    """Per-engine compiled plan for a slot pool sharded over a mesh.
+
+    Every function here is ``shard_map`` over the mesh's data axes with the
+    slot axis split, so the hot path (ingest scatter, batched ts_decay /
+    STCF readout) is embarrassingly data-parallel: each device owns
+    ``slots_per_shard`` slots and runs the exact single-device computation
+    on them — no collectives anywhere in the lowered program.
+    """
+
+    def __init__(self, cfg: TSEngineConfig, mesh: Mesh):
+        # deferred: distributed.sharding pulls the model stack, which the
+        # single-device engine never needs
+        from repro.distributed import sharding as shd
+
+        self.mesh = mesh
+        self.axes = shd.data_axes(mesh)
+        self.n_shards = shd.slot_shard_count(mesh)
+        self.n_slots_padded = shd.pad_pool(cfg.n_slots, mesh)
+        self.slots_per_shard = self.n_slots_padded // self.n_shards
+        self.sharding = shd.slot_pool_sharding(mesh)
+        spec = shd.slot_pool_spec(mesh)
+        rep = P()
+        # v_tw is a *static* threshold in kernels.ops (part of the jit
+        # key), so closing over it matches the single-device path; decay
+        # params stay runtime arguments — baking them in as shard_map
+        # closure constants lets XLA constant-fold the transcendentals
+        # differently and costs bit-identity with the unsharded engine.
+        v_tw = cfg.v_tw()
+        backend = ops.resolve_backend(cfg.backend)
+
+        def smap(fn, in_specs, out_specs):
+            return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, check=False)
+
+        def local_ingest(state, slot_ids, ev):
+            # slot_ids are *local* (host routing already picked the shard)
+            return _scatter_chunks(state, slot_ids, ev, cfg.polarities)
+
+        self.ingest = jax.jit(
+            smap(local_ingest, (spec, spec, spec), spec), donate_argnums=0,
+        )
+
+        def shard_offset():
+            """First global slot id owned by this device (major-to-minor
+            over the data axes, matching PartitionSpec((a1, a2)) order)."""
+            gid = jnp.int32(0)
+            for a in self.axes:
+                gid = gid * mesh.shape[a] + lax.axis_index(a)
+            return gid * self.slots_per_shard
+
+        def local_reset(state, slot, bump):
+            hit = shard_offset() + jnp.arange(self.slots_per_shard) == slot
+            sur = state.surfaces
+            return EngineState(
+                surfaces=ts.SurfaceState(
+                    sae=jnp.where(hit[:, None, None, None], ts.NEVER, sur.sae),
+                    t_last=jnp.where(hit, 0.0, sur.t_last),
+                    n_events=jnp.where(hit, 0, sur.n_events),
+                ),
+                generation=state.generation + hit.astype(jnp.int32)
+                if bump else state.generation,
+            )
+
+        self.reset_acquire = jax.jit(smap(
+            lambda st, s: local_reset(st, s, True), (spec, rep), spec,
+        ), donate_argnums=0)
+        self.reset_release = jax.jit(smap(
+            lambda st, s: local_reset(st, s, False), (spec, rep), spec,
+        ), donate_argnums=0)
+
+        def local_readout(surfaces, t_now, params):
+            return ts.surface_read_kernel(
+                surfaces, t_now, params, block=cfg.block, backend=backend,
+            )
+
+        self.readout = jax.jit(smap(local_readout, (spec, rep, rep), spec))
+
+        def local_mask(sae, t_now, params):
+            return ops.ts_decay_with_mask(
+                sae, t_now, params, v_tw_static=v_tw, block=cfg.block,
+                backend=backend,
+            )
+
+        self.readout_with_mask = jax.jit(
+            smap(local_mask, (spec, rep, rep), (spec, spec))
+        )
+
+        def local_support(sae, t_now, params):
+            return ops.stcf_support_fused(
+                sae, params, v_tw, t_now, radius=cfg.stcf_radius,
+                backend=backend,
+            )
+
+        self.support_map = jax.jit(smap(local_support, (spec, rep, rep), spec))
+
+    def place(self, tree):
+        """Pin a slot-pool pytree to the plan's NamedSharding."""
+        return jax.device_put(tree, self.sharding)
+
+    def route(self, slot_ids: Sequence[int], chunks: Sequence["ts.EventBatch"]):
+        """Per-slot -> per-device ingest routing.
+
+        Groups chunk rows by the shard owning their slot, pads every shard
+        to a common power-of-two row count with no-op chunks (all-invalid,
+        local slot 0), and returns shard-major ``(local_slot_ids, ev)``
+        device arrays laid out so shard_map's block split hands each device
+        exactly the rows that target its slots.
+        """
+        per_shard: List[List[Tuple[int, ts.EventBatch]]] = [
+            [] for _ in range(self.n_shards)
+        ]
+        for slot, chunk in zip(slot_ids, chunks):
+            shard, local = divmod(slot, self.slots_per_shard)
+            per_shard[shard].append((local, chunk))
+        b_local = TimeSurfaceEngine._pad_batch(
+            max(len(rows) for rows in per_shard)
+        )
+        empty = jax.tree_util.tree_map(jnp.zeros_like, chunks[0])
+        sids: List[int] = []
+        rows: List[ts.EventBatch] = []
+        for shard_rows in per_shard:
+            shard_rows = shard_rows + [(0, empty)] * (b_local - len(shard_rows))
+            sids.extend(local for local, _ in shard_rows)
+            rows.extend(chunk for _, chunk in shard_rows)
+        ev = jax.tree_util.tree_map(lambda *fs: jnp.stack(fs), *rows)
+        return (
+            self.place(jnp.asarray(sids, jnp.int32)),
+            self.place(ev),
+        )
+
+
+# ----------------------------------------------------------------------------
 # the engine
 # ----------------------------------------------------------------------------
 
@@ -211,16 +378,29 @@ class TimeSurfaceEngine:
         eng.ingest([(slot, packed_aer_words)])
         surface = eng.readout(t_now)[slot]       # (P, H, W)
         eng.release(slot)
+
+    With a ``mesh`` the pool shards over the mesh's data axes (see the
+    module docstring): same API, same per-slot bits, ``n_slots_padded``
+    rows in pool-shaped outputs.
     """
 
-    def __init__(self, cfg: TSEngineConfig):
+    def __init__(self, cfg: TSEngineConfig, mesh: Optional[Mesh] = None):
         self.cfg = cfg
-        self.state = init_state(cfg)
+        self._plan = _ShardPlan(cfg, mesh) if mesh is not None else None
+        self.n_slots_padded = (
+            self._plan.n_slots_padded if self._plan else cfg.n_slots
+        )
+        state = init_state(cfg, n_slots=self.n_slots_padded)
+        self.state = self._plan.place(state) if self._plan else state
         self._free: List[int] = list(range(cfg.n_slots))
         self._params = cfg.decay_params()
         self._v_tw = cfg.v_tw()
         self._stcf_cfg = cfg.stcf_config()
         self._backend = ops.resolve_backend(cfg.backend)
+
+    @property
+    def mesh(self) -> Optional[Mesh]:
+        return self._plan.mesh if self._plan else None
 
     # -- slot pool ----------------------------------------------------------
     def acquire(self) -> int:
@@ -230,8 +410,16 @@ class TimeSurfaceEngine:
                 f"no free sensor slots (pool size {self.cfg.n_slots})"
             )
         slot = self._free.pop(0)
-        self.state = reset_slot(self.state, jnp.int32(slot))
+        self.state = self._reset(slot, bump_generation=True)
         return slot
+
+    def _reset(self, slot: int, bump_generation: bool) -> EngineState:
+        if self._plan:
+            fn = (self._plan.reset_acquire if bump_generation
+                  else self._plan.reset_release)
+            return fn(self.state, jnp.int32(slot))
+        return reset_slot(self.state, jnp.int32(slot),
+                          bump_generation=bump_generation)
 
     def _check_acquired(self, slot: int) -> None:
         if not 0 <= slot < self.cfg.n_slots:
@@ -244,8 +432,7 @@ class TimeSurfaceEngine:
     def release(self, slot: int) -> None:
         """Free a slot, wiping its surface (released slots read as zero)."""
         self._check_acquired(slot)
-        self.state = reset_slot(self.state, jnp.int32(slot),
-                                bump_generation=False)
+        self.state = self._reset(slot, bump_generation=False)
         self._free.append(slot)
         self._free.sort()
 
@@ -299,11 +486,16 @@ class TimeSurfaceEngine:
         support of its events against the slot's surface (concatenated over
         split chunks) and the signal verdicts ``support >= threshold``.
 
-        The plain path fuses every chunk into one scatter call.  The
-        ``with_support`` path instead processes chunks *sequentially* —
-        each chunk's support sees all earlier chunks' writes — which makes
-        the labels exactly those of the offline ``stcf_chunked`` scan with
-        ``chunk=chunk_capacity``, at the cost of one jit call per chunk.
+        The plain path fuses every chunk into one scatter call; on a
+        sharded engine each chunk row is routed to the device owning its
+        slot and scattered locally under ``shard_map`` (donated state, no
+        collectives).  The ``with_support`` path instead processes chunks
+        *sequentially* — each chunk's support sees all earlier chunks'
+        writes — which makes the labels exactly those of the offline
+        ``stcf_chunked`` scan with ``chunk=chunk_capacity``, at the cost of
+        one jit call per chunk (on a sharded engine this labeling path runs
+        through the global gather/scatter, not the data-parallel fast
+        path).
         """
         slot_ids: List[int] = []
         chunks: List[ts.EventBatch] = []
@@ -330,6 +522,8 @@ class TimeSurfaceEngine:
                 self.state = ingest_step(
                     self.state, sid, ev1, polarities=self.cfg.polarities
                 )
+            if self._plan:  # re-pin: the global scatter may drop the layout
+                self.state = self._plan.place(self.state)
             sup_np = np.concatenate([np.asarray(s)[0] for s in sups])
             valid = np.concatenate([np.asarray(v) for v in valids])
             cap = self.cfg.chunk_capacity
@@ -339,6 +533,11 @@ class TimeSurfaceEngine:
                 v = valid[lo * cap:hi * cap]
                 out.append((s[v], s[v] >= self.cfg.stcf_threshold))
             return out
+
+        if self._plan:
+            sids, ev = self._plan.route(slot_ids, chunks)
+            self.state = self._plan.ingest(self.state, sids, ev)
+            return None
 
         b = self._pad_batch(len(chunks))
         pad = b - len(chunks)
@@ -356,12 +555,17 @@ class TimeSurfaceEngine:
     # -- readout -------------------------------------------------------------
     def readout(self, t_now) -> jax.Array:
         """Decayed TS over the whole pool: (S, P, H, W) via the ts_decay
-        kernel (dead slots read as all-zero surfaces).
+        kernel (dead slots read as all-zero surfaces); S is
+        ``n_slots_padded`` on a sharded engine.
 
         Goes through ``time_surface.surface_read_kernel`` — the same entry
         point offline readers use — so engine and offline readouts of equal
-        SAE state are bit-identical.
+        SAE state are bit-identical, sharded or not.
         """
+        if self._plan:
+            return self._plan.readout(
+                self.state.surfaces, jnp.float32(t_now), self._params
+            )
         return ts.surface_read_kernel(
             self.state.surfaces, jnp.float32(t_now), self._params,
             block=self.cfg.block, backend=self._backend,
@@ -369,6 +573,10 @@ class TimeSurfaceEngine:
 
     def readout_with_mask(self, t_now):
         """Surface plus the fused comparator mask V > V_tw: one HBM pass."""
+        if self._plan:
+            return self._plan.readout_with_mask(
+                self.state.surfaces.sae, jnp.float32(t_now), self._params
+            )
         return ops.ts_decay_with_mask(
             self.state.surfaces.sae, jnp.float32(t_now), self._params,
             v_tw_static=self._v_tw, block=self.cfg.block,
@@ -378,6 +586,10 @@ class TimeSurfaceEngine:
     def support_map(self, t_now) -> jax.Array:
         """Dense STCF support count per pixel over all slots (S, P, H, W):
         SAE -> decay -> comparator -> patch sum, fused in one kernel."""
+        if self._plan:
+            return self._plan.support_map(
+                self.state.surfaces.sae, jnp.float32(t_now), self._params
+            )
         return ops.stcf_support_fused(
             self.state.surfaces.sae, self._params, self._v_tw,
             jnp.float32(t_now), radius=self.cfg.stcf_radius,
@@ -386,11 +598,19 @@ class TimeSurfaceEngine:
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:
-        s = self.state
-        return {
-            "live": [i not in self._free for i in range(self.cfg.n_slots)],
-            "generation": np.asarray(s.generation).tolist(),
-            "n_events": np.asarray(s.surfaces.n_events).tolist(),
-            "t_last": np.asarray(s.surfaces.t_last).tolist(),
+        s, n = self.state, self.cfg.n_slots
+        out = {
+            "live": [i not in self._free for i in range(n)],
+            "generation": np.asarray(s.generation)[:n].tolist(),
+            "n_events": np.asarray(s.surfaces.n_events)[:n].tolist(),
+            "t_last": np.asarray(s.surfaces.t_last)[:n].tolist(),
             "free_slots": list(self._free),
         }
+        if self._plan:
+            out["mesh"] = {
+                "axes": list(self._plan.axes),
+                "n_shards": self._plan.n_shards,
+                "n_slots_padded": self.n_slots_padded,
+                "slots_per_shard": self._plan.slots_per_shard,
+            }
+        return out

@@ -1,0 +1,131 @@
+"""Mesh-construction unit tests: the jax-0.4.37 AxisType feature gate,
+host-device helpers, and slot-pool placement rules.
+
+``jax.sharding.AxisType`` only exists on jax >= 0.5; ``launch.mesh`` must
+build meshes on either side of that line.  Both sides are exercised here
+by monkeypatching the availability, with ``jax.make_mesh`` replaced by a
+recorder so no real >1-device mesh is needed in the fast gate (the real
+8/512-device builds run in the slow subprocess tests).
+"""
+import enum
+
+import jax
+import pytest
+
+from repro.launch import mesh as mesh_mod
+
+
+class _FakeAxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+
+
+class _Recorder:
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, shape, axes, **kwargs):
+        self.calls.append((tuple(shape), tuple(axes), kwargs))
+        return ("mesh", tuple(shape), tuple(axes))
+
+
+# ----------------------------------------------------------------------------
+# axis-type availability matrix
+# ----------------------------------------------------------------------------
+
+def test_axis_types_kwargs_absent(monkeypatch):
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    assert mesh_mod._axis_types_kwargs(2) == {}
+
+
+def test_axis_types_kwargs_present(monkeypatch):
+    monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType,
+                        raising=False)
+    kw = mesh_mod._axis_types_kwargs(3)
+    assert kw == {"axis_types": (_FakeAxisType.Auto,) * 3}
+
+
+@pytest.mark.parametrize("with_axis_type", [False, True])
+def test_make_meshes_across_axis_type_availability(monkeypatch,
+                                                   with_axis_type):
+    rec = _Recorder()
+    monkeypatch.setattr(jax, "make_mesh", rec)
+    if with_axis_type:
+        monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType,
+                            raising=False)
+    else:
+        monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+
+    mesh_mod.make_production_mesh()
+    mesh_mod.make_production_mesh(multi_pod=True)
+    mesh_mod.make_test_mesh((2, 4))
+    (s1, a1, kw1), (s2, a2, kw2), (s3, a3, kw3) = rec.calls
+    assert (s1, a1) == ((16, 16), ("data", "model"))
+    assert (s2, a2) == ((2, 16, 16), ("pod", "data", "model"))
+    assert (s3, a3) == ((2, 4), ("data", "model"))
+    for axes, kw in ((a1, kw1), (a2, kw2), (a3, kw3)):
+        if with_axis_type:
+            assert kw["axis_types"] == (_FakeAxisType.Auto,) * len(axes)
+        else:
+            assert "axis_types" not in kw
+
+
+def test_make_test_mesh_builds_on_pinned_jax():
+    """The actual pinned-jax call path (regression for the 0.4.37 break);
+    single-device shape so the fast gate needs no XLA flags."""
+    m = mesh_mod.make_test_mesh((1, 1))
+    assert dict(m.shape) == {"data": 1, "model": 1}
+
+
+# ----------------------------------------------------------------------------
+# host-device helpers
+# ----------------------------------------------------------------------------
+
+def test_make_host_mesh_default_takes_all_devices():
+    m = mesh_mod.make_host_mesh()
+    assert dict(m.shape) == {"data": len(jax.devices())}
+
+
+def test_make_host_mesh_too_many_devices_raises():
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        mesh_mod.make_host_mesh(len(jax.devices()) + 1)
+
+
+def test_ensure_host_device_count(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    n = len(jax.devices())
+    mesh_mod.ensure_host_device_count(n)   # satisfiable: no raise
+    assert f"--xla_force_host_platform_device_count={n}" in \
+        mesh_mod.os.environ["XLA_FLAGS"]
+    monkeypatch.setenv("XLA_FLAGS", "")
+    with pytest.raises(RuntimeError, match="already initialized"):
+        mesh_mod.ensure_host_device_count(n + 1)
+
+
+# ----------------------------------------------------------------------------
+# slot-pool placement rules
+# ----------------------------------------------------------------------------
+
+def test_slot_pool_rules_single_device_mesh():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = mesh_mod.make_host_mesh(1)
+    assert shd.slot_shard_count(mesh) == 1
+    assert shd.pad_pool(5, mesh) == 5
+    assert shd.slot_pool_spec(mesh) == P(("data",))
+    ns = shd.slot_pool_sharding(mesh)
+    assert ns.mesh is mesh and ns.spec == P(("data",))
+
+
+def test_pad_pool_rounds_up(monkeypatch):
+    from repro.distributed import sharding as shd
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 4, "model": 16}
+
+    assert shd.slot_shard_count(FakeMesh()) == 8
+    assert shd.pad_pool(6, FakeMesh()) == 8
+    assert shd.pad_pool(8, FakeMesh()) == 8
+    assert shd.pad_pool(9, FakeMesh()) == 16

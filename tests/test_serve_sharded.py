@@ -1,0 +1,161 @@
+"""Device-parallel serving-engine tests.
+
+The fast smoke runs the whole shard_map machinery on a 1-device mesh
+(always available, so it guards the PR gate); the slow subprocess sweep
+proves bit-identity against the unsharded engine on 2/4/8 emulated host
+devices, including a pool size that does not divide the device count.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.events import aer, datasets
+from repro.launch.mesh import make_host_mesh
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+H, W = 48, 64
+
+
+def _cfg(**kw):
+    base = dict(h=H, w=W, n_slots=4, chunk_capacity=512, mode="edram",
+                backend="interpret")
+    base.update(kw)
+    return TSEngineConfig(**base)
+
+
+def _streams(n):
+    return [
+        datasets.dnd21_like("driving" if i % 2 else "hotel_bar",
+                            h=H, w=W, duration=0.06, seed=i)
+        for i in range(n)
+    ]
+
+
+# ----------------------------------------------------------------------------
+# fast: 1-device mesh smoke (in the PR gate)
+# ----------------------------------------------------------------------------
+
+def test_sharded_engine_smoke_single_device_mesh():
+    """Full sharded path (routing, shard_map ingest/readout/reset) on a
+    1-device mesh: bit-identical to the unsharded engine."""
+    cfg = _cfg(n_slots=3)
+    streams = _streams(3)
+    words = [aer.pack(s) for s in streams]
+
+    ref = TimeSurfaceEngine(cfg)
+    eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(1))
+    assert eng.n_slots_padded == 3 and eng.mesh is not None
+
+    for e in (ref, eng):
+        slots = [e.acquire() for _ in range(3)]
+        e.ingest(list(zip(slots, words)))
+
+    np.testing.assert_array_equal(np.asarray(eng.readout(0.08)),
+                                  np.asarray(ref.readout(0.08)))
+    np.testing.assert_array_equal(np.asarray(eng.support_map(0.08)),
+                                  np.asarray(ref.support_map(0.08)))
+    v_e, m_e = eng.readout_with_mask(0.08)
+    v_r, m_r = ref.readout_with_mask(0.08)
+    np.testing.assert_array_equal(np.asarray(v_e), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(m_e), np.asarray(m_r))
+
+    # slot lifecycle through the shard_map reset path
+    eng.release(1)
+    assert float(np.asarray(eng.readout(0.1))[1].max()) == 0.0
+    assert eng.acquire() == 1
+    st = eng.stats()
+    assert st["generation"][1] == 2 and st["n_events"][1] == 0
+    assert st["mesh"]["n_shards"] == 1
+
+
+def test_sharded_engine_support_labels_match_unsharded():
+    """with_support ingest (the labeling path) on a sharded engine yields
+    the exact offline labels."""
+    cfg = _cfg(n_slots=2)
+    stream = _streams(1)[0]
+    ref = TimeSurfaceEngine(cfg)
+    eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(1))
+    (sup_r, sig_r), = ref.ingest([(ref.acquire(), stream)],
+                                 with_support=True)
+    (sup_e, sig_e), = eng.ingest([(eng.acquire(), stream)],
+                                 with_support=True)
+    np.testing.assert_array_equal(sup_e, sup_r)
+    np.testing.assert_array_equal(sig_e, sig_r)
+    np.testing.assert_array_equal(np.asarray(eng.readout(0.08)[0]),
+                                  np.asarray(ref.readout(0.08)[0]))
+
+
+# ----------------------------------------------------------------------------
+# slow: multi-device subprocess sweep
+# ----------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_matches_unsharded_1_2_4_8_devices():
+    """Bit-identical readout/support_map on 1/2/4/8 host devices, with a
+    6-slot pool (pads to 8 on 4 and 8 devices -> dead-slot masking)."""
+    script = """
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+    import numpy as np
+    from repro.events import aer, datasets
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+    H, W, N = 48, 64, 6
+    cfg = TSEngineConfig(h=H, w=W, n_slots=N, chunk_capacity=512,
+                         mode='edram', backend='interpret')
+    streams = [datasets.dnd21_like('driving' if i % 2 else 'hotel_bar',
+                                   h=H, w=W, duration=0.06, seed=i)
+               for i in range(N)]
+    words = [aer.pack(s) for s in streams]
+
+    ref = TimeSurfaceEngine(cfg)
+    ref_slots = [ref.acquire() for _ in range(N)]
+    ref.ingest(list(zip(ref_slots, words)))
+    want = np.asarray(ref.readout(0.08))
+    want_sup = np.asarray(ref.support_map(0.08))
+    v_r, m_r = ref.readout_with_mask(0.08)
+
+    for nd in (1, 2, 4, 8):
+        eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(nd))
+        assert eng.n_slots_padded == (N if nd < 4 else 8), nd
+        slots = [eng.acquire() for _ in range(N)]
+        eng.ingest(list(zip(slots, words)))
+
+        got = np.asarray(eng.readout(0.08))
+        assert (got[:N] == want).all(), f'readout differs at nd={nd}'
+        assert (np.asarray(eng.support_map(0.08))[:N] == want_sup).all(), (
+            f'support_map differs at nd={nd}')
+        v_e, m_e = eng.readout_with_mask(0.08)
+        assert (np.asarray(v_e)[:N] == np.asarray(v_r)).all(), nd
+        assert (np.asarray(m_e)[:N] == np.asarray(m_r)).all(), nd
+        # padded dead slots stay 'never written' -> all-zero surfaces
+        if eng.n_slots_padded > N:
+            assert float(got[N:].max()) == 0.0, nd
+            assert not np.asarray(m_e)[N:].any(), nd
+
+        # release + reacquire on the sharded reset path keeps the rest of
+        # the pool byte-stable
+        eng.release(slots[2])
+        assert float(np.asarray(eng.readout(0.1))[slots[2]].max()) == 0.0
+        assert eng.acquire() == slots[2]
+        after = np.asarray(eng.readout(0.08))
+        keep = [s for s in slots if s != slots[2]]
+        assert (after[keep] == want[keep]).all(), nd
+        print(f'nd={nd} OK')
+    print('SHARDED-SWEEP-OK')
+    """
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, (
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    )
+    assert "SHARDED-SWEEP-OK" in out.stdout
