@@ -1,10 +1,12 @@
 """Multi-sensor streaming demo: four event cameras share one engine.
 
 Two sensors stream a driving-like scene, two a hotel-bar-like scene; AER
-chunks arrive interleaved in 20 ms windows, the engine scatters each window
-batch under one jit, and every window we read all four surfaces with the
-fused comparator in a single batched kernel call.  Mid-run, sensor 1
-disconnects and a new sensor reuses its slot (fresh surface, no retrace).
+chunks arrive interleaved in 20 ms windows and every window's frame
+renders at the window deadline through the fused ingest->readout path
+(``ingest_and_read``): events reach the engine in two half-window bursts,
+the first read is a dense fill, and the second re-reads only the dirty
+tiles the late burst touched.  Mid-run, sensor 1 disconnects and a new
+sensor reuses its slot (fresh surface, no retrace, cache stays coherent).
 
     PYTHONPATH=src python examples/serve_sensors.py
     PYTHONPATH=src python examples/serve_sensors.py --mesh 2   # sharded pool
@@ -19,13 +21,9 @@ DURATION = 0.2
 
 
 def window(s, lo: float, hi: float) -> np.ndarray:
-    from repro.events import aer, synthetic as syn
+    from repro.events import aer
 
-    m = (s.t >= lo) & (s.t < hi)
-    return aer.pack(syn.EventStream(
-        x=s.x[m], y=s.y[m], t=s.t[m], p=s.p[m], is_signal=s.is_signal[m],
-        h=H, w=W,
-    ))
+    return aer.pack(s.window(lo, hi))
 
 
 def main() -> None:
@@ -61,6 +59,7 @@ def main() -> None:
     print(f"{len(streams)} sensors on slots {slots}: "
           f"{[s.n for s in streams]} events")
 
+    v_tw = cfg.v_tw()
     n_win = int(round(DURATION / WINDOW_S))
     for wi in range(n_win):
         lo, hi = wi * WINDOW_S, (wi + 1) * WINDOW_S
@@ -73,10 +72,15 @@ def main() -> None:
             print(f"window {wi}: sensor 1 swapped (slot {slots[1]} reused, "
                   f"generation {eng.stats()['generation'][slots[1]]})")
 
-        items = [(slot, window(s, lo, hi)) for slot, s in zip(slots, streams)]
-        eng.ingest(items)
-        v, mask = eng.readout_with_mask(hi)
-        occ = np.asarray(mask, np.float32).mean(axis=(1, 2, 3))
+        # two half-window bursts, both rendered at the window deadline:
+        # burst 1 refills the cache densely (t_now moved), burst 2 only
+        # re-reads the tiles it dirtied
+        mid = lo + WINDOW_S / 2
+        for b_lo, b_hi in ((lo, mid), (mid, hi)):
+            items = [(slot, window(s, b_lo, b_hi))
+                     for slot, s in zip(slots, streams)]
+            v = eng.ingest_and_read(items, hi)
+        occ = (np.asarray(v) > v_tw).astype(np.float32).mean(axis=(1, 2, 3))
         print(f"t={hi*1e3:5.0f} ms  occupancy per slot: "
               + "  ".join(f"{occ[s]:.3f}" for s in slots))
 

@@ -40,10 +40,19 @@ class EventStream:
 
     def sorted(self) -> "EventStream":
         o = np.argsort(self.t, kind="stable")
+        return self.take(o)
+
+    def take(self, idx) -> "EventStream":
+        """Select events by index/mask (other fields pass through)."""
         return dataclasses.replace(
-            self, x=self.x[o], y=self.y[o], t=self.t[o], p=self.p[o],
-            is_signal=self.is_signal[o],
+            self, x=self.x[idx], y=self.y[idx], t=self.t[idx],
+            p=self.p[idx], is_signal=self.is_signal[idx],
         )
+
+    def window(self, lo: float, hi: float) -> "EventStream":
+        """Events with t in [lo, hi) — the burst/window slicing every
+        streaming driver uses."""
+        return self.take((self.t >= lo) & (self.t < hi))
 
 
 # ----------------------------------------------------------------------------

@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the paper's compute hot-spots (validated in
 # interpret mode on CPU): ts_decay (array readout), stcf (fused comparator
-# + patch support), decay_scan (streaming decay recurrence).
+# + patch support), decay_scan (streaming decay recurrence), ts_fused
+# (chunk scatter + fused ingest->readout, with the dirty-tile incremental
+# variant).
 from repro.kernels import ops  # noqa: F401

@@ -22,11 +22,15 @@ import functools
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from repro.kernels import decay_scan as _dscan
 from repro.kernels import ref as _ref
 from repro.kernels import stcf as _stcf
 from repro.kernels import ts_decay as _tsd
+from repro.kernels import ts_fused as _tsf
 
 BACKENDS = ("pallas", "interpret", "ref")
 
@@ -140,6 +144,242 @@ def stcf_support_fused(
             interpret=backend == "interpret",
         )
     return _vmap_leading(fn, sae)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "backend"))
+def chunk_scatter(
+    sae: jax.Array,
+    ev,
+    block: Tuple[int, int] = (8, 128),
+    backend: Optional[str] = None,
+):
+    """Max-combine one padded event chunk into a (..., P, H, W) SAE.
+
+    ``ev`` is an ``EventBatch``-like pytree with (..., N) fields whose
+    leading dims match ``sae``'s.  Polarity merges to plane 0 when P == 1
+    (the ``sae_update`` convention); invalid *and out-of-range* events are
+    masked to ``-inf`` so they never win anywhere — jnp's ``mode="drop"``
+    wraps negative coordinates while the kernel's coordinate match never
+    fires for them, so the mask is what keeps the backends in agreement.
+    max never rounds, so every backend then produces the same bits as
+    ``jnp``'s ``.at[].max`` in any surrounding program.
+    """
+    backend = resolve_backend(backend)
+    p, h, w = sae.shape[-3:]
+    flat = sae.reshape((-1, p, h, w))
+    fev = jax.tree_util.tree_map(lambda f: f.reshape((-1, f.shape[-1])), ev)
+
+    def one(s, e):
+        pol = e.p if p > 1 else jnp.zeros_like(e.p)
+        ok = (e.valid & (e.x >= 0) & (e.x < w) & (e.y >= 0) & (e.y < h)
+              & (pol >= 0) & (pol < p))
+        t = jnp.where(ok, e.t, -jnp.inf)
+        if backend == "ref":
+            return s.at[pol, e.y, e.x].max(t, mode="drop")
+        return _tsf.chunk_scatter_pallas(
+            s.reshape(p * h, w), e.x, pol * h + e.y, t, block=block,
+            interpret=backend == "interpret",
+        ).reshape(p, h, w)
+
+    return jax.vmap(one)(flat, fev).reshape(sae.shape)
+
+
+def ts_fused(
+    sae: jax.Array,
+    ev,
+    t_now,
+    params,
+    v_tw_static: Optional[float] = None,
+    block: Tuple[int, int] = (8, 128),
+    backend: Optional[str] = None,
+):
+    """Fused chunk-scatter + decay readout over a (..., P, H, W) SAE.
+
+    Composes the ``chunk_scatter`` kernel with the *same jitted*
+    ``ts_decay`` / ``ts_decay_with_mask`` entry the unfused path runs —
+    deliberately two dispatches, not one mega-jit: inlining the decay
+    behind the scatter lets XLA re-contract the transcendentals and drift
+    by an ULP, while re-dispatching the identical compiled readout makes
+    fused == scatter-then-``ts_decay`` **bit-identical by construction**
+    on every backend (gated in ``benchmarks/bench_serve.py`` and the
+    equivalence suite; see the ``kernels.ts_fused`` module docstring).
+
+    Returns ``(new_sae, surface)``, plus the comparator mask when
+    ``v_tw_static`` is given.
+    """
+    new = chunk_scatter(sae, ev, block=block, backend=backend)
+    if v_tw_static is None:
+        return new, ts_decay(new, t_now, params, block=block,
+                             backend=backend)
+    v, m = ts_decay_with_mask(new, t_now, params, v_tw_static, block=block,
+                              backend=backend)
+    return new, v, m
+
+
+def tile_geometry(h: int, w: int, block: Tuple[int, int]):
+    """(tiles_h, tiles_w, tiles_per_plane) for one (H, W) plane under a
+    (bh, bw) tiling — the single source of the dirty-tile cache layout
+    (the engine's dirty-marking and ``ts_fused_dirty`` must agree)."""
+    bh, bw = block
+    th, tw = -(-h // bh), -(-w // bw)
+    return th, tw, th * tw
+
+
+@functools.partial(jax.jit, static_argnames=("max_dirty", "block"))
+def _gather_dirty_tiles(sae, dirty, max_dirty: int, block: Tuple[int, int]):
+    """Gather up to ``max_dirty`` dirty (bh, bw) tiles from (L, H, W)
+    planes, NEVER-padded past the edges exactly as the dense kernel pads.
+    Returns ``(tiles (K, bh, bw), idx (K,))`` with out-of-range sentinel
+    indices for the unused tail."""
+    l, h, w = sae.shape
+    bh, bw = block
+    th, tw, tpl = tile_geometry(h, w, block)
+    idx = jnp.nonzero(dirty, size=max_dirty, fill_value=l * tpl)[0]
+    li, r = idx // tpl, idx % tpl
+    ty, tx = r // tw, r % tw
+    ys = ty[:, None] * bh + jnp.arange(bh)[None, :]     # (K, bh)
+    xs = tx[:, None] * bw + jnp.arange(bw)[None, :]     # (K, bw)
+    tiles = sae[jnp.minimum(li, l - 1)[:, None, None],
+                jnp.minimum(ys, h - 1)[:, :, None],
+                jnp.minimum(xs, w - 1)[:, None, :]]
+    inb = (ys < h)[:, :, None] & (xs < w)[:, None, :]
+    return jnp.where(inb, tiles, -jnp.inf), idx
+
+
+@jax.jit
+def _patch_tiles(cache, idx, dec):
+    """Write recomputed tiles back (sentinel indices drop)."""
+    return cache.at[idx].set(dec, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _tile_surface(v, block: Tuple[int, int]):
+    """(L, H, W) surface -> (L*T, bh, bw) tiled cache layout.  Edge tiles
+    zero-pad — the decay of a NEVER cell, so dense fills and incremental
+    recomputes agree on the padding bits."""
+    l, h, w = v.shape
+    bh, bw = block
+    th, tw, tpl = tile_geometry(h, w, block)
+    vp = jnp.pad(v, ((0, 0), (0, th * bh - h), (0, tw * bw - w)))
+    return vp.reshape(l, th, bh, tw, bw).transpose(0, 1, 3, 2, 4).reshape(
+        l * tpl, bh, bw
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "block"))
+def _untile_surface(cache, h: int, w: int, block: Tuple[int, int]):
+    """(L*T, bh, bw) tiled cache -> (L, H, W) dense surface."""
+    bh, bw = block
+    th, tw, tpl = tile_geometry(h, w, block)
+    l = cache.shape[0] // tpl
+    v = cache.reshape(l, th, tw, bh, bw).transpose(0, 1, 3, 2, 4)
+    return v.reshape(l, th * bh, tw * bw)[:, :h, :w]
+
+
+def ts_fused_dirty(
+    sae: jax.Array,       # (..., H, W) post-scatter SAE planes
+    cache: jax.Array,     # (L*T, bh, bw) tiled last readout (T tiles/plane)
+    dirty: jax.Array,     # (L*T,) bool — tiles written since the cache fill
+    t_now,
+    params,
+    max_dirty: int,
+    block: Tuple[int, int] = (8, 128),
+    backend: Optional[str] = None,
+    force_dense: bool = False,
+):
+    """Dirty-tile incremental readout against a cached last readout.
+
+    The dirty-tile variant of the fused path: only the tiles a chunk
+    touched are re-read through the jitted ``ts_decay`` entry (dispatched
+    on the gathered (K, bh, bw) stack, never inlined — see ``ts_fused``)
+    and patched into the tiled cache; clean tiles keep their cached bits.
+    When more than ``max_dirty`` tiles are dirty — the host reads the
+    count, the one sync of this op — or ``force_dense`` is set (the
+    caller's ``t_now`` moved), the whole surface re-reads through the
+    *identical* ``ts_decay`` program an unfused reader runs on ``sae``,
+    so the dense fallback is bit-identical to plain readout by
+    construction; the gather never silently truncates.
+
+    Requires the invariant that clean cache tiles hold the readout of the
+    current SAE at this same ``t_now`` (the serving engine maintains it;
+    see ``TimeSurfaceEngine.ingest_and_read``).  Returns
+    ``(surface, new_cache, new_dirty)`` — surface shaped like ``sae``,
+    ``new_dirty`` all clear.
+    """
+    backend = resolve_backend(backend)
+    lead = sae.shape[:-2]
+    h, w = sae.shape[-2:]
+    _, _, tpl = tile_geometry(h, w, block)
+    l = int(np.prod(lead)) if lead else 1
+    assert cache.shape == (l * tpl,) + tuple(block), (
+        cache.shape, (l * tpl, *block))
+    assert dirty.shape == (l * tpl,), dirty.shape
+    k = max(1, min(int(max_dirty), l * tpl))
+
+    n_dirty = 0 if force_dense else int(dirty.sum())
+    if force_dense or n_dirty > k:
+        # dense refill: the exact unfused readout program; return its
+        # surface directly (tiling round-trips exactly, but why pay it)
+        v = ts_decay(sae, t_now, params, block=block, backend=backend)
+        cache = _tile_surface(v.reshape(l, h, w), block)
+        return v, cache, jnp.zeros_like(dirty)
+    if n_dirty:           # incremental: re-read only the touched tiles
+        tiles, idx = _gather_dirty_tiles(sae.reshape(l, h, w), dirty,
+                                         max_dirty=k, block=block)
+        dec = ts_decay(tiles, t_now, params, block=block, backend=backend)
+        cache = _patch_tiles(cache, idx, dec)
+    surface = _untile_surface(cache, h, w, block).reshape(lead + (h, w))
+    return surface, cache, jnp.zeros_like(dirty)
+
+
+def ts_fused_dirty_local(
+    sae: jax.Array,       # (L, H, W) post-scatter SAE planes
+    cache: jax.Array,     # (L*T, bh, bw)
+    dirty: jax.Array,     # (L*T,)
+    t_now,
+    params,
+    max_dirty: int,
+    block: Tuple[int, int] = (8, 128),
+    backend: Optional[str] = None,
+    force_dense: bool = False,
+):
+    """Traceable body of ``ts_fused_dirty`` for ``shard_map`` callers.
+
+    The sharded engine runs the whole scatter+refresh step as one
+    per-shard program (the incremental-vs-dense choice is a local
+    ``lax.cond`` on the shard's own dirty count — no host sync, no
+    collectives), which means the decay math is *inlined* here rather
+    than re-dispatched; within one engine the fused and plain readouts
+    still share one compiled program each, and the sharded suites gate
+    sharded-vs-unsharded bit-identity on the serving parameter ranges.
+    ``force_dense`` (a trace-time constant: the caller's ``t_now`` moved)
+    must take the dense branch outright — a small shard whose whole pool
+    fits under the gather cap would otherwise "refill" through the
+    incremental program.  Host callers should use ``ts_fused_dirty``
+    instead.
+    """
+    backend = resolve_backend(backend)
+    l, h, w = sae.shape
+    _, _, tpl = tile_geometry(h, w, block)
+    k = max(1, min(int(max_dirty), l * tpl))
+
+    def read(tiles):
+        return ts_decay(tiles, t_now, params, block=block, backend=backend)
+
+    def incremental(_):
+        tiles, idx = _gather_dirty_tiles(sae, dirty, max_dirty=k,
+                                         block=block)
+        return _patch_tiles(cache, idx, read(tiles))
+
+    def dense(_):
+        return _tile_surface(read(sae), block)
+
+    if force_dense:
+        new_cache = dense(None)
+    else:
+        new_cache = lax.cond(dirty.sum() <= k, incremental, dense, None)
+    surface = _untile_surface(new_cache, h, w, block)
+    return surface, new_cache, jnp.zeros_like(dirty)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "backend"))

@@ -19,6 +19,26 @@ def ts_decay_ref(sae, t_now, params, v_tw=None):
     return v, v > v_tw
 
 
+def ts_fused_ref(sae, x, y, p, t, t_now, params, v_tw=None):
+    """Oracle for kernels.ts_fused: max-combine scatter, then decay readout.
+
+    ``sae``: (P, H, W); ``x``/``y``/``p``: (N,) int32 coordinates (polarity
+    pre-merged by the caller); ``t``: (N,) float32 with invalid events
+    pre-masked to -inf (they never win the max).  Out-of-range coordinates
+    are dropped — masked here rather than left to ``mode="drop"``, which
+    only drops past-the-end indices and would wrap negative ones.
+    Returns ``(new_sae, surface)`` or ``(new_sae, surface, mask)``.
+    """
+    pp, h, w = sae.shape
+    t = jnp.where((x >= 0) & (x < w) & (y >= 0) & (y < h)
+                  & (p >= 0) & (p < pp), t, -jnp.inf)
+    new = sae.at[p, y, x].max(t, mode="drop")
+    out = ts_decay_ref(new, t_now, params, v_tw=v_tw)
+    if v_tw is None:
+        return new, out
+    return (new,) + out
+
+
 def stcf_support_ref(mask, radius, include_self=False):
     """Oracle for kernels.stcf: (2r+1)^2 patch sum of a (H, W) mask."""
     x = mask.astype(jnp.float32)

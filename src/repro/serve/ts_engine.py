@@ -25,12 +25,41 @@ the double-exponential eDRAM transient with ``a1=1, a2=0, b=0, tau1=tau``,
 so readout is bit-identical to the offline ``core.time_surface`` pipeline
 in either mode.
 
+**Fused ingest->readout path** — ``ingest_and_read(items, t_now)`` scatters
+the chunks and returns the decayed pool surface from one jit'd program
+(the serving form of the ``kernels.ops.ts_fused`` family).  Its speed
+comes from the *dirty-tile cache* carried in the slot-pool pytree
+(``ReadoutCache``):
+
+  * the last readout is cached tiled as (S, TP, block_h, block_w) next to
+    a (S, TP) dirty mask; every scatter (fused or plain ``ingest``) marks
+    the tiles its events touched,
+  * a repeat call at the **same** ``t_now`` re-reads only the dirty tiles
+    through the same ``ts_decay`` kernel and patches them into the cache
+    (``ops.ts_fused_dirty``) — O(touched tiles) transcendentals instead of
+    O(H*W), the in-sensor cost structure served,
+  * when ``t_now`` moves (tracked host-side in ``_cache_t``), or more than
+    ``max_dirty_tiles`` tiles are dirty, the call falls back to one dense
+    pass that refills the whole cache — never a wrong answer, only a
+    slower one.
+
+Cache coherence is preserved by every state transition: plain ``ingest``
+marks dirty tiles, and acquire/release wipe a slot's cache rows to zeros —
+exactly the readout of a never-written surface at any ``t_now``, so a
+reset never invalidates the pool-wide cache epoch.  Incremental and dense
+readouts are bit-identical (clean tiles hold bits the same kernel produced
+at the same ``t_now``), which ``benchmarks/bench_serve.py`` and the
+equivalence/differential suites gate.
+
 **Device-parallel mode** — pass a ``mesh`` to ``TimeSurfaceEngine`` and the
 slot pool shards its leading axis over the mesh's data axes
 (``distributed.sharding.slot_pool_sharding``).  Ingest routes each chunk to
 the device owning its slot and scatters under ``shard_map`` with donated
 state; the batched ``ts_decay``/STCF readouts run the same Pallas kernels
-per shard.  Every hot-path op is purely local — zero cross-device traffic.
+per shard.  The dirty-tile cache lives in the same pytree, so it shards
+with the pool and the incremental refresh stays collective-free: each
+shard counts its own dirty tiles and picks incremental-vs-dense locally.
+Every hot-path op is purely local — zero cross-device traffic.
 Pools not divisible by the device count are padded up
 (``n_slots_padded``); the dead tail slots are never acquirable, stay
 "never written", and read as all-zero surfaces.  Per-slot results are
@@ -78,11 +107,20 @@ class TSEngineConfig:
     stcf_radius: int = 3
     stcf_threshold: int = 2
     backend: Optional[str] = None        # kernels.ops backend selector
-    block: Tuple[int, int] = (8, 128)    # ts_decay tile
+    block: Tuple[int, int] = (8, 128)    # ts_decay tile (= dirty-tile size)
+    max_dirty_tiles: int = 0             # incremental-readout gather cap;
+    # 0 = auto (a quarter of the pool's tiles, at least 16).  On a sharded
+    # engine the cap applies per shard.  Overflow falls back to one dense
+    # pass — correctness never depends on this knob.
 
     def __post_init__(self):
         assert self.mode in ("edram", "ideal"), self.mode
         ops.resolve_backend(self.backend)  # fail fast on typos
+
+    def tile_counts(self) -> Tuple[int, int, int]:
+        """(tiles_h, tiles_w, tiles_per_slot) for the dirty-tile cache."""
+        th, tw, tpl = ops.tile_geometry(self.h, self.w, self.block)
+        return th, tw, self.polarities * tpl
 
     def decay_params(self) -> edram.DecayParams:
         """Uniform decay params; ideal TS as a degenerate double-exp."""
@@ -108,6 +146,21 @@ class TSEngineConfig:
         )
 
 
+class ReadoutCache(NamedTuple):
+    """Dirty-tile readout cache, one row per slot (shards with the pool).
+
+    ``tiles`` holds the last readout in tiled layout — tile ``(p, ty, tx)``
+    of slot ``s`` at flat index ``(p*TH + ty)*TW + tx`` — edge tiles padded
+    exactly as the dense ``ts_decay`` pads (NEVER -> 0), so a tile patched
+    incrementally is bit-identical to its dense counterpart.  A zeroed row
+    is the correct readout of a never-written slot at *any* ``t_now``,
+    which is what makes slot resets cache-coherent for free.
+    """
+
+    tiles: jax.Array   # (S, TP, bh, bw) float32 — tiled last dense readout
+    dirty: jax.Array   # (S, TP) bool — tiles written since the cache fill
+
+
 class EngineState(NamedTuple):
     """The full slot pool as one pytree (leading axis = slot).
 
@@ -117,6 +170,7 @@ class EngineState(NamedTuple):
 
     surfaces: ts.SurfaceState   # sae (S, P, H, W), t_last (S,), n_events (S,)
     generation: jax.Array       # (S,) int32 — bumped on every acquire
+    cache: ReadoutCache         # dirty-tile readout cache (see above)
 
 
 def init_state(cfg: TSEngineConfig, n_slots: Optional[int] = None) -> EngineState:
@@ -124,6 +178,8 @@ def init_state(cfg: TSEngineConfig, n_slots: Optional[int] = None) -> EngineStat
     (device-divisible) pools in sharded mode."""
     s = cfg.n_slots if n_slots is None else n_slots
     p, h, w = cfg.polarities, cfg.h, cfg.w
+    bh, bw = cfg.block
+    _, _, tp = cfg.tile_counts()
     return EngineState(
         surfaces=ts.SurfaceState(
             sae=jnp.full((s, p, h, w), ts.NEVER, jnp.float32),
@@ -131,6 +187,10 @@ def init_state(cfg: TSEngineConfig, n_slots: Optional[int] = None) -> EngineStat
             n_events=jnp.zeros((s,), jnp.int32),
         ),
         generation=jnp.zeros((s,), jnp.int32),
+        cache=ReadoutCache(
+            tiles=jnp.zeros((s, tp, bh, bw), jnp.float32),
+            dirty=jnp.zeros((s, tp), bool),
+        ),
     )
 
 
@@ -145,20 +205,39 @@ def _scatter_chunks(
     polarities: int,
 ) -> EngineState:
     """The fused max-combine scatter body, shared by the single-device jit
-    and the per-shard ``shard_map`` local step (slot ids are then local)."""
+    and the per-shard ``shard_map`` local step (slot ids are then local).
+
+    Also marks the dirty-tile cache: every (slot, tile) a valid event
+    lands in is flagged so a later incremental readout knows what to
+    recompute.  Tile geometry is derived from the state's array shapes —
+    no extra static arguments.
+
+    Out-of-range coordinates are masked invalid up front: jnp's
+    ``mode="drop"`` only drops *past-the-end* indices and silently wraps
+    negative ones, which would scatter into the wrong column AND mark the
+    wrong dirty tile (``-1 // bw`` floors), serving a stale cached tile.
+    """
     sur = state.surfaces
+    h, w = sur.sae.shape[-2:]
     pol = ev.p if polarities > 1 else jnp.zeros_like(ev.p)
-    t = jnp.where(ev.valid, ev.t, ts.NEVER)
+    valid = (ev.valid & (ev.x >= 0) & (ev.x < w) & (ev.y >= 0)
+             & (ev.y < h) & (pol >= 0) & (pol < sur.sae.shape[1]))
+    t = jnp.where(valid, ev.t, ts.NEVER)
     sid = jnp.broadcast_to(slot_ids[:, None], ev.t.shape)
     sae = sur.sae.at[sid, pol, ev.y, ev.x].max(t, mode="drop")
     t_last = sur.t_last.at[slot_ids].max(
         t.max(axis=1, initial=ts.NEVER), mode="drop"
     )
     n_events = sur.n_events.at[slot_ids].add(
-        ev.valid.sum(axis=1).astype(jnp.int32), mode="drop"
+        valid.sum(axis=1).astype(jnp.int32), mode="drop"
     )
+    bh, bw = state.cache.tiles.shape[-2:]
+    th, tw, _ = ops.tile_geometry(h, w, (bh, bw))
+    tid = (pol * th + ev.y // bh) * tw + ev.x // bw
+    dirty = state.cache.dirty.at[sid, tid].max(valid, mode="drop")
     return state._replace(
-        surfaces=ts.SurfaceState(sae=sae, t_last=t_last, n_events=n_events)
+        surfaces=ts.SurfaceState(sae=sae, t_last=t_last, n_events=n_events),
+        cache=state.cache._replace(dirty=dirty),
     )
 
 
@@ -211,7 +290,9 @@ def reset_slot(
     state: EngineState, slot: jax.Array, bump_generation: bool = True,
 ) -> EngineState:
     """Wipe one slot back to 'never written'; acquire also bumps its
-    generation, release just wipes."""
+    generation, release just wipes.  The slot's cache row resets to zeros
+    (the readout of a never-written surface at any ``t_now``) with no
+    dirty tiles, so resets keep the pool-wide cache epoch valid."""
     sur = state.surfaces
     gen = state.generation
     return EngineState(
@@ -221,7 +302,46 @@ def reset_slot(
             n_events=sur.n_events.at[slot].set(0),
         ),
         generation=gen.at[slot].add(1) if bump_generation else gen,
+        cache=ReadoutCache(
+            tiles=state.cache.tiles.at[slot].set(0.0),
+            dirty=state.cache.dirty.at[slot].set(False),
+        ),
     )
+
+
+def _read_refresh(
+    state: EngineState,
+    t_now,
+    params,
+    *,
+    max_dirty: int,
+    block: Tuple[int, int],
+    backend: str,
+    refresh_all: bool,
+) -> Tuple[EngineState, jax.Array]:
+    """Traceable dirty-tile cache refresh at ``t_now`` (pool surface out).
+
+    The ``shard_map`` local step of the sharded fused path: runs
+    ``ops.ts_fused_dirty_local`` — the inline form whose
+    incremental-vs-dense choice is a shard-local ``lax.cond`` (no host
+    sync, no collectives).  ``refresh_all`` (a trace-time constant — the
+    plan compiles one dense and one incremental entry) forces the dense
+    refill used when ``t_now`` moved or the cache is cold.  The
+    single-device engine instead host-orchestrates ``ops.ts_fused_dirty``
+    directly (see ``ingest_and_read``)."""
+    s, p, h, w = state.surfaces.sae.shape
+    tp = state.cache.dirty.shape[1]
+    bh, bw = state.cache.tiles.shape[-2:]
+    surface, tiles, dirty = ops.ts_fused_dirty_local(
+        state.surfaces.sae.reshape(s * p, h, w),
+        state.cache.tiles.reshape(s * tp, bh, bw),
+        state.cache.dirty.reshape(s * tp),
+        jnp.float32(t_now), params, max_dirty=max_dirty, block=block,
+        backend=backend, force_dense=refresh_all,
+    )
+    cache = ReadoutCache(tiles=tiles.reshape(s, tp, bh, bw),
+                         dirty=dirty.reshape(s, tp))
+    return state._replace(cache=cache), surface.reshape(s, p, h, w)
 
 
 # ----------------------------------------------------------------------------
@@ -290,6 +410,11 @@ class _ShardPlan:
                 ),
                 generation=state.generation + hit.astype(jnp.int32)
                 if bump else state.generation,
+                cache=ReadoutCache(
+                    tiles=jnp.where(hit[:, None, None, None], 0.0,
+                                    state.cache.tiles),
+                    dirty=jnp.where(hit[:, None], False, state.cache.dirty),
+                ),
             )
 
         self.reset_acquire = jax.jit(smap(
@@ -323,6 +448,50 @@ class _ShardPlan:
             )
 
         self.support_map = jax.jit(smap(local_support, (spec, rep, rep), spec))
+
+        # fused ingest->readout: scatter + dirty-tile refresh, all local.
+        # The gather cap applies per shard (each shard counts only its own
+        # dirty tiles) so the incremental-vs-dense choice needs no
+        # collectives; either choice is bit-identical.
+        _, _, tp = cfg.tile_counts()
+        self.max_dirty = cfg.max_dirty_tiles or max(
+            16, self.slots_per_shard * tp // 4
+        )
+
+        def local_ingest_read(refresh_all):
+            def f(state, slot_ids, ev, t_now, params):
+                state = _scatter_chunks(state, slot_ids, ev, cfg.polarities)
+                return _read_refresh(
+                    state, t_now, params, max_dirty=self.max_dirty,
+                    block=cfg.block, backend=backend,
+                    refresh_all=refresh_all,
+                )
+            return f
+
+        io_specs = ((spec, spec, spec, rep, rep), (spec, spec))
+        self.ingest_read_dense = jax.jit(
+            smap(local_ingest_read(True), *io_specs), donate_argnums=0,
+        )
+        self.ingest_read_inc = jax.jit(
+            smap(local_ingest_read(False), *io_specs), donate_argnums=0,
+        )
+
+        # pure cached reads (ingest_and_read with no payload): same
+        # refresh, no scatter
+        def local_refresh(refresh_all):
+            def f(state, t_now, params):
+                return _read_refresh(
+                    state, t_now, params, max_dirty=self.max_dirty,
+                    block=cfg.block, backend=backend,
+                    refresh_all=refresh_all,
+                )
+            return f
+
+        r_specs = ((spec, rep, rep), (spec, spec))
+        self.refresh_dense = jax.jit(smap(local_refresh(True), *r_specs),
+                                     donate_argnums=0)
+        self.refresh_inc = jax.jit(smap(local_refresh(False), *r_specs),
+                                   donate_argnums=0)
 
     def place(self, tree):
         """Pin a slot-pool pytree to the plan's NamedSharding."""
@@ -397,6 +566,15 @@ class TimeSurfaceEngine:
         self._v_tw = cfg.v_tw()
         self._stcf_cfg = cfg.stcf_config()
         self._backend = ops.resolve_backend(cfg.backend)
+        # dirty-tile cache epoch: the t_now the cache tiles were read at
+        # (None = cold).  Device state tracks *which* tiles are stale;
+        # the host tracks *when* the clean ones were computed.
+        self._cache_t: Optional[float] = None
+        _, _, tp = cfg.tile_counts()
+        self._max_dirty = (
+            self._plan.max_dirty if self._plan
+            else cfg.max_dirty_tiles or max(16, self.n_slots_padded * tp // 4)
+        )
 
     @property
     def mesh(self) -> Optional[Mesh]:
@@ -472,6 +650,31 @@ class TimeSurfaceEngine:
             b *= 2
         return b
 
+    def _collect(self, items: Sequence[IngestItem]):
+        """Normalize ingest items to (slot_ids, chunks, per-item spans)."""
+        slot_ids: List[int] = []
+        chunks: List[ts.EventBatch] = []
+        spans: List[Tuple[int, int]] = []
+        for slot, payload in items:
+            self._check_acquired(slot)
+            cs = self._as_chunks(payload)
+            spans.append((len(chunks), len(chunks) + len(cs)))
+            chunks.extend(cs)
+            slot_ids.extend([slot] * len(cs))
+        return slot_ids, chunks, spans
+
+    def _stack_chunks(self, slot_ids: List[int], chunks: List[ts.EventBatch]):
+        """Pad the batch to a power of two and stack to (B, N) device arrays
+        (pad rows are all-invalid chunks aimed at slot 0: scatter no-ops)."""
+        b = self._pad_batch(len(chunks))
+        pad = b - len(chunks)
+        if pad:
+            empty = jax.tree_util.tree_map(jnp.zeros_like, chunks[0])
+            chunks = chunks + [empty] * pad
+            slot_ids = slot_ids + [0] * pad
+        ev = jax.tree_util.tree_map(lambda *fs: jnp.stack(fs), *chunks)
+        return jnp.asarray(slot_ids, jnp.int32), ev
+
     def ingest(
         self,
         items: Sequence[IngestItem],
@@ -497,15 +700,7 @@ class TimeSurfaceEngine:
         through the global gather/scatter, not the data-parallel fast
         path).
         """
-        slot_ids: List[int] = []
-        chunks: List[ts.EventBatch] = []
-        spans: List[Tuple[int, int]] = []   # chunk range per input item
-        for slot, payload in items:
-            self._check_acquired(slot)
-            cs = self._as_chunks(payload)
-            spans.append((len(chunks), len(chunks) + len(cs)))
-            chunks.extend(cs)
-            slot_ids.extend([slot] * len(cs))
+        slot_ids, chunks, spans = self._collect(items)
         if not chunks:
             return [] if with_support else None
 
@@ -539,18 +734,73 @@ class TimeSurfaceEngine:
             self.state = self._plan.ingest(self.state, sids, ev)
             return None
 
-        b = self._pad_batch(len(chunks))
-        pad = b - len(chunks)
-        if pad:
-            empty = jax.tree_util.tree_map(jnp.zeros_like, chunks[0])
-            chunks.extend([empty] * pad)
-            slot_ids.extend([0] * pad)  # all-invalid: scatter is a no-op
-        ev = jax.tree_util.tree_map(lambda *fs: jnp.stack(fs), *chunks)
-        sids = jnp.asarray(slot_ids, jnp.int32)
+        sids, ev = self._stack_chunks(slot_ids, chunks)
         self.state = ingest_step(
             self.state, sids, ev, polarities=self.cfg.polarities
         )
         return None
+
+    def ingest_and_read(self, items: Sequence[IngestItem], t_now) -> jax.Array:
+        """Scatter event payloads and read the whole pool at ``t_now`` in
+        one fused jit'd program; returns (S, P, H, W) like ``readout``.
+
+        Consecutive calls at the **same** ``t_now`` take the dirty-tile
+        incremental path: only the tiles this call's chunks (plus any
+        interleaved plain ``ingest``) touched are re-read through the
+        ``ts_decay`` kernel; every clean tile comes from the cache filled
+        by the previous call.  When ``t_now`` moves, the cache is cold, or
+        more than ``max_dirty_tiles`` tiles are dirty, the call refills
+        the cache with one dense pass — the *identical* compiled program
+        ``readout`` runs, so fused and plain readouts are bit-identical
+        (see ``ops.ts_fused_dirty``).  An empty ``items`` list is a pure
+        cached read.
+
+        On a sharded engine the whole step instead runs per shard under
+        ``shard_map`` with donated state: the dirty mask, cache, and
+        incremental-vs-dense choice are all shard-local (no collectives,
+        no host sync).
+        """
+        slot_ids, chunks, _ = self._collect(items)
+        refresh_all = (
+            self._cache_t is None or float(t_now) != self._cache_t
+        )
+        if self._plan:
+            if chunks:
+                sids, ev = self._plan.route(slot_ids, chunks)
+                fn = (self._plan.ingest_read_dense if refresh_all
+                      else self._plan.ingest_read_inc)
+                self.state, surface = fn(
+                    self.state, sids, ev, jnp.float32(t_now), self._params
+                )
+            else:   # pure cached read: refresh only, no scatter
+                fn = (self._plan.refresh_dense if refresh_all
+                      else self._plan.refresh_inc)
+                self.state, surface = fn(
+                    self.state, jnp.float32(t_now), self._params
+                )
+        else:
+            state = self.state
+            if chunks:
+                sids, ev = self._stack_chunks(slot_ids, chunks)
+                state = ingest_step(state, sids, ev,
+                                    polarities=self.cfg.polarities)
+            s, p, h, w = state.surfaces.sae.shape
+            tp = state.cache.dirty.shape[1]
+            bh, bw = self.cfg.block
+            surface, tiles, dirty = ops.ts_fused_dirty(
+                state.surfaces.sae,
+                state.cache.tiles.reshape(s * tp, bh, bw),
+                state.cache.dirty.reshape(s * tp),
+                jnp.float32(t_now), self._params,
+                max_dirty=self._max_dirty, block=self.cfg.block,
+                backend=self._backend, force_dense=refresh_all,
+            )
+            self.state = state._replace(cache=ReadoutCache(
+                tiles=tiles.reshape(s, tp, bh, bw),
+                dirty=dirty.reshape(s, tp),
+            ))
+        self._cache_t = float(t_now)
+        return surface
 
     # -- readout -------------------------------------------------------------
     def readout(self, t_now) -> jax.Array:
@@ -605,6 +855,9 @@ class TimeSurfaceEngine:
             "n_events": np.asarray(s.surfaces.n_events)[:n].tolist(),
             "t_last": np.asarray(s.surfaces.t_last)[:n].tolist(),
             "free_slots": list(self._free),
+            "dirty_tiles": int(np.asarray(s.cache.dirty).sum()),
+            "cache_t": self._cache_t,
+            "max_dirty_tiles": self._max_dirty,
         }
         if self._plan:
             out["mesh"] = {

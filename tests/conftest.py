@@ -1,0 +1,22 @@
+"""Shared pytest config: hypothesis profiles for deterministic CI runs.
+
+The ``ci`` profile (selected with ``HYPOTHESIS_PROFILE=ci``, as the CI
+workflow does) is derandomized with a fixed example budget and no
+deadline, so the PR gate neither flakes on slow runners nor drifts
+between runs; ``dev`` keeps random exploration for local hunting.
+Property suites guard their hypothesis import (``skipif``/``importorskip``)
+so environments without hypothesis still run every deterministic test.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # hypothesis-driven tests skip themselves
+    pass
+else:
+    _COMMON = dict(deadline=None,
+                   suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("ci", derandomize=True, max_examples=20,
+                              **_COMMON)
+    settings.register_profile("dev", max_examples=25, **_COMMON)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

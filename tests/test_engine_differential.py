@@ -1,0 +1,288 @@
+"""Stateful differential test: the serving engine vs the offline oracle.
+
+A model-based harness drives random interleavings of
+``acquire`` / ``ingest`` / ``readout`` / ``release`` / ``ingest_and_read``
+(plus the ``with_support`` labeling path) against ``TimeSurfaceEngine``
+while an *oracle* replays the same event log through the offline
+primitives — ``core.time_surface.surface_init/update`` folded per slot and
+read through the shared ``surface_read_kernel`` entry point, with STCF
+labels from the same ``stcf_chunk_support`` scan ``stcf_chunked`` uses.
+Every read asserts **bitwise** identity per live slot (and all-zero
+surfaces for free slots), so any drift between the streaming engine and
+the offline pipeline — scatter semantics, chunk splitting, dirty-tile
+cache staleness, reset leaks — surfaces as a failing step sequence.
+
+The walk logic lives in ``EngineModel``; two drivers run it:
+
+  * a deterministic seeded walk (runs everywhere, no optional deps),
+  * a hypothesis ``RuleBasedStateMachine`` (CI; shrinks the failing
+    interleaving to a minimal program).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stcf
+from repro.core import time_surface as ts
+from repro.events import synthetic as syn
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+try:
+    import hypothesis as hyp
+    import hypothesis.strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine, initialize, invariant, precondition, rule,
+    )
+except ImportError:
+    hyp = None
+
+H, W = 24, 32
+CAP = 64          # small capacity so streams routinely split host-side
+T_READS = (0.03, 0.05, 0.08)   # includes reads older than newest writes
+
+
+def _cfg(mode):
+    return TSEngineConfig(h=H, w=W, n_slots=3, chunk_capacity=CAP,
+                          mode=mode, backend="interpret", block=(8, 16))
+
+
+class EngineModel:
+    """The engine under test + the offline oracle, one method per action."""
+
+    def __init__(self, mode="edram"):
+        self.cfg = _cfg(mode)
+        self.eng = TimeSurfaceEngine(self.cfg)
+        self.params = self.cfg.decay_params()
+        self.oracle = {}       # slot -> SurfaceState
+        self.counts = {}       # slot -> ingested valid-event count
+
+    # -- actions ------------------------------------------------------------
+    def acquire(self):
+        if self.eng.n_live == self.cfg.n_slots:
+            with pytest.raises(RuntimeError):
+                self.eng.acquire()
+            return None
+        slot = self.eng.acquire()
+        self.oracle[slot] = ts.surface_init(H, W)
+        self.counts[slot] = 0
+        return slot
+
+    def release(self, slot):
+        if slot not in self.oracle:
+            with pytest.raises(ValueError):
+                self.eng.release(slot)
+            return
+        self.eng.release(slot)
+        del self.oracle[slot]
+        del self.counts[slot]
+
+    def _stream(self, rng, n):
+        """A random time-sorted host stream (may exceed chunk capacity)."""
+        return syn.EventStream(
+            x=rng.integers(0, W, n).astype(np.int32),
+            y=rng.integers(0, H, n).astype(np.int32),
+            t=np.sort(rng.random(n).astype(np.float32) * 0.06),
+            p=rng.integers(0, 2, n).astype(np.int32),
+            is_signal=np.ones(n, bool), h=H, w=W,
+        )
+
+    def _oracle_ingest(self, slot, stream):
+        batch = ts.EventBatch(
+            x=jnp.asarray(stream.x), y=jnp.asarray(stream.y),
+            t=jnp.asarray(stream.t), p=jnp.asarray(stream.p),
+            valid=jnp.ones(stream.n, bool),
+        )
+        self.oracle[slot] = ts.surface_update(self.oracle[slot], batch)
+        self.counts[slot] += stream.n
+
+    def ingest(self, rng, slot, n_events):
+        if slot not in self.oracle:
+            return
+        stream = self._stream(rng, n_events)
+        self.eng.ingest([(slot, stream)])
+        self._oracle_ingest(slot, stream)
+
+    def ingest_with_support(self, rng, slot, n_events):
+        """The labeling path: engine labels vs the offline per-chunk scan
+        (later chunks see earlier chunks' writes — ``stcf_chunked``'s
+        exact semantics at chunk = chunk_capacity)."""
+        if slot not in self.oracle:
+            return
+        stream = self._stream(rng, n_events)
+        (sup, sig), = self.eng.ingest([(slot, stream)], with_support=True)
+
+        scfg = self.cfg.stcf_config()
+        params, v_tw = stcf.resolve_edram(scfg, self.cfg.mode)
+        sae = self.oracle[slot].sae
+        want_sup = []
+        for lo in range(0, max(stream.n, 1), CAP):
+            sub = dataclasses.replace(
+                stream, x=stream.x[lo:lo + CAP], y=stream.y[lo:lo + CAP],
+                t=stream.t[lo:lo + CAP], p=stream.p[lo:lo + CAP],
+                is_signal=stream.is_signal[lo:lo + CAP],
+            )
+            batch = ts.EventBatch(
+                x=jnp.asarray(np.pad(sub.x, (0, CAP - sub.n))),
+                y=jnp.asarray(np.pad(sub.y, (0, CAP - sub.n))),
+                t=jnp.asarray(np.pad(sub.t, (0, CAP - sub.n))),
+                p=jnp.asarray(np.pad(sub.p, (0, CAP - sub.n))),
+                valid=jnp.asarray(np.pad(np.ones(sub.n, bool),
+                                         (0, CAP - sub.n))),
+            )
+            sae, s = stcf.stcf_chunk_step(
+                sae, batch, scfg, mode=self.cfg.mode, params=params,
+                v_tw=v_tw,
+            )
+            want_sup.append(np.asarray(s)[:sub.n])
+        want_sup = np.concatenate(want_sup) if want_sup else np.zeros(0)
+        np.testing.assert_array_equal(sup, want_sup)
+        np.testing.assert_array_equal(sig, want_sup >= scfg.threshold)
+        self._oracle_ingest(slot, stream)
+
+    # -- checks -------------------------------------------------------------
+    def _check_surface(self, got):
+        got = np.asarray(got)
+        for slot in range(self.cfg.n_slots):
+            if slot in self.oracle:
+                want = ts.surface_read_kernel(
+                    self.oracle[slot], jnp.float32(self._t), self.params,
+                    block=self.cfg.block, backend="interpret",
+                )
+                assert (got[slot] == np.asarray(want)).all(), (
+                    f"slot {slot} readout != offline oracle (t={self._t})"
+                )
+            else:
+                assert (got[slot] == 0.0).all(), (
+                    f"free slot {slot} must read all-zero"
+                )
+
+    def readout(self, t):
+        self._t = t
+        self._check_surface(self.eng.readout(t))
+
+    def ingest_and_read(self, rng, slot, n_events, t):
+        if slot in self.oracle:
+            stream = self._stream(rng, n_events)
+            items = [(slot, stream)]
+        else:
+            stream, items = None, []
+        surf = self.eng.ingest_and_read(items, t)
+        if stream is not None:
+            self._oracle_ingest(slot, stream)
+        self._t = t
+        self._check_surface(surf)
+
+    def check_counts(self):
+        stats = self.eng.stats()
+        for slot, n in self.counts.items():
+            assert stats["n_events"][slot] == n
+            assert int(np.asarray(self.oracle[slot].n_events)) == n
+
+
+# ---------------------------------------------------------------------------
+# driver 1: deterministic seeded walk (runs everywhere)
+# ---------------------------------------------------------------------------
+
+def _walk(model, rng, n_steps):
+    slots = range(model.cfg.n_slots)
+    for _ in range(n_steps):
+        action = rng.integers(0, 7)
+        if action == 0:
+            model.acquire()
+        elif action == 1:
+            model.release(int(rng.choice(list(slots))))
+        elif action == 2:
+            model.ingest(rng, int(rng.choice(list(slots))),
+                         int(rng.integers(0, 3 * CAP)))
+        elif action == 3:
+            model.readout(float(rng.choice(T_READS)))
+        elif action == 4:
+            model.ingest_and_read(rng, int(rng.choice(list(slots))),
+                                  int(rng.integers(0, 2 * CAP)),
+                                  float(rng.choice(T_READS)))
+        elif action == 5:
+            model.ingest_with_support(rng, int(rng.choice(list(slots))),
+                                      int(rng.integers(1, 2 * CAP)))
+        else:
+            model.check_counts()
+    model.check_counts()
+
+
+@pytest.mark.parametrize("mode", ["edram", "ideal"])
+@pytest.mark.parametrize("seed", range(3))
+def test_differential_walk(mode, seed):
+    model = EngineModel(mode)
+    model.acquire()      # start with one live slot so early steps bite
+    _walk(model, np.random.default_rng((seed, mode == "edram")), 25)
+
+
+def test_differential_repeated_reads_same_t():
+    """Hammer the dirty-tile cache: many ingests all read at one t_now."""
+    model = EngineModel("edram")
+    rng = np.random.default_rng(7)
+    a = model.acquire()
+    b = model.acquire()
+    for i in range(6):
+        model.ingest_and_read(rng, a if i % 2 else b,
+                              int(rng.integers(1, CAP)), 0.08)
+    model.release(a)
+    model.ingest_and_read(rng, b, 16, 0.08)   # cache epoch survives reset
+    model.acquire()
+    model.ingest_and_read(rng, b, 16, 0.08)
+    model.check_counts()
+
+
+# ---------------------------------------------------------------------------
+# driver 2: hypothesis state machine (CI; shrinks failing interleavings)
+# ---------------------------------------------------------------------------
+
+if hyp is not None:
+
+    SLOT_IDS = st.integers(0, 2)
+    N_EVENTS = st.integers(0, 2 * CAP)
+    T_NOW = st.sampled_from(T_READS)
+    RNG_SEED = st.integers(0, 2**31 - 1)
+
+    class EngineMachine(RuleBasedStateMachine):
+        @initialize(mode=st.sampled_from(["edram", "ideal"]))
+        def setup(self, mode):
+            self.model = EngineModel(mode)
+
+        @rule()
+        def acquire(self):
+            self.model.acquire()
+
+        @rule(slot=SLOT_IDS)
+        def release(self, slot):
+            self.model.release(slot)
+
+        @rule(seed=RNG_SEED, slot=SLOT_IDS, n=N_EVENTS)
+        def ingest(self, seed, slot, n):
+            self.model.ingest(np.random.default_rng(seed), slot, n)
+
+        @rule(seed=RNG_SEED, slot=SLOT_IDS, n=st.integers(1, 2 * CAP))
+        def ingest_with_support(self, seed, slot, n):
+            self.model.ingest_with_support(
+                np.random.default_rng(seed), slot, n)
+
+        @rule(t=T_NOW)
+        def readout(self, t):
+            self.model.readout(t)
+
+        @rule(seed=RNG_SEED, slot=SLOT_IDS, n=N_EVENTS, t=T_NOW)
+        def ingest_and_read(self, seed, slot, n, t):
+            self.model.ingest_and_read(
+                np.random.default_rng(seed), slot, n, t)
+
+        @precondition(lambda self: hasattr(self, "model"))
+        @invariant()
+        def counts_agree(self):
+            self.model.check_counts()
+
+    EngineMachine.TestCase.settings = hyp.settings(
+        max_examples=10, stateful_step_count=15, deadline=None,
+        suppress_health_check=[hyp.HealthCheck.too_slow],
+    )
+    TestEngineDifferentialMachine = EngineMachine.TestCase

@@ -147,6 +147,198 @@ def test_interleaved_windows_match_streaming_ts():
 
 
 # ----------------------------------------------------------------------------
+# edge cases: empty chunks, over-capacity splits, reads older than writes
+# ----------------------------------------------------------------------------
+
+def _empty_stream():
+    import numpy as np
+    from repro.events import synthetic as syn
+
+    z = np.zeros(0)
+    return syn.EventStream(x=z.astype(np.int32), y=z.astype(np.int32),
+                           t=z.astype(np.float32), p=z.astype(np.int32),
+                           is_signal=z.astype(bool), h=H, w=W)
+
+
+def test_empty_chunk_ingest_is_noop():
+    """A zero-event stream must ingest cleanly and disturb nothing —
+    through plain ingest, the labeling path, and the fused path."""
+    eng = TimeSurfaceEngine(_cfg())
+    a, b = eng.acquire(), eng.acquire()
+    eng.ingest([(a, _stream(seed=1))])
+    before = np.asarray(eng.readout(0.08))
+
+    eng.ingest([(b, _empty_stream())])
+    np.testing.assert_array_equal(np.asarray(eng.readout(0.08)), before)
+    assert eng.stats()["n_events"][b] == 0
+
+    (sup, sig), = eng.ingest([(b, _empty_stream())], with_support=True)
+    assert sup.shape == (0,) and sig.shape == (0,)
+
+    surf = eng.ingest_and_read([(b, _empty_stream())], 0.08)
+    np.testing.assert_array_equal(np.asarray(surf), before)
+    surf = eng.ingest_and_read([], 0.08)          # empty item list too
+    np.testing.assert_array_equal(np.asarray(surf), before)
+
+
+def test_out_of_range_event_coords_are_dropped_everywhere():
+    """Events with negative or past-the-end coordinates must scatter
+    nowhere, count nothing, and dirty nothing — jnp's mode="drop" wraps
+    negative indices, so without masking an x=-1 event would land in
+    column W-1 while its dirty mark wrapped to an unrelated tile,
+    serving a stale cached tile from ingest_and_read."""
+    eng = TimeSurfaceEngine(_cfg())
+    slot = eng.acquire()
+    eng.ingest_and_read([(slot, _stream(seed=1))], 0.08)  # warm cache
+    before = np.asarray(eng.readout(0.08))
+
+    bad = ts.EventBatch(
+        x=jnp.asarray([-1, W, 5, -3] + [0] * 508, jnp.int32),
+        y=jnp.asarray([2, 3, -1, H] + [0] * 508, jnp.int32),
+        t=jnp.full(512, 0.07, jnp.float32),
+        p=jnp.zeros(512, jnp.int32),
+        valid=jnp.asarray([True] * 4 + [False] * 508),
+    )
+    n_before = eng.stats()["n_events"][slot]
+    assert n_before > 0
+    eng.ingest([(slot, bad)])
+    assert eng.stats()["n_events"][slot] == n_before
+    np.testing.assert_array_equal(np.asarray(eng.readout(0.08)), before)
+    surf = eng.ingest_and_read([(slot, bad)], 0.08)   # incremental path
+    np.testing.assert_array_equal(np.asarray(surf), before)
+    assert eng.stats()["n_events"][slot] == n_before
+    assert eng.stats()["dirty_tiles"] == 0
+
+
+def test_readout_older_than_newest_event():
+    """t_now may predate scattered events (negative ages): the decay
+    grows past a1+a2+b instead of clamping, identically in the engine,
+    the fused path, and the offline oracle."""
+    cfg = _cfg(mode="edram")
+    eng = TimeSurfaceEngine(cfg)
+    slot = eng.acquire()
+    stream = _stream(seed=4)          # events up to t ~ 0.06
+    eng.ingest([(slot, stream)])
+    t_old = float(stream.t.max()) / 2
+    got = eng.readout(t_old)
+    want = ts.surface_read_kernel(_offline_state(stream), jnp.float32(t_old),
+                                  cfg.decay_params(), backend=cfg.backend)
+    np.testing.assert_array_equal(np.asarray(got[slot]), np.asarray(want))
+    assert float(np.asarray(got[slot]).max()) > 0.0
+
+    fused = eng.ingest_and_read([], t_old)        # dense fill at t_old
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(got))
+    eng.ingest([(slot, _stream(seed=5))])         # newer writes again
+    fused2 = eng.ingest_and_read([], t_old)       # incremental at t_old
+    np.testing.assert_array_equal(np.asarray(fused2),
+                                  np.asarray(eng.readout(t_old)))
+
+
+def test_over_capacity_payload_through_fused_path():
+    """A payload that splits into several chunks host-side must land
+    identically through ingest_and_read and plain scatter."""
+    cfg = _cfg(chunk_capacity=256)
+    stream = _stream(seed=3)
+    assert stream.n > 2 * 256          # >= 3 chunks in one call
+
+    eng = TimeSurfaceEngine(cfg)
+    slot = eng.acquire()
+    surf = eng.ingest_and_read([(slot, stream)], 0.08)
+    assert eng.stats()["n_events"][slot] == stream.n
+
+    ref_eng = TimeSurfaceEngine(cfg)
+    ref_eng.ingest([(ref_eng.acquire(), stream)])
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(ref_eng.readout(0.08)))
+
+
+# ----------------------------------------------------------------------------
+# fused ingest_and_read: cache coherence across the slot lifecycle
+# ----------------------------------------------------------------------------
+
+def test_ingest_and_read_incremental_matches_dense():
+    """Same-t_now calls take the dirty-tile path; a moved t_now refills
+    densely — every step bit-identical to a fresh dense readout."""
+    eng = TimeSurfaceEngine(_cfg())
+    slots = [eng.acquire() for _ in range(3)]
+    streams = [_stream(seed=i, kind="driving" if i % 2 else "hotel_bar")
+               for i in range(6)]
+
+    surf = eng.ingest_and_read([(slots[0], streams[0])], 0.08)   # dense
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(eng.readout(0.08)))
+    for i, stream in enumerate(streams[1:4]):                    # incremental
+        surf = eng.ingest_and_read([(slots[i % 3], stream)], 0.08)
+        np.testing.assert_array_equal(np.asarray(surf),
+                                      np.asarray(eng.readout(0.08)))
+    surf = eng.ingest_and_read([(slots[2], streams[4])], 0.1)    # t moved
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(eng.readout(0.1)))
+    assert eng.stats()["dirty_tiles"] == 0
+
+
+def test_ingest_and_read_sees_plain_ingest_writes():
+    """Interleaved plain ingests mark dirty tiles, so the next fused call
+    at the cached t_now must fold them in (no stale cache)."""
+    eng = TimeSurfaceEngine(_cfg())
+    a, b = eng.acquire(), eng.acquire()
+    eng.ingest_and_read([(a, _stream(seed=1))], 0.08)
+    eng.ingest([(b, _stream(seed=2, kind="driving"))])   # outside fused path
+    assert eng.stats()["dirty_tiles"] > 0
+    surf = eng.ingest_and_read([], 0.08)
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(eng.readout(0.08)))
+    assert float(np.asarray(surf)[b].max()) > 0.0
+
+
+def test_ingest_and_read_after_release_and_reuse():
+    """Slot resets zero the cache row, so fused reads stay correct across
+    release/acquire without invalidating the pool-wide epoch."""
+    eng = TimeSurfaceEngine(_cfg())
+    a, b = eng.acquire(), eng.acquire()
+    eng.ingest_and_read([(a, _stream(seed=1)), (b, _stream(seed=2))], 0.08)
+    before_a = np.asarray(eng.readout(0.08))[a]
+    eng.release(b)
+    surf = eng.ingest_and_read([], 0.08)         # incremental, post-reset
+    assert float(np.asarray(surf)[b].max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(surf)[a], before_a)
+    nb = eng.acquire()
+    assert nb == b
+    surf = eng.ingest_and_read([(nb, _stream(seed=9))], 0.08)
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(eng.readout(0.08)))
+
+
+def test_ingest_and_read_max_dirty_overflow_falls_back_dense():
+    """Dirtying more than max_dirty_tiles must fall back to one dense
+    pass, never a truncated gather."""
+    cfg = _cfg(max_dirty_tiles=2)     # tiny cap: any real chunk overflows
+    eng = TimeSurfaceEngine(cfg)
+    slot = eng.acquire()
+    eng.ingest_and_read([(slot, _stream(seed=1))], 0.08)
+    surf = eng.ingest_and_read([(slot, _stream(seed=2))], 0.08)
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(eng.readout(0.08)))
+    assert eng.stats()["max_dirty_tiles"] == 2
+
+
+def test_ingest_and_read_backend_parity():
+    """Cross-backend parity is allclose, not bitwise — same-op ref vs
+    interpret may differ by an ULP (see test_kernel_equivalence.py);
+    the bitwise guarantees are all within-backend."""
+    outs = {}
+    for backend in ("interpret", "ref"):
+        eng = TimeSurfaceEngine(_cfg(backend=backend))
+        slot = eng.acquire()
+        eng.ingest_and_read([(slot, _stream(seed=5))], 0.08)
+        outs[backend] = np.asarray(
+            eng.ingest_and_read([(slot, _stream(seed=6))], 0.08)
+        )
+    np.testing.assert_allclose(outs["interpret"], outs["ref"],
+                               rtol=1e-6, atol=1e-7)
+
+
+# ----------------------------------------------------------------------------
 # backend dispatch
 # ----------------------------------------------------------------------------
 

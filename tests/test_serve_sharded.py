@@ -90,14 +90,70 @@ def test_sharded_engine_support_labels_match_unsharded():
                                   np.asarray(ref.readout(0.08)[0]))
 
 
+def test_sharded_fused_ingest_and_read_single_device_mesh():
+    """The fused dirty-tile path under shard_map (scatter + refresh with
+    donated state) on a 1-device mesh: bit-identical to the unsharded
+    fused engine through dense fill, incremental, reset, and t-move."""
+    cfg = _cfg(n_slots=3)
+    streams = _streams(4)
+    words = [aer.pack(s) for s in streams]
+
+    ref = TimeSurfaceEngine(cfg)
+    eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(1))
+    slots_r = [ref.acquire() for _ in range(3)]
+    slots_e = [eng.acquire() for _ in range(3)]
+
+    # dense fill, then incremental calls at the same t_now
+    for e, slots in ((ref, slots_r), (eng, slots_e)):
+        e.ingest_and_read([(slots[0], words[0])], 0.08)
+    for i, (sr, se) in enumerate(zip(slots_r[1:], slots_e[1:])):
+        want = ref.ingest_and_read([(sr, words[i + 1])], 0.08)
+        got = eng.ingest_and_read([(se, words[i + 1])], 0.08)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"incremental call {i}")
+    # release + reuse keeps the sharded cache coherent
+    ref.release(slots_r[1]); eng.release(slots_e[1])
+    np.testing.assert_array_equal(
+        np.asarray(eng.ingest_and_read([], 0.08)),
+        np.asarray(ref.ingest_and_read([], 0.08)),
+    )
+    ref.acquire(); eng.acquire()
+    # t_now moves: dense refill path
+    want = ref.ingest_and_read([(slots_r[2], words[3])], 0.1)
+    got = eng.ingest_and_read([(slots_e[2], words[3])], 0.1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(eng.readout(0.1)),
+                                  np.asarray(ref.readout(0.1)))
+
+
+def test_sharded_fused_small_pool_refill_is_dense():
+    """Regression: with a pool whose whole tile count fits under the
+    gather cap, the t_now-moved refill must still take the dense branch
+    (force_dense), not 'refill' through the incremental gather program —
+    and stay bit-identical to readout() at every step."""
+    cfg = _cfg(n_slots=1, block=(8, 128))   # 6 tiles << max_dirty floor 16
+    stream = _streams(1)[0]
+    eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(1))
+    assert eng.stats()["max_dirty_tiles"] >= cfg.tile_counts()[2]
+    slot = eng.acquire()
+    for t_read in (0.05, 0.08, 0.08, 0.1):  # moves, holds, moves again
+        surf = eng.ingest_and_read([(slot, aer.pack(stream))], t_read)
+        np.testing.assert_array_equal(np.asarray(surf),
+                                      np.asarray(eng.readout(t_read)))
+    surf = eng.ingest_and_read([], 0.1)     # pure cached read, no scatter
+    np.testing.assert_array_equal(np.asarray(surf),
+                                  np.asarray(eng.readout(0.1)))
+
+
 # ----------------------------------------------------------------------------
 # slow: multi-device subprocess sweep
 # ----------------------------------------------------------------------------
 
 @pytest.mark.slow
 def test_sharded_matches_unsharded_1_2_4_8_devices():
-    """Bit-identical readout/support_map on 1/2/4/8 host devices, with a
-    6-slot pool (pads to 8 on 4 and 8 devices -> dead-slot masking)."""
+    """Bit-identical readout/support_map/fused-read on 1/2/4/8 host
+    devices, with a 6-slot pool (pads to 8 on 4 and 8 devices -> dead
+    pad-slot masking, asserted through the fused path too)."""
     script = """
     import os
     os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
@@ -147,6 +203,21 @@ def test_sharded_matches_unsharded_1_2_4_8_devices():
         after = np.asarray(eng.readout(0.08))
         keep = [s for s in slots if s != slots[2]]
         assert (after[keep] == want[keep]).all(), nd
+
+        # fused dirty-tile path: dense fill then incremental ingest, each
+        # bit-identical to the unsharded engine and to a dense readout;
+        # dead pad slots must stay all-zero through the fused path too
+        fus = TimeSurfaceEngine(cfg, mesh=make_host_mesh(nd))
+        fslots = [fus.acquire() for _ in range(N)]
+        fus.ingest_and_read(list(zip(fslots[:3], words[:3])), 0.08)
+        got_f = np.asarray(
+            fus.ingest_and_read(list(zip(fslots[3:], words[3:])), 0.08)
+        )
+        assert (got_f[:N] == want).all(), f'fused differs at nd={nd}'
+        assert (got_f == np.asarray(fus.readout(0.08))).all(), nd
+        if fus.n_slots_padded > N:
+            assert float(got_f[N:].max()) == 0.0, (
+                f'dead pad slots leaked through fused path at nd={nd}')
         print(f'nd={nd} OK')
     print('SHARDED-SWEEP-OK')
     """
