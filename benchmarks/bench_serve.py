@@ -3,7 +3,10 @@ latency vs the number of concurrent sensors (CPU wall-times; the batched
 readout is one kernel call whatever the sensor count), plus the
 device-parallel sweep: the same pool sharded over 1/2/4/8 emulated host
 devices (subprocess, so the main process stays single-device), plus the
-fused-vs-unfused ingest+read loop (below).
+fused-vs-unfused ingest+read loop (below), plus the composed-ReadoutSpec
+row: ``surface + stcf + count`` served from one fused dispatch vs three
+sequential single-product reads (``serve_spec_*``), gated bitwise so the
+fusion win is measured, never bought with drift.
 
 Also asserts the serving invariants: engine readout is bit-identical to
 the offline ``events/pipeline`` + ``core/time_surface`` path on each
@@ -40,10 +43,15 @@ import numpy as np
 from repro.core import time_surface as ts
 from repro.events import aer, datasets, pipeline
 from repro.kernels import ops
+from repro.serve import spec as rs
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 H, W = 120, 160
 DURATION = 0.1
+
+#: the composed spec the spec_rows gate measures: three products, one dispatch
+COMPOSED = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          count=rs.count(4))
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -57,9 +65,12 @@ import time
 import jax, numpy as np
 from repro.events import aer, datasets
 from repro.launch.mesh import make_host_mesh
+from repro.serve import spec as rs
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 H, W, DURATION, N = {h}, {w}, {duration}, 8
+SURFACE = rs.SURFACE_SPEC
+STCF = rs.ReadoutSpec(stcf=rs.stcf())
 streams = [
     datasets.dnd21_like('driving' if i % 2 else 'hotel_bar',
                         h=H, w=W, duration=DURATION, seed=i)
@@ -71,39 +82,38 @@ cfg = TSEngineConfig(h=H, w=W, n_slots=N, chunk_capacity=1 << 14,
                      mode='edram')
 
 ref = TimeSurfaceEngine(cfg)
-ref_slots = [ref.acquire() for _ in range(N)]
-ref.ingest(list(zip(ref_slots, words)))
-want = np.asarray(ref.readout(DURATION))
-want_sup = np.asarray(ref.support_map(DURATION))
+ref.push(list(zip([ref.attach() for _ in range(N)], words)))
+want = np.asarray(ref.read(SURFACE, DURATION)['surface'])
+want_sup = np.asarray(ref.read(STCF, DURATION)['stcf'])
 
 for nd in (1, 2, 4, 8):
     eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(nd))
-    slots = [eng.acquire() for _ in range(N)]
-    items = list(zip(slots, words))
+    cams = [eng.attach() for _ in range(N)]
+    items = list(zip(cams, words))
 
-    eng.ingest(items)                       # warm the jits, then reset
-    jax.block_until_ready(eng.readout(DURATION))
-    jax.block_until_ready(eng.support_map(DURATION))
-    for s in slots:
-        eng.release(s)
-    slots = [eng.acquire() for _ in range(N)]
-    items = list(zip(slots, words))
+    eng.push(items)                         # warm the jits, then reset
+    jax.block_until_ready(eng.read(SURFACE, DURATION)['surface'])
+    jax.block_until_ready(eng.read(STCF, DURATION)['stcf'])
+    for c in cams:
+        c.detach()
+    cams = [eng.attach() for _ in range(N)]
+    items = list(zip(cams, words))
 
     t0 = time.perf_counter()
-    eng.ingest(items)
+    eng.push(items)
     jax.block_until_ready(eng.state.surfaces.sae)
     dt_ingest = time.perf_counter() - t0
 
     n_read = 5
     t0 = time.perf_counter()
     for _ in range(n_read):
-        surf = eng.readout(DURATION)
+        surf = eng.read(SURFACE, DURATION)['surface']
     jax.block_until_ready(surf)
     dt_read = (time.perf_counter() - t0) / n_read
 
     got = np.asarray(surf)
     assert (got[:N] == want).all(), f'sharded readout != unsharded (nd={{nd}})'
-    sup = np.asarray(eng.support_map(DURATION))
+    sup = np.asarray(eng.read(STCF, DURATION)['stcf'])
     assert (sup[:N] == want_sup).all(), f'sharded support != unsharded (nd={{nd}})'
 
     print(f'serve_sharded_ingest_{{nd}}dev_us,'
@@ -205,8 +215,10 @@ def fused_rows(n_bursts=8, n_sensors=4, fh=240, fw=320):
     cfg = TSEngineConfig(h=fh, w=fw, n_slots=n_sensors,
                          chunk_capacity=1 << 12, mode="edram")
     fused, unfused = TimeSurfaceEngine(cfg), TimeSurfaceEngine(cfg)
-    slots_f = [fused.acquire() for _ in range(n_sensors)]
-    slots_u = [unfused.acquire() for _ in range(n_sensors)]
+    cams_f = [fused.attach() for _ in range(n_sensors)]
+    cams_u = [unfused.attach() for _ in range(n_sensors)]
+    slots_f = [c.slot for c in cams_f]
+    slots_u = [c.slot for c in cams_u]
     edges = np.linspace(0.0, DURATION, n_bursts + 1)
     cap = cfg.chunk_capacity
 
@@ -228,10 +240,11 @@ def fused_rows(n_bursts=8, n_sensors=4, fh=240, fw=320):
         for items in bursts:
             t0 = time.perf_counter()
             if fused_path:
-                surf = engine.ingest_and_read(items, DURATION)
+                surf = engine.serve_step(items, rs.SURFACE_SPEC,
+                                         DURATION)["surface"]
             else:
-                engine.ingest(items)
-                surf = engine.readout(DURATION)
+                engine.push(items)
+                surf = engine.read(rs.SURFACE_SPEC, DURATION)["surface"]
             jax.block_until_ready(surf)
             per_call.append(time.perf_counter() - t0)
             outs.append(np.asarray(surf))
@@ -245,14 +258,16 @@ def fused_rows(n_bursts=8, n_sensors=4, fh=240, fw=320):
     # warm every jit entry (dense fill + incremental), then reset the pools
     run(unfused, bursts_for(slots_u), False)
     run(fused, bursts_for(slots_f), True)
-    for eng, slots in ((fused, slots_f), (unfused, slots_u)):
-        for s in list(slots):
-            eng.release(s)
-        slots[:] = [eng.acquire() for _ in range(n_sensors)]
+    for eng, cams, slots in ((fused, cams_f, slots_f),
+                             (unfused, cams_u, slots_u)):
+        for cam in list(cams):
+            cam.detach()
+        cams[:] = [eng.attach() for _ in range(n_sensors)]
+        slots[:] = [c.slot for c in cams]
     # move the fused cache epoch off DURATION so the timed loop's first
     # burst is a genuine dense fill again, not an incremental continuation
     # of the warm-up epoch
-    fused.ingest_and_read([], 0.0)
+    fused.serve_step([], rs.SURFACE_SPEC, 0.0)
 
     unfused_t, unfused_out = run(unfused, bursts_for(slots_u), False)
     fused_t, _ = run(fused, bursts_for(slots_f), True,
@@ -283,6 +298,59 @@ def fused_rows(n_bursts=8, n_sensors=4, fh=240, fw=320):
     ]
 
 
+def spec_rows(n_sensors=4):
+    """Composed-spec fusion win, measured not asserted: one dispatch of
+    ``surface + stcf + count`` vs three sequential single-product reads.
+
+    The bitwise gate runs first: every product of the composed read must
+    equal its single-product twin exactly (same compiled kernels, same
+    state snapshot), so the fused row can never buy speed with drift.
+    The ``derived`` column is the sequential/composed speedup.
+    """
+    streams = [
+        datasets.dnd21_like("driving" if i % 2 else "hotel_bar",
+                            h=H, w=W, duration=DURATION, seed=i)
+        for i in range(n_sensors)
+    ]
+    singles = {name: rs.ReadoutSpec(**{name: COMPOSED[name]})
+               for name in COMPOSED.names}
+    cfg = TSEngineConfig(h=H, w=W, n_slots=n_sensors,
+                         chunk_capacity=1 << 14, mode="edram",
+                         specs=(COMPOSED,))
+    eng = TimeSurfaceEngine(cfg)
+    cams = [eng.attach() for _ in range(n_sensors)]
+    eng.push([(c, aer.pack(s)) for c, s in zip(cams, streams)])
+
+    # bitwise gate (also warms every jit entry)
+    composed = eng.read(COMPOSED, DURATION)
+    for name, spec in singles.items():
+        single = eng.read(spec, DURATION)[name]
+        assert bool((np.asarray(composed[name]) == np.asarray(single)).all()), (
+            f"composed spec product {name!r} != single-product read"
+        )
+
+    n_iter = 5
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        got = eng.read(COMPOSED, DURATION)
+    jax.block_until_ready(got)
+    dt_composed = (time.perf_counter() - t0) / n_iter
+
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        got = {name: eng.read(spec, DURATION)[name]
+               for name, spec in singles.items()}
+    jax.block_until_ready(got)
+    dt_seq = (time.perf_counter() - t0) / n_iter
+
+    return [
+        ("serve_spec_composed_3products_us", dt_composed * 1e6,
+         dt_seq / dt_composed),                                  # speedup
+        ("serve_spec_sequential_3reads_us", dt_seq * 1e6,
+         n_sensors * H * W / dt_seq / 1e6),                      # Mpix/s
+    ]
+
+
 def rows():
     out = []
     streams = [
@@ -296,36 +364,37 @@ def rows():
         cfg = TSEngineConfig(h=H, w=W, n_slots=n_sensors,
                              chunk_capacity=1 << 14, mode="edram")
         eng = TimeSurfaceEngine(cfg)
-        slots = [eng.acquire() for _ in range(n_sensors)]
-        items = list(zip(slots, words[:n_sensors]))
+        cams = [eng.attach() for _ in range(n_sensors)]
+        items = list(zip(cams, words[:n_sensors]))
         n_events = sum(s.n for s in streams[:n_sensors])
 
         # warm up ingest + readout jits, then wipe state back
-        eng.ingest(items)
-        jax.block_until_ready(eng.readout(DURATION))
-        for s in slots:
-            eng.release(s)
-        slots = [eng.acquire() for _ in range(n_sensors)]
-        items = list(zip(slots, words[:n_sensors]))
+        eng.push(items)
+        jax.block_until_ready(eng.read(rs.SURFACE_SPEC, DURATION)["surface"])
+        for c in cams:
+            c.detach()
+        cams = [eng.attach() for _ in range(n_sensors)]
+        items = list(zip(cams, words[:n_sensors]))
 
         t0 = time.perf_counter()
-        eng.ingest(items)
+        eng.push(items)
         jax.block_until_ready(eng.state.surfaces.sae)
         dt_ingest = time.perf_counter() - t0
 
         n_read = 5
         t0 = time.perf_counter()
         for _ in range(n_read):
-            surf = eng.readout(DURATION)
+            surf = eng.read(rs.SURFACE_SPEC, DURATION)["surface"]
         jax.block_until_ready(surf)
         dt_read = (time.perf_counter() - t0) / n_read
 
         # serving invariant: bit-identical to the offline pipeline per slot
-        for slot, stream in zip(slots, words[:n_sensors]):
+        for cam, stream in zip(cams, words[:n_sensors]):
             want = _offline_surface(cfg, stream, DURATION)
-            got = surf[slot]
+            got = surf[cam.slot]
             assert bool((np.asarray(got) == np.asarray(want)).all()), (
-                f"engine readout differs from offline pipeline (slot {slot})"
+                f"engine readout differs from offline pipeline "
+                f"(slot {cam.slot})"
             )
 
         out.append((f"serve_ingest_{n_sensors}sensors_us",
@@ -334,6 +403,7 @@ def rows():
                     dt_read * 1e6,
                     n_sensors * H * W / dt_read / 1e6))  # Mpix/s
 
+    out.extend(spec_rows())     # composed-spec vs sequential reads gate
     out.extend(fused_rows())    # fused-vs-unfused ingest+read loop
     out.extend(sharded_rows())  # 1/2/4/8-device sweep (Meps / Mpix/s)
     return out

@@ -1,12 +1,14 @@
 """Multi-sensor streaming demo: four event cameras share one engine.
 
-Two sensors stream a driving-like scene, two a hotel-bar-like scene; AER
-chunks arrive interleaved in 20 ms windows and every window's frame
-renders at the window deadline through the fused ingest->readout path
-(``ingest_and_read``): events reach the engine in two half-window bursts,
-the first read is a dense fill, and the second re-reads only the dirty
-tiles the late burst touched.  Mid-run, sensor 1 disconnects and a new
-sensor reuses its slot (fresh surface, no retrace, cache stays coherent).
+The session/spec API end to end: each camera holds a ``SensorSession``
+(no raw slot ints), and every window deadline serves one composed
+``ReadoutSpec`` — decayed surface + comparator mask + event count — from
+a single fused dispatch.  AER chunks arrive interleaved in 20 ms windows
+through the fused ``serve_step`` path: events reach the engine in two
+half-window bursts, the first read is a dense fill, and the second
+re-reads only the dirty tiles the late burst touched.  Mid-run, sensor 1
+disconnects (``detach``) and a new camera reuses its slot (fresh surface
+and counter plane, no retrace, cache stays coherent).
 
     PYTHONPATH=src python examples/serve_sensors.py
     PYTHONPATH=src python examples/serve_sensors.py --mesh 2   # sharded pool
@@ -41,10 +43,13 @@ def main() -> None:
         mesh = mesh_mod.make_host_mesh(args.mesh)
 
     from repro.events import datasets
+    from repro.serve import spec as rs
     from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
+    FRAME = rs.ReadoutSpec(surface=rs.surface(), mask=rs.mask(),
+                           count=rs.count(4))
     cfg = TSEngineConfig(h=H, w=W, n_slots=4, chunk_capacity=4096,
-                         mode="edram")
+                         mode="edram", specs=(FRAME,))
     eng = TimeSurfaceEngine(cfg, mesh=mesh)
     if mesh is not None:
         print(f"slot pool sharded over {dict(mesh.shape)} "
@@ -55,37 +60,41 @@ def main() -> None:
         datasets.dnd21_like(k, h=H, w=W, duration=DURATION, seed=i)
         for i, k in enumerate(kinds)
     ]
-    slots = [eng.acquire() for _ in streams]
-    print(f"{len(streams)} sensors on slots {slots}: "
+    cams = [eng.attach() for _ in streams]
+    print(f"{len(streams)} sensors on slots {[c.slot for c in cams]}: "
           f"{[s.n for s in streams]} events")
 
-    v_tw = cfg.v_tw()
     n_win = int(round(DURATION / WINDOW_S))
     for wi in range(n_win):
         lo, hi = wi * WINDOW_S, (wi + 1) * WINDOW_S
 
         if wi == n_win // 2:  # sensor 1 disconnects; a new one takes the slot
-            eng.release(slots[1])
-            slots[1] = eng.acquire()
+            cams[1].detach()
+            cams[1] = eng.attach()
             streams[1] = datasets.dnd21_like("hotel_bar", h=H, w=W,
                                              duration=DURATION, seed=99)
-            print(f"window {wi}: sensor 1 swapped (slot {slots[1]} reused, "
-                  f"generation {eng.stats()['generation'][slots[1]]})")
+            print(f"window {wi}: sensor 1 swapped (slot {cams[1].slot} "
+                  f"reused, generation {cams[1].generation})")
 
         # two half-window bursts, both rendered at the window deadline:
         # burst 1 refills the cache densely (t_now moved), burst 2 only
-        # re-reads the tiles it dirtied
+        # re-reads the tiles it dirtied; mask and count ride the same
+        # fused dispatch
         mid = lo + WINDOW_S / 2
         for b_lo, b_hi in ((lo, mid), (mid, hi)):
-            items = [(slot, window(s, b_lo, b_hi))
-                     for slot, s in zip(slots, streams)]
-            v = eng.ingest_and_read(items, hi)
-        occ = (np.asarray(v) > v_tw).astype(np.float32).mean(axis=(1, 2, 3))
+            items = [(cam, window(s, b_lo, b_hi))
+                     for cam, s in zip(cams, streams)]
+            frame = eng.serve_step(items, FRAME, hi)
+        occ = np.asarray(frame["mask"]).mean(axis=(1, 2, 3))
+        active = (np.asarray(frame["count"]) > 0).sum(axis=(1, 2))
         print(f"t={hi*1e3:5.0f} ms  occupancy per slot: "
-              + "  ".join(f"{occ[s]:.3f}" for s in slots))
+              + "  ".join(f"{occ[c.slot]:.3f}" for c in cams)
+              + "   active px: "
+              + " ".join(f"{active[c.slot]:5d}" for c in cams))
 
     stats = eng.stats()
-    print("final events per slot:", [stats["n_events"][s] for s in slots])
+    print("final events per slot:",
+          [stats["n_events"][c.slot] for c in cams])
 
 
 if __name__ == "__main__":

@@ -21,20 +21,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import edram
 from repro.core import time_surface as ts
+
+
+def _in_range(ev: ts.EventBatch, h: int, w: int) -> jax.Array:
+    """Valid events with in-bounds coordinates.  jnp's ``mode="drop"``
+    only drops *past-the-end* indices and silently wraps negative ones
+    into the wrong column — the same bug class the SAE scatter masks
+    (see ``serve.ts_engine._scatter_chunks``)."""
+    return (ev.valid & (ev.x >= 0) & (ev.x < w) & (ev.y >= 0) & (ev.y < h))
 
 
 def event_count(ev: ts.EventBatch, h: int, w: int, n_bits: int = 4) -> jax.Array:
     """Saturating per-pixel event counter ((H, W) float32 in [0, 2^n-1])."""
+    ok = _in_range(ev, h, w)
     cnt = jnp.zeros((h, w), jnp.int32).at[ev.y, ev.x].add(
-        ev.valid.astype(jnp.int32), mode="drop"
+        ok.astype(jnp.int32), mode="drop"
     )
-    return jnp.minimum(cnt, 2**n_bits - 1).astype(jnp.float32)
+    from repro.kernels import ops  # deferred: kernels sit above core
+
+    return ops.event_count_read(cnt, n_bits=n_bits)
 
 
 def ebbi(ev: ts.EventBatch, h: int, w: int) -> jax.Array:
     """Event-based binary image ((H, W) float32 in {0, 1})."""
-    img = jnp.zeros((h, w), jnp.bool_).at[ev.y, ev.x].max(ev.valid, mode="drop")
+    ok = _in_range(ev, h, w)
+    img = jnp.zeros((h, w), jnp.bool_).at[ev.y, ev.x].max(ok, mode="drop")
     return img.astype(jnp.float32)
 
 
@@ -64,18 +77,30 @@ def ts_sram_quantized(
     This reproduces the periodic corruption of digital TPI storage ([26],
     Sec. II-C): after 2^n ticks the stored stamps alias, so old events can
     masquerade as recent ones.  Used as a fidelity baseline in benchmarks.
+
+    The wrapped stamps are stored per event (the hardware quantizes at
+    write time), then read through the shared ``kernels.ops.ts_wrapped_read``
+    entry — the same compiled program the serving engine's
+    ``ts_quantized`` spec product dispatches, so offline and served
+    readouts of equal stored stamps are bit-identical.
     """
-    period = (2**n_bits) * tick
     tq = jnp.floor(ev.t / tick).astype(jnp.uint32) % (2**n_bits)
     t_stored = tq.astype(jnp.float32) * tick  # wrapped seconds
     wrapped = ev._replace(t=t_stored)
     s = ts.sae_update(ts.empty_sae(h, w, polarities), wrapped)
-    t_read_w = jnp.float32(jnp.floor(t_read / tick) % (2**n_bits)) * tick
-    # modular elapsed time — the hardware cannot know how many wraps happened
-    dt = jnp.mod(t_read_w - s, period)
-    dt = jnp.where(s == ts.NEVER, jnp.inf, dt)
-    v = jnp.exp(-dt / tau)
-    return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
+    from repro.kernels import ops  # deferred: kernels sit above core
+
+    params = edram_ideal_params(tau)
+    return ops.ts_wrapped_read(s, t_read, params, n_bits=n_bits, tick=tick)
+
+
+def edram_ideal_params(tau: float):
+    """The ideal exponential TS as a degenerate double-exp transient
+    (``a1=1, a2=0, b=0``): the same trick the serving engine uses so both
+    decay modes run through one kernel."""
+    f32 = jnp.float32
+    return edram.DecayParams(a1=f32(1.0), tau1=f32(tau), a2=f32(0.0),
+                             tau2=f32(1.0), b=f32(0.0))
 
 
 def local_memory_ts(

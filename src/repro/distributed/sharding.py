@@ -125,6 +125,17 @@ def slot_pool_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, slot_pool_spec(mesh))
 
 
+def slot_pool_out_specs(mesh: Mesh, names) -> Dict[str, P]:
+    """PartitionSpecs for a named-product readout over the slot pool.
+
+    Every ``ReadoutSpec`` product array leads with the slot axis (that is
+    the serving engine's layout contract), so a spec read's output dict
+    shards exactly like the pool itself — one rule, applied per name.
+    """
+    spec = slot_pool_spec(mesh)
+    return {name: spec for name in names}
+
+
 def spec_axes(spec: P) -> Tuple[str, ...]:
     """Flatten a PartitionSpec's mesh-axis names (entries may be str/tuple)."""
     out = []

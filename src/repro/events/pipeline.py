@@ -48,9 +48,55 @@ def window_chunks(
     """Bin a stream into fixed windows: (K, capacity) EventBatch fields.
 
     Each event lands in exactly one window (each event written once — the
-    hardware write semantics).  Overflowing windows are truncated (counted
-    by the caller via ``valid``); short windows are padded.
+    hardware write semantics).  Overflowing windows are truncated to their
+    first ``capacity`` events in time order (counted by the caller via
+    ``valid``); short windows are padded with ``valid=False`` zeros.
+
+    One vectorized bucketing pass: window ids are monotone over the
+    time-sorted stream, so each event's within-window position falls out
+    of a single cumulative count — O(N) host work instead of the old
+    O(K·N) per-window masking loop (``_window_chunks_reference``, kept as
+    the behavioral oracle the equality test pins this against).
     """
+    cap = capacity_per_window
+    k = int(np.ceil(s.t[-1] / window_s)) if s.n else 1
+    if not s.n:
+        return ts.EventBatch(
+            x=jnp.zeros((1, cap), jnp.int32), y=jnp.zeros((1, cap), jnp.int32),
+            t=jnp.zeros((1, cap), jnp.float32), p=jnp.zeros((1, cap), jnp.int32),
+            valid=jnp.zeros((1, cap), bool),
+        )
+    idx = np.minimum((s.t / window_s).astype(np.int64), k - 1)
+    # position of each event within its window (stream is time-sorted, so
+    # events of one window are contiguous): running index minus the index
+    # where the event's window starts
+    starts = np.zeros(k, np.int64)
+    np.add.at(starts, idx, 1)
+    starts = np.concatenate(([0], np.cumsum(starts)[:-1]))
+    pos = np.arange(s.n, dtype=np.int64) - starts[idx]
+    keep = pos < cap                      # truncate overflowing windows
+
+    def fill(src, dtype):
+        out = np.zeros((k, cap), dtype)
+        out[idx[keep], pos[keep]] = src[keep].astype(dtype)
+        return jnp.asarray(out)
+
+    valid = np.zeros((k, cap), bool)
+    valid[idx[keep], pos[keep]] = True
+    return ts.EventBatch(
+        x=fill(s.x, np.int32), y=fill(s.y, np.int32),
+        t=fill(s.t, np.float32), p=fill(s.p, np.int32),
+        valid=jnp.asarray(valid),
+    )
+
+
+def _window_chunks_reference(
+    s: syn.EventStream,
+    window_s: float,
+    capacity_per_window: int,
+) -> ts.EventBatch:
+    """The original per-window loop (O(K·N) host work): the behavioral
+    oracle ``window_chunks`` must match field-for-field."""
     k = int(np.ceil(s.t[-1] / window_s)) if s.n else 1
     idx = np.minimum((s.t / window_s).astype(np.int64), k - 1) if s.n else np.zeros(0, np.int64)
     fields = {f: [] for f in ("x", "y", "t", "p", "valid")}

@@ -382,6 +382,85 @@ def ts_fused_dirty_local(
     return surface, new_cache, jnp.zeros_like(dirty)
 
 
+# ----------------------------------------------------------------------------
+# slot-pool servable forms of the Sec. II-B comparison representations
+# (core.representations holds the offline EventBatch baselines; these read
+# the same products off pool state, batched over slots, and are what the
+# serving engine's ReadoutSpec products dispatch)
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "backend"))
+def event_count_read(
+    counts: jax.Array,
+    n_bits: int = 4,
+    backend: Optional[str] = None,
+):
+    """Saturating n-bit readout of a (..., H, W) int32 counter plane.
+
+    Integer clamp — exact on every backend (the ``backend`` arg is
+    validated for interface uniformity but the math cannot differ), so
+    this product is bitwise stable across the whole dispatch matrix.
+    """
+    resolve_backend(backend)
+    return jnp.minimum(counts, 2 ** n_bits - 1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def ebbi_read(sae: jax.Array, backend: Optional[str] = None):
+    """Event-based binary image off a (..., P, H, W) SAE: 1.0 where any
+    polarity plane was ever written (polarity-merged, matching the
+    offline ``representations.ebbi``).  Pure predicate — exact on every
+    backend."""
+    resolve_backend(backend)
+    return jnp.isfinite(sae).any(axis=-3).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "tick"))
+def ts_quantize_sae(sae: jax.Array, n_bits: int = 16, tick: float = 1e-3):
+    """Wrap a raw SAE's stamps to n-bit ``tick``-second storage ([26]'s
+    SRAM TPI): the value the hardware would actually hold.  NEVER cells
+    stay NEVER.  Exact integer/quantization arithmetic, and ``floor`` is
+    monotone, so quantizing the maxed raw SAE equals maxing per-event
+    quantized stamps whenever the stream spans less than one wrap period
+    (within a period the two storage orders cannot disagree)."""
+    safe = jnp.where(jnp.isfinite(sae), sae, 0.0)
+    tq = jnp.floor(safe / tick).astype(jnp.uint32) % (2 ** n_bits)
+    stored = tq.astype(jnp.float32) * tick
+    return jnp.where(jnp.isfinite(sae), stored, -jnp.inf)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "tick", "block", "backend")
+)
+def ts_wrapped_read(
+    stored: jax.Array,       # (..., H, W) wrapped stamps (ts_quantize_sae)
+    t_read,
+    params,                  # DecayParams; ideal single-exp for [26]'s TS
+    n_bits: int = 16,
+    tick: float = 1e-3,
+    block: Tuple[int, int] = (8, 128),
+    backend: Optional[str] = None,
+):
+    """TS readout over wrapped timestamps: the hardware cannot know how
+    many wraps happened, so elapsed time is modular and ancient events
+    alias as recent ([26]'s periodic corruption).
+
+    The modular age is folded into a virtual SAE read at ``t_now = 0``
+    (``sae' = -dt`` so the kernel's ``t_now - sae'`` reproduces ``dt``
+    exactly, with no catastrophic cancellation), then dispatched through
+    the same jitted ``ts_decay`` entry every other surface read uses —
+    offline and serving callers of this op therefore agree bitwise.
+    """
+    period = (2 ** n_bits) * tick
+    t_read_w = jnp.float32(
+        jnp.floor(jnp.float32(t_read) / tick) % (2 ** n_bits)
+    ) * tick
+    dt = jnp.mod(t_read_w - stored, period)
+    virtual = jnp.where(jnp.isfinite(stored), -dt, -jnp.inf)
+    return ts_decay(virtual, jnp.float32(0.0), params, block=block,
+                    backend=backend)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "backend"))
 def decay_scan(
     a: jax.Array,

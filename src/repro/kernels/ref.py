@@ -60,6 +60,24 @@ def stcf_support_fused_ref(sae, radius, params, v_tw, t_now, include_self=False)
     return stcf_support_ref(v > v_tw, radius, include_self)
 
 
+def ts_wrapped_read_ref(stored, t_read, tau, n_bits=16, tick=1e-3):
+    """Oracle for kernels.ops.ts_wrapped_read: the direct [26] formula.
+
+    ``stored`` holds wrapped n-bit stamps (NEVER = -inf); elapsed time is
+    modular because the hardware cannot count wraps.  Written as the
+    plain jnp expression (not via the virtual-SAE folding the op uses)
+    so it is an independent check, not a restatement.
+    """
+    period = (2 ** n_bits) * tick
+    t_read_w = jnp.float32(
+        jnp.floor(jnp.float32(t_read) / tick) % (2 ** n_bits)
+    ) * tick
+    dt = jnp.mod(t_read_w - stored, period)
+    dt = jnp.where(jnp.isfinite(stored), dt, jnp.inf)
+    v = jnp.exp(-dt / jnp.float32(tau))
+    return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
+
+
 def decay_scan_ref(a, x, s0=None):
     """Oracle for kernels.decay_scan: s_t = a_t*s_{t-1} + x_t via lax.scan.
 

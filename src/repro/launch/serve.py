@@ -54,6 +54,7 @@ def run_tokens(args) -> None:
 def run_sensors(args) -> None:
     from repro.events import aer, datasets
     from repro.launch import mesh as mesh_mod
+    from repro.serve import spec as rs
 
     try:
         h, w = (int(v) for v in args.hw.split("x"))
@@ -69,9 +70,13 @@ def run_sensors(args) -> None:
         mesh = mesh_mod.make_host_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} over "
               f"{[d.platform for d in mesh.devices.ravel()][0]} devices")
+    # one declarative spec, four products in one fused dispatch: decayed
+    # surface, comparator mask, STCF support map, saturating event count
+    spec = rs.ReadoutSpec(surface=rs.surface(), mask=rs.mask(),
+                          stcf=rs.stcf(), count=rs.count(4))
     cfg = TSEngineConfig(
         h=h, w=w, n_slots=args.slots, chunk_capacity=args.chunk,
-        mode=args.mode, backend=args.backend,
+        mode=args.mode, backend=args.backend, specs=(spec,),
     )
     eng = TimeSurfaceEngine(cfg, mesh=mesh)
     if mesh is not None and eng.n_slots_padded != cfg.n_slots:
@@ -79,23 +84,24 @@ def run_sensors(args) -> None:
               f"for {eng.stats()['mesh']['n_shards']} shards")
 
     kinds = ("hotel_bar", "driving")
-    slots, words = [], []
+    cams, words = [], []
     for i in range(args.sensors):
         s = datasets.dnd21_like(kinds[i % 2], h=h, w=w,
                                 duration=args.duration, seed=i)
-        slots.append(eng.acquire())
+        cams.append(eng.attach())
         words.append(aer.pack(s))
-        print(f"sensor {i}: slot {slots[-1]}, {s.n} events "
+        print(f"sensor {i}: slot {cams[-1].slot}, {s.n} events "
               f"({kinds[i % 2]}-like)")
 
     t0 = time.time()
-    eng.ingest(list(zip(slots, words)))
-    surfaces = eng.readout(args.duration)
-    jax.block_until_ready(surfaces)
+    eng.push(list(zip(cams, words)))
+    products = eng.read(spec, args.duration)
+    jax.block_until_ready(products)
     dt = time.time() - t0
     n_total = sum(len(wd) for wd in words)
-    print(f"ingest+readout {n_total} events over {args.sensors} sensors in "
-          f"{dt*1e3:.1f} ms ({n_total/dt/1e6:.2f} Meps)")
+    print(f"push+read[{'+'.join(spec.names)}] {n_total} events over "
+          f"{args.sensors} sensors in {dt*1e3:.1f} ms "
+          f"({n_total/dt/1e6:.2f} Meps)")
 
     if args.bursts > 1:
         # fused streaming: the same sensors reconnect and stream their
@@ -107,15 +113,16 @@ def run_sensors(args) -> None:
                                 duration=args.duration, seed=i)
             for i in range(args.sensors)
         ]
-        for s in slots:
-            eng.release(s)
-        slots = [eng.acquire() for _ in range(args.sensors)]
+        for cam in cams:
+            cam.detach()
+        cams = [eng.attach() for _ in range(args.sensors)]
         edges = np.linspace(0.0, args.duration, args.bursts + 1)
         for bi, (lo, hi) in enumerate(zip(edges[:-1], edges[1:])):
-            items = [(slot, aer.pack(s.window(lo, hi)))
-                     for slot, s in zip(slots, streams)]
+            items = [(cam, aer.pack(s.window(lo, hi)))
+                     for cam, s in zip(cams, streams)]
             t0 = time.time()
-            surf = eng.ingest_and_read(items, args.duration)
+            surf = eng.serve_step(items, rs.SURFACE_SPEC,
+                                  args.duration)["surface"]
             jax.block_until_ready(surf)
             st = eng.stats()
             print(f"fused burst {bi}: "
@@ -123,19 +130,21 @@ def run_sensors(args) -> None:
                   f"{(time.time()-t0)*1e3:.1f} ms "
                   f"({'dense fill' if bi == 0 else 'incremental'}, "
                   f"max_dirty={st['max_dirty_tiles']})")
-        check = eng.readout(args.duration)
+        check = eng.read(rs.SURFACE_SPEC, args.duration)["surface"]
         same = bool(np.asarray(surf == check).all())
         print(f"fused surface bit-identical to dense readout: {same}")
         assert same
+        products = eng.read(spec, args.duration)
 
-    _, mask = eng.readout_with_mask(args.duration)
     stats = eng.stats()
     unit = " V" if args.mode == "edram" else ""
-    for i, slot in enumerate(slots):
-        occ = float(np.asarray(mask[slot]).mean())
-        print(f"sensor {i}: surface max {float(surfaces[slot].max()):.3f}{unit}, "
-              f"window occupancy {occ:.4f}, "
-              f"events ingested {stats['n_events'][slot]}")
+    for i, cam in enumerate(cams):
+        view = {name: v[cam.slot] for name, v in products.items()}
+        occ = float(np.asarray(view["mask"]).mean())
+        print(f"sensor {i}: surface max {float(view['surface'].max()):.3f}"
+              f"{unit}, window occupancy {occ:.4f}, "
+              f"active pixels {int(np.asarray(view['count'] > 0).sum())}, "
+              f"events ingested {stats['n_events'][cam.slot]}")
 
 
 def main() -> None:
@@ -163,7 +172,7 @@ def main() -> None:
                          "(CPU: emulated host devices via XLA_FLAGS)")
     sp.add_argument("--bursts", type=int, default=4, metavar="B",
                     help="fused-path demo: stream each sensor in B bursts "
-                         "through ingest_and_read at one frame deadline "
+                         "through the fused serve_step at one frame deadline "
                          "(0/1 disables)")
 
     args = ap.parse_args()

@@ -1,4 +1,9 @@
+from repro.serve.api import SensorSession, attach_many, pool_items  # noqa: F401
 from repro.serve.engine import Request, Result, ServeEngine  # noqa: F401
+from repro.serve.spec import (  # noqa: F401
+    SURFACE_SPEC, ReadoutSpec, count, ebbi, mask, sae_raw, stcf, surface,
+    ts_quantized,
+)
 from repro.serve.ts_engine import (  # noqa: F401
     EngineState, TSEngineConfig, TimeSurfaceEngine,
 )

@@ -1,0 +1,356 @@
+"""Declarative readout specs: *what to read*, not *which method to call*.
+
+The paper's core claim is that one in-sensor substrate (the eDRAM SAE)
+serves many downstream consumers — exponential time-surfaces for
+classification, STCF masks for denoising, and the Sec. II-B comparison
+representations (event-count, EBBI, SRAM-quantized TS).  A
+``ReadoutSpec`` is a static, hashable description of the *products* one
+read returns; the serving engine compiles **one fused batched dispatch
+per unique spec** and caches it exactly like the ``backend`` selector —
+the spec is part of the jit cache key, so reading the same spec twice
+never retraces, and every product in a composed spec comes out of the
+same compiled program over the same slot-pool state snapshot.
+
+Products (each a frozen, hashable descriptor; construct via the helpers)::
+
+    surface(...)       decayed time surface (the classic TS readout)
+    mask(...)          comparator mask V > V_tw (denoiser front end)
+    stcf(...)          dense STCF patch-support map
+    count(n_bits)      saturating per-pixel event counter  [refs 32, 33]
+    ebbi()             event-based binary image            [refs 34, 35]
+    sae_raw()          raw last-timestamp surface (-inf = never) [21, 36]
+    ts_quantized(...)  TS from n_T-bit wrapping timestamps  [ref 26]
+
+Compose them by name — one call, one dispatch, several products::
+
+    spec = ReadoutSpec(surface=surface(), stcf=stcf(), count=count(4))
+    out = session.read(spec, t_now)      # {"surface": ..., "stcf": ...}
+
+``count`` is the only product needing extra device state (a per-slot
+counter plane); the engine materializes it only when its config declares
+a spec that asks for it (``TSEngineConfig.specs``).  Everything else
+reads off the SAE the pool already carries.
+
+Bit-identity contract: the ``surface()`` product of *any* spec is
+bit-identical to a standalone ``kernels.ops.ts_decay`` dispatch on the
+same state — products are independent subgraphs sharing only the SAE
+input, so composing them cannot re-contract the decay math (gated by
+``tests/test_kernel_equivalence.py::check_spec_read_bitwise`` and the
+engine differential suite).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edram
+from repro.core import representations as representations_mod
+from repro.core import stcf as stcf_mod
+from repro.kernels import ops
+
+__all__ = [
+    "ReadoutSpec", "Surface", "Mask", "Stcf", "Count", "Ebbi", "SaeRaw",
+    "TsQuantized", "surface", "mask", "stcf", "count", "ebbi", "sae_raw",
+    "ts_quantized", "SURFACE_SPEC", "needs_counts",
+]
+
+
+# ----------------------------------------------------------------------------
+# product descriptors (frozen -> hashable -> usable as static jit args)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Surface:
+    """Decayed time surface.  ``mode``/``tau``/``cmem_f`` default to the
+    engine config's decay (None = inherit), so ``surface()`` is exactly
+    the pre-spec ``readout``; overriding them serves a second decay
+    profile off the same SAE without touching the engine config."""
+
+    mode: Optional[str] = None       # "edram" | "ideal" | None (engine's)
+    tau: Optional[float] = None      # ideal-TS decay constant override
+    cmem_f: Optional[float] = None   # eDRAM storage-cap override
+
+    def __post_init__(self):
+        assert self.mode in (None, "edram", "ideal"), self.mode
+
+
+@dataclasses.dataclass(frozen=True)
+class Mask:
+    """Comparator mask V > V_tw (the STCF window test, one bool plane).
+    ``tau_tw`` overrides the engine's correlation window."""
+
+    tau_tw: Optional[float] = None
+    decay: Surface = Surface()
+
+
+@dataclasses.dataclass(frozen=True)
+class Stcf:
+    """Dense STCF patch-support map (int32 per pixel): SAE -> decay ->
+    comparator -> patch sum, fused in one kernel pass."""
+
+    radius: Optional[int] = None     # None = engine's stcf_radius
+    tau_tw: Optional[float] = None   # None = engine's correlation window
+    include_self: bool = False
+    decay: Surface = Surface()
+
+    @classmethod
+    def from_config(cls, cfg: stcf_mod.STCFConfig) -> "Stcf":
+        return cls(radius=cfg.radius, tau_tw=cfg.tau_tw,
+                   include_self=cfg.include_self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Count:
+    """Saturating n-bit per-pixel event counter (float32 in [0, 2^n-1]),
+    polarity-merged like the offline ``representations.event_count``.
+    Needs the engine's counter plane (``TSEngineConfig.specs``)."""
+
+    n_bits: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Ebbi:
+    """Event-based binary image: 1.0 where any event landed since the
+    slot was attached (polarity-merged, like ``representations.ebbi``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SaeRaw:
+    """The raw surface of active events: last write time per cell in
+    seconds, -inf = never written."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TsQuantized:
+    """TS rebuilt from n_T-bit, ``tick``-second timestamps that WRAP on
+    overflow — the SRAM TPI failure mode of ref [26].  ``tau`` defaults
+    to the engine's ideal-TS constant."""
+
+    n_bits: int = 16
+    tick: float = 1e-3
+    tau: Optional[float] = None
+
+
+_PRODUCT_TYPES = (Surface, Mask, Stcf, Count, Ebbi, SaeRaw, TsQuantized)
+
+# lowercase helpers: the constructor surface users actually type
+surface = Surface
+mask = Mask
+stcf = Stcf
+count = Count
+ebbi = Ebbi
+sae_raw = SaeRaw
+ts_quantized = TsQuantized
+
+
+# ----------------------------------------------------------------------------
+# the spec
+# ----------------------------------------------------------------------------
+
+class ReadoutSpec:
+    """An immutable, hashable composition of named readout products.
+
+    Construct with keyword arguments mapping output names to product
+    descriptors::
+
+        ReadoutSpec(surface=surface(), stcf=stcf(), count=count(4))
+
+    The name is the key the read result carries the product under; any
+    identifier works (``ReadoutSpec(fast=surface(tau=0.01))``).  Two
+    specs with the same (name, product) pairs are equal and hash equal
+    regardless of construction order, so they share one compiled
+    program — the spec is the jit cache key, like ``backend``.
+    """
+
+    __slots__ = ("products", "_hash")
+
+    def __init__(self, **products):
+        if not products:
+            raise ValueError("a ReadoutSpec needs at least one product")
+        for name, p in products.items():
+            if not isinstance(p, _PRODUCT_TYPES):
+                raise TypeError(
+                    f"product {name!r} must be one of "
+                    f"{[t.__name__ for t in _PRODUCT_TYPES]}, got {p!r}"
+                )
+        object.__setattr__(self, "products",
+                           tuple(sorted(products.items())))
+        object.__setattr__(self, "_hash", hash(self.products))
+
+    def __setattr__(self, *_):
+        raise AttributeError("ReadoutSpec is immutable")
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        return (isinstance(other, ReadoutSpec)
+                and self.products == other.products)
+
+    def __repr__(self):
+        inner = ", ".join(f"{n}={p!r}" for n, p in self.products)
+        return f"ReadoutSpec({inner})"
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.products)
+
+    def __contains__(self, name: str) -> bool:
+        return any(n == name for n, _ in self.products)
+
+    def __getitem__(self, name: str):
+        for n, p in self.products:
+            if n == name:
+                return p
+        raise KeyError(name)
+
+    def surface_products(self) -> Tuple[Tuple[str, Surface], ...]:
+        return tuple((n, p) for n, p in self.products
+                     if isinstance(p, Surface))
+
+
+#: the spec behind the classic ``readout``: one decayed surface, engine decay
+SURFACE_SPEC = ReadoutSpec(surface=Surface())
+
+
+def needs_counts(spec: ReadoutSpec) -> bool:
+    """Whether serving ``spec`` requires the pool's counter plane."""
+    return any(isinstance(p, Count) for _, p in spec.products)
+
+
+# ----------------------------------------------------------------------------
+# spec resolution: static descriptors -> traced decay params
+# ----------------------------------------------------------------------------
+
+def _decay_params(p: Surface, cfg) -> edram.DecayParams:
+    """Decay params for one surface-like product under engine config
+    ``cfg`` (a ``TSEngineConfig``); every ``None`` field inherits.
+
+    Fails fast on overrides the resolved mode cannot use: a ``tau`` on
+    an eDRAM read (or ``cmem_f`` on an ideal one) would otherwise be
+    silently ignored and serve the engine-default surface.
+    """
+    mode = p.mode or cfg.mode
+    if mode == "ideal":
+        if p.cmem_f is not None:
+            raise ValueError(
+                f"surface product resolves to mode='ideal' but sets "
+                f"cmem_f={p.cmem_f}; cmem_f only shapes the eDRAM "
+                "transient (pass mode='edram' or drop it)"
+            )
+        return representations_mod.edram_ideal_params(
+            p.tau if p.tau is not None else cfg.tau
+        )
+    if p.tau is not None:
+        raise ValueError(
+            f"surface product resolves to mode='edram' but sets "
+            f"tau={p.tau}; tau only shapes the ideal exponential "
+            "(pass mode='ideal' or drop it)"
+        )
+    return edram.decay_params_for_cmem(
+        p.cmem_f if p.cmem_f is not None else cfg.cmem_f
+    )
+
+
+def _v_tw(decay: Surface, tau_tw: Optional[float], cfg) -> float:
+    """Static comparator threshold for a window product (host float —
+    part of the jit cache key, matching ``ops``' static ``v_tw``)."""
+    tw = tau_tw if tau_tw is not None else cfg.tau_tw
+    mode = decay.mode or cfg.mode
+    if mode == "ideal":
+        tau = decay.tau if decay.tau is not None else cfg.tau
+        return float(np.exp(-tw / tau))
+    return float(edram.v_tw_for_window(tw, _decay_params(decay, cfg)))
+
+
+def resolve_static(spec: ReadoutSpec, cfg) -> Tuple[Tuple[str, float], ...]:
+    """Per-product *static* comparator thresholds for ``spec`` under
+    ``cfg``: a hashable ``(name, v_tw)`` tuple that travels with the spec
+    into the jit cache key (``kernels.ops`` takes ``v_tw`` static, so it
+    must be a host float resolved before tracing)."""
+    return tuple(
+        (name, _v_tw(p.decay, p.tau_tw, cfg))
+        for name, p in spec.products if isinstance(p, (Mask, Stcf))
+    )
+
+
+def resolve_dynamic(spec: ReadoutSpec, cfg) -> Dict[str, edram.DecayParams]:
+    """Per-product *traced* decay params for ``spec`` under ``cfg``.
+
+    Keeping params runtime arguments (not trace-time constants) is what
+    preserves bit-identity with the unsharded/pre-spec paths — baking
+    them in would let XLA constant-fold the transcendentals differently
+    (same rule the sharded engine follows)."""
+    dyn: Dict[str, edram.DecayParams] = {}
+    for name, p in spec.products:
+        if isinstance(p, Surface):
+            dyn[name] = _decay_params(p, cfg)
+        elif isinstance(p, (Mask, Stcf)):
+            dyn[name] = _decay_params(p.decay, cfg)
+        elif isinstance(p, TsQuantized):
+            dyn[name] = representations_mod.edram_ideal_params(
+                p.tau if p.tau is not None else cfg.tau
+            )
+    return dyn
+
+
+def read_products(
+    sae: jax.Array,                        # (S, P, H, W) slot-pool SAE
+    counts,                                # (S, H, W) int32 or None
+    t_now,
+    dynamic: Dict[str, edram.DecayParams],  # traced, from resolve_dynamic
+    spec: ReadoutSpec,                     # static
+    cfg,                                   # static (TSEngineConfig)
+    backend: str,                          # static, pre-resolved
+    statics: Tuple[Tuple[str, float], ...] = (),  # from resolve_static
+) -> Dict[str, jax.Array]:
+    """Trace-time body of one spec read: every product from one program.
+
+    Called under jit (single-device) or shard_map (device-parallel) with
+    ``spec``/``cfg``/``backend``/``statics`` static.  Each product
+    dispatches the same ``kernels.ops`` entry its standalone method used
+    — independent subgraphs over the shared SAE input, so within-product
+    math (and bits) match the unfused dispatches.
+    """
+    v_tws = dict(statics)
+    out: Dict[str, jax.Array] = {}
+    for name, p in spec.products:
+        if isinstance(p, Surface):
+            out[name] = ops.ts_decay(sae, t_now, dynamic[name],
+                                     block=cfg.block, backend=backend)
+        elif isinstance(p, Mask):
+            _, m = ops.ts_decay_with_mask(
+                sae, t_now, dynamic[name], v_tw_static=v_tws[name],
+                block=cfg.block, backend=backend,
+            )
+            out[name] = m
+        elif isinstance(p, Stcf):
+            radius = p.radius if p.radius is not None else cfg.stcf_radius
+            out[name] = ops.stcf_support_fused(
+                sae, dynamic[name], v_tws[name], t_now,
+                radius=radius, include_self=p.include_self, backend=backend,
+            )
+        elif isinstance(p, Count):
+            if counts is None:
+                raise ValueError(
+                    f"spec product {name!r} needs the counter plane; "
+                    "declare a count-bearing spec in TSEngineConfig.specs"
+                )
+            out[name] = ops.event_count_read(counts, n_bits=p.n_bits)
+        elif isinstance(p, Ebbi):
+            out[name] = ops.ebbi_read(sae)
+        elif isinstance(p, SaeRaw):
+            out[name] = sae
+        elif isinstance(p, TsQuantized):
+            stored = ops.ts_quantize_sae(sae, n_bits=p.n_bits, tick=p.tick)
+            out[name] = ops.ts_wrapped_read(
+                stored, t_now, dynamic[name], n_bits=p.n_bits, tick=p.tick,
+                block=cfg.block, backend=backend,
+            )
+        else:  # pragma: no cover — closed by the constructor type check
+            raise TypeError(p)
+    return out

@@ -1,5 +1,19 @@
 """Batched streaming time-surface serving engine (multi-sensor front end).
 
+The public surface is **sessions + declarative readout specs**:
+``engine.attach()`` returns a ``serve.api.SensorSession`` owning one
+slot's lifecycle (``push`` / ``read`` / ``push_and_read`` / ``detach``),
+and every read takes a ``serve.spec.ReadoutSpec`` — a static, hashable
+description of *what to read* (decayed surface, STCF support map,
+comparator mask, event-count / EBBI / raw-SAE / wrap-quantized-TS
+baselines).  The spec is part of the jit cache key exactly like the
+``backend`` selector: each unique spec compiles **one fused batched
+dispatch** returning all of its products over the whole pool, and every
+session shares that entry.  The method-per-feature names of earlier
+revisions (``acquire`` / ``ingest`` / ``readout`` / ``readout_with_mask``
+/ ``support_map`` / ``ingest_and_read``) survive one release as
+deprecated shims over the session/spec path, value-identical to it.
+
 A fixed pool of per-sensor *slots*, each holding one ``SurfaceState``
 (SAE + polarity metadata), batched along a leading slot axis so the whole
 pool is one pytree:
@@ -25,26 +39,32 @@ the double-exponential eDRAM transient with ``a1=1, a2=0, b=0, tau1=tau``,
 so readout is bit-identical to the offline ``core.time_surface`` pipeline
 in either mode.
 
-**Fused ingest->readout path** — ``ingest_and_read(items, t_now)`` scatters
-the chunks and returns the decayed pool surface from one jit'd program
-(the serving form of the ``kernels.ops.ts_fused`` family).  Its speed
-comes from the *dirty-tile cache* carried in the slot-pool pytree
-(``ReadoutCache``):
+**Fused ingest->readout path** — ``serve_step(items, spec, t_now)``
+(session form: ``push_and_read``) scatters the chunks and serves the
+spec's products from one jit'd program (the serving form of the
+``kernels.ops.ts_fused`` family).  Its speed comes from the *dirty-tile
+cache* carried in the slot-pool pytree (``ReadoutCache``):
 
-  * the last readout is cached tiled as (S, TP, block_h, block_w) next to
-    a (S, TP) dirty mask; every scatter (fused or plain ``ingest``) marks
-    the tiles its events touched,
-  * a repeat call at the **same** ``t_now`` re-reads only the dirty tiles
-    through the same ``ts_decay`` kernel and patches them into the cache
+  * the last surface readout is cached tiled as (S, TP, block_h,
+    block_w) next to a (S, TP) dirty mask; every scatter (fused or plain
+    push) marks the tiles its events touched,
+  * a repeat call under the **same cache epoch** — same ``t_now``, same
+    surface product — re-reads only the dirty tiles through the same
+    ``ts_decay`` kernel and patches them into the cache
     (``ops.ts_fused_dirty``) — O(touched tiles) transcendentals instead of
     O(H*W), the in-sensor cost structure served,
-  * when ``t_now`` moves (tracked host-side in ``_cache_t``), or more than
-    ``max_dirty_tiles`` tiles are dirty, the call falls back to one dense
-    pass that refills the whole cache — never a wrong answer, only a
-    slower one.
+  * when the epoch moves (``t_now`` changed or a different surface
+    product took the cache over, both tracked host-side in
+    ``_cache_t``/``_cache_surface``), or more than ``max_dirty_tiles``
+    tiles are dirty, the call falls back to one dense pass that refills
+    the whole cache — never a wrong answer, only a slower one.
 
-Cache coherence is preserved by every state transition: plain ``ingest``
-marks dirty tiles, and acquire/release wipe a slot's cache rows to zeros —
+The cache is *spec-keyed at the host*: the device state tracks which
+tiles are stale, the host tracks what the clean tiles hold (which
+surface product, read at which ``t_now``), so interleaving fused reads
+of different specs can never serve one product's bits as another's.
+Cache coherence is preserved by every state transition: plain pushes
+mark dirty tiles, and attach/detach wipe a slot's cache rows to zeros —
 exactly the readout of a never-written surface at any ``t_now``, so a
 reset never invalidates the pool-wide cache epoch.  Incremental and dense
 readouts are bit-identical (clean tiles hold bits the same kernel produced
@@ -70,7 +90,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+import warnings
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +110,8 @@ from repro.events import pipeline
 from repro.events import synthetic as syn
 from repro.hw import constants as C
 from repro.kernels import ops
+from repro.serve import spec as spec_mod
+from repro.serve.api import SensorSession
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,10 +135,24 @@ class TSEngineConfig:
     # 0 = auto (a quarter of the pool's tiles, at least 16).  On a sharded
     # engine the cap applies per shard.  Overflow falls back to one dense
     # pass — correctness never depends on this knob.
+    specs: Tuple[spec_mod.ReadoutSpec, ...] = ()
+    # the ReadoutSpecs this engine intends to serve.  Purely declarative
+    # for SAE-only products (any spec can be read at runtime); its one
+    # structural effect is state sizing: a declared spec needing the
+    # per-slot counter plane (``count(...)``) makes ``init_state``
+    # materialize it — undeclared count reads fail fast instead of
+    # silently serving zero counts.
 
     def __post_init__(self):
         assert self.mode in ("edram", "ideal"), self.mode
         ops.resolve_backend(self.backend)  # fail fast on typos
+        for s in self.specs:
+            assert isinstance(s, spec_mod.ReadoutSpec), s
+
+    @property
+    def needs_counts(self) -> bool:
+        """Whether any declared spec requires the counter plane."""
+        return any(spec_mod.needs_counts(s) for s in self.specs)
 
     def tile_counts(self) -> Tuple[int, int, int]:
         """(tiles_h, tiles_w, tiles_per_slot) for the dirty-tile cache."""
@@ -123,13 +160,13 @@ class TSEngineConfig:
         return th, tw, self.polarities * tpl
 
     def decay_params(self) -> edram.DecayParams:
-        """Uniform decay params; ideal TS as a degenerate double-exp."""
+        """Uniform decay params; ideal TS as a degenerate double-exp
+        (one shared constructor, ``representations.edram_ideal_params``,
+        so served and offline ideal reads can never drift)."""
         if self.mode == "ideal":
-            f32 = jnp.float32
-            return edram.DecayParams(
-                a1=f32(1.0), tau1=f32(self.tau), a2=f32(0.0), tau2=f32(1.0),
-                b=f32(0.0),
-            )
+            from repro.core import representations
+
+            return representations.edram_ideal_params(self.tau)
         return edram.decay_params_for_cmem(self.cmem_f)
 
     def v_tw(self) -> float:
@@ -165,12 +202,17 @@ class EngineState(NamedTuple):
     """The full slot pool as one pytree (leading axis = slot).
 
     Liveness is host-side bookkeeping (the engine's free list); device
-    state holds only what jitted computations read.
+    state holds only what jitted computations read.  ``counts`` is the
+    optional per-slot event-counter plane serving ``count(...)`` spec
+    products; it materializes only when the engine config declares a
+    spec needing it (``None`` otherwise — an empty pytree subtree, so
+    every jit/shard_map entry handles both layouts).
     """
 
     surfaces: ts.SurfaceState   # sae (S, P, H, W), t_last (S,), n_events (S,)
     generation: jax.Array       # (S,) int32 — bumped on every acquire
     cache: ReadoutCache         # dirty-tile readout cache (see above)
+    counts: Optional[jax.Array] = None  # (S, H, W) int32, polarity-merged
 
 
 def init_state(cfg: TSEngineConfig, n_slots: Optional[int] = None) -> EngineState:
@@ -191,6 +233,8 @@ def init_state(cfg: TSEngineConfig, n_slots: Optional[int] = None) -> EngineStat
             tiles=jnp.zeros((s, tp, bh, bw), jnp.float32),
             dirty=jnp.zeros((s, tp), bool),
         ),
+        counts=(jnp.zeros((s, h, w), jnp.int32)
+                if cfg.needs_counts else None),
     )
 
 
@@ -235,9 +279,15 @@ def _scatter_chunks(
     th, tw, _ = ops.tile_geometry(h, w, (bh, bw))
     tid = (pol * th + ev.y // bh) * tw + ev.x // bw
     dirty = state.cache.dirty.at[sid, tid].max(valid, mode="drop")
+    counts = state.counts
+    if counts is not None:   # polarity-merged, like representations.event_count
+        counts = counts.at[sid, ev.y, ev.x].add(
+            valid.astype(jnp.int32), mode="drop"
+        )
     return state._replace(
         surfaces=ts.SurfaceState(sae=sae, t_last=t_last, n_events=n_events),
         cache=state.cache._replace(dirty=dirty),
+        counts=counts,
     )
 
 
@@ -306,7 +356,36 @@ def reset_slot(
             tiles=state.cache.tiles.at[slot].set(0.0),
             dirty=state.cache.dirty.at[slot].set(False),
         ),
+        counts=(None if state.counts is None
+                else state.counts.at[slot].set(0)),
     )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "cfg", "backend", "statics")
+)
+def read_spec_products(
+    sae: jax.Array,                    # (S, P, H, W) pool SAE
+    counts,                            # (S, H, W) int32 or None
+    t_now,
+    dynamic,                           # {name: DecayParams}, traced
+    spec: spec_mod.ReadoutSpec,
+    cfg: TSEngineConfig,
+    backend: str,
+    statics: Tuple[Tuple[str, float], ...] = (),
+) -> Dict[str, jax.Array]:
+    """One fused batched dispatch serving every product of ``spec``.
+
+    ``spec`` (with ``cfg``/``backend``) is the jit cache key: the first
+    read of a new spec traces once, every later read of an equal spec —
+    from any session — reuses the compiled entry.  Products are
+    independent subgraphs over the shared pool state, each dispatching
+    the same ``kernels.ops`` math its standalone predecessor ran, so the
+    ``surface`` product stays bit-identical to a standalone ``ts_decay``
+    (gated by the kernel-equivalence and engine-differential suites).
+    """
+    return spec_mod.read_products(sae, counts, t_now, dynamic, spec, cfg,
+                                  backend, statics)
 
 
 def _read_refresh(
@@ -371,12 +450,12 @@ class _ShardPlan:
         self.sharding = shd.slot_pool_sharding(mesh)
         spec = shd.slot_pool_spec(mesh)
         rep = P()
-        # v_tw is a *static* threshold in kernels.ops (part of the jit
-        # key), so closing over it matches the single-device path; decay
-        # params stay runtime arguments — baking them in as shard_map
-        # closure constants lets XLA constant-fold the transcendentals
-        # differently and costs bit-identity with the unsharded engine.
-        v_tw = cfg.v_tw()
+        # comparator thresholds are *static* in kernels.ops (part of the
+        # jit key; serve.spec resolves them per product), matching the
+        # single-device path; decay params stay runtime arguments —
+        # baking them in as shard_map closure constants lets XLA
+        # constant-fold the transcendentals differently and costs
+        # bit-identity with the unsharded engine.
         backend = ops.resolve_backend(cfg.backend)
 
         def smap(fn, in_specs, out_specs):
@@ -415,6 +494,8 @@ class _ShardPlan:
                                     state.cache.tiles),
                     dirty=jnp.where(hit[:, None], False, state.cache.dirty),
                 ),
+                counts=(None if state.counts is None
+                        else jnp.where(hit[:, None, None], 0, state.counts)),
             )
 
         self.reset_acquire = jax.jit(smap(
@@ -424,30 +505,15 @@ class _ShardPlan:
             lambda st, s: local_reset(st, s, False), (spec, rep), spec,
         ), donate_argnums=0)
 
-        def local_readout(surfaces, t_now, params):
-            return ts.surface_read_kernel(
-                surfaces, t_now, params, block=cfg.block, backend=backend,
-            )
-
-        self.readout = jax.jit(smap(local_readout, (spec, rep, rep), spec))
-
-        def local_mask(sae, t_now, params):
-            return ops.ts_decay_with_mask(
-                sae, t_now, params, v_tw_static=v_tw, block=cfg.block,
-                backend=backend,
-            )
-
-        self.readout_with_mask = jax.jit(
-            smap(local_mask, (spec, rep, rep), (spec, spec))
-        )
-
-        def local_support(sae, t_now, params):
-            return ops.stcf_support_fused(
-                sae, params, v_tw, t_now, radius=cfg.stcf_radius,
-                backend=backend,
-            )
-
-        self.support_map = jax.jit(smap(local_support, (spec, rep, rep), spec))
+        # spec readers compile lazily, one shard_map program per unique
+        # ReadoutSpec (the sharded analogue of ``read_spec_products``'s
+        # jit cache); the slot-leading product arrays all shard like the
+        # pool, scalars/params replicate
+        self._cfg = cfg
+        self._smap = smap
+        self._spec_p, self._rep_p = spec, rep
+        self._backend = backend
+        self._spec_readers: Dict[spec_mod.ReadoutSpec, object] = {}
 
         # fused ingest->readout: scatter + dirty-tile refresh, all local.
         # The gather cap applies per shard (each shard counts only its own
@@ -493,6 +559,43 @@ class _ShardPlan:
         self.refresh_inc = jax.jit(smap(local_refresh(False), *r_specs),
                                    donate_argnums=0)
 
+    def spec_reader(self, rspec: spec_mod.ReadoutSpec):
+        """The compiled pool-wide reader for one ReadoutSpec (cached).
+
+        Each product array leads with the slot axis, so the whole output
+        dict shards exactly like the pool; the spec body runs shard-local
+        (zero collectives), same as every other hot-path op here.  Two
+        layouts per spec never coexist: whether the counter plane is
+        materialized is fixed at engine construction.
+        """
+        fn = self._spec_readers.get(rspec)
+        if fn is not None:
+            return fn
+        from repro.distributed import sharding as shd
+
+        cfg, backend = self._cfg, self._backend
+        p, rep = self._spec_p, self._rep_p
+        out_specs = shd.slot_pool_out_specs(self.mesh, rspec.names)
+        statics = spec_mod.resolve_static(rspec, cfg)
+
+        def local_with_counts(sae, counts, t_now, dynamic):
+            return spec_mod.read_products(sae, counts, t_now, dynamic,
+                                          rspec, cfg, backend, statics)
+
+        def local_no_counts(sae, t_now, dynamic):
+            return spec_mod.read_products(sae, None, t_now, dynamic,
+                                          rspec, cfg, backend, statics)
+
+        if spec_mod.needs_counts(rspec):
+            fn = jax.jit(self._smap(local_with_counts,
+                                    (p, p, rep, rep), out_specs))
+        else:
+            base = jax.jit(self._smap(local_no_counts,
+                                      (p, rep, rep), out_specs))
+            fn = lambda sae, counts, t_now, dynamic: base(sae, t_now, dynamic)
+        self._spec_readers[rspec] = fn
+        return fn
+
     def place(self, tree):
         """Pin a slot-pool pytree to the plan's NamedSharding."""
         return jax.device_put(tree, self.sharding)
@@ -536,21 +639,34 @@ class _ShardPlan:
 #: an ingest item: (slot id, packed AER words | host EventStream | EventBatch)
 IngestItem = Tuple[int, Union[np.ndarray, syn.EventStream, ts.EventBatch]]
 
+#: specs behind the deprecated shims (module-level so every engine shares
+#: one jit cache entry per shim, exactly like the pre-spec methods did)
+_SURFACE_MASK_SPEC = spec_mod.ReadoutSpec(surface=spec_mod.Surface(),
+                                          mask=spec_mod.Mask())
+_STCF_SPEC = spec_mod.ReadoutSpec(stcf=spec_mod.Stcf())
+
 
 class TimeSurfaceEngine:
     """Host-facing multi-sensor serving engine over the batched slot state.
 
-    Typical use::
+    Typical use (sessions + declarative specs)::
+
+        from repro.serve import spec as rs
 
         eng = TimeSurfaceEngine(TSEngineConfig(h=240, w=320, n_slots=8))
-        slot = eng.acquire()
-        eng.ingest([(slot, packed_aer_words)])
-        surface = eng.readout(t_now)[slot]       # (P, H, W)
-        eng.release(slot)
+        cam = eng.attach()                     # SensorSession on a slot
+        cam.push(packed_aer_words)
+        spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf())
+        out = cam.read(spec, t_now)            # {"surface": ..., "stcf": ...}
+        cam.detach()
 
-    With a ``mesh`` the pool shards over the mesh's data axes (see the
-    module docstring): same API, same per-slot bits, ``n_slots_padded``
-    rows in pool-shaped outputs.
+    Pool-level calls (``read`` / ``serve_step``) return pool-shaped
+    products for all slots in one fused dispatch per unique spec.  With a
+    ``mesh`` the pool shards over the mesh's data axes (see the module
+    docstring): same API, same per-slot bits, ``n_slots_padded`` rows in
+    pool-shaped outputs.  The pre-spec method names remain as deprecated
+    shims (one ``DeprecationWarning`` each per engine), value-identical
+    to the session/spec path they forward to.
     """
 
     def __init__(self, cfg: TSEngineConfig, mesh: Optional[Mesh] = None):
@@ -562,14 +678,25 @@ class TimeSurfaceEngine:
         state = init_state(cfg, n_slots=self.n_slots_padded)
         self.state = self._plan.place(state) if self._plan else state
         self._free: List[int] = list(range(cfg.n_slots))
+        self._sessions: Dict[int, SensorSession] = {}
         self._params = cfg.decay_params()
         self._v_tw = cfg.v_tw()
         self._stcf_cfg = cfg.stcf_config()
         self._backend = ops.resolve_backend(cfg.backend)
-        # dirty-tile cache epoch: the t_now the cache tiles were read at
-        # (None = cold).  Device state tracks *which* tiles are stale;
-        # the host tracks *when* the clean ones were computed.
+        # dirty-tile cache epoch, spec-keyed: the (surface product,
+        # t_now) the cache tiles were read under (None = cold).  Device
+        # state tracks *which* tiles are stale; the host tracks *what*
+        # the clean ones hold — a fused read whose surface product or
+        # t_now differs from the epoch refills densely and takes the
+        # cache over.
         self._cache_t: Optional[float] = None
+        self._cache_surface: Optional[Tuple[str, spec_mod.Surface]] = None
+        self._dynamic_cache: Dict[spec_mod.ReadoutSpec, dict] = {}
+        # serve_step's spec minus its cached surface product, precomputed
+        # per spec (the fused path is the per-burst hot loop)
+        self._rest_cache: Dict[spec_mod.ReadoutSpec,
+                               Optional[spec_mod.ReadoutSpec]] = {}
+        self._warned: set = set()
         _, _, tp = cfg.tile_counts()
         self._max_dirty = (
             self._plan.max_dirty if self._plan
@@ -580,16 +707,28 @@ class TimeSurfaceEngine:
     def mesh(self) -> Optional[Mesh]:
         return self._plan.mesh if self._plan else None
 
-    # -- slot pool ----------------------------------------------------------
-    def acquire(self) -> int:
-        """Claim a free slot (resetting its surface); raises when full."""
+    # -- sessions ------------------------------------------------------------
+    def attach(self) -> SensorSession:
+        """Claim a free slot (resetting its surface) and return the
+        ``SensorSession`` owning it; raises ``RuntimeError`` when the
+        pool is full."""
         if not self._free:
             raise RuntimeError(
                 f"no free sensor slots (pool size {self.cfg.n_slots})"
             )
         slot = self._free.pop(0)
         self.state = self._reset(slot, bump_generation=True)
-        return slot
+        session = SensorSession(self, slot)
+        self._sessions[slot] = session
+        return session
+
+    def _detach(self, slot: int) -> None:
+        """Session teardown: wipe the slot and return it to the pool."""
+        self._check_acquired(slot)
+        self.state = self._reset(slot, bump_generation=False)
+        self._sessions.pop(slot, None)
+        self._free.append(slot)
+        self._free.sort()
 
     def _reset(self, slot: int, bump_generation: bool) -> EngineState:
         if self._plan:
@@ -606,13 +745,6 @@ class TimeSurfaceEngine:
             )
         if slot in self._free:
             raise ValueError(f"slot {slot} is not acquired")
-
-    def release(self, slot: int) -> None:
-        """Free a slot, wiping its surface (released slots read as zero)."""
-        self._check_acquired(slot)
-        self.state = self._reset(slot, bump_generation=False)
-        self._free.append(slot)
-        self._free.sort()
 
     @property
     def n_live(self) -> int:
@@ -651,11 +783,15 @@ class TimeSurfaceEngine:
         return b
 
     def _collect(self, items: Sequence[IngestItem]):
-        """Normalize ingest items to (slot_ids, chunks, per-item spans)."""
+        """Normalize ingest items to (slot_ids, chunks, per-item spans).
+        Items may target a slot id or a live ``SensorSession``."""
         slot_ids: List[int] = []
         chunks: List[ts.EventBatch] = []
         spans: List[Tuple[int, int]] = []
         for slot, payload in items:
+            if isinstance(slot, SensorSession):
+                slot._check()
+                slot = slot.slot
             self._check_acquired(slot)
             cs = self._as_chunks(payload)
             spans.append((len(chunks), len(chunks) + len(cs)))
@@ -675,94 +811,173 @@ class TimeSurfaceEngine:
         ev = jax.tree_util.tree_map(lambda *fs: jnp.stack(fs), *chunks)
         return jnp.asarray(slot_ids, jnp.int32), ev
 
-    def ingest(
-        self,
-        items: Sequence[IngestItem],
-        with_support: bool = False,
-    ):
-        """Scatter event payloads into their slots under one jit call.
+    def push(self, items: Sequence[IngestItem]) -> None:
+        """Pool-level batched ingest: one fused scatter call for many
+        sensors.  ``items`` pairs a ``SensorSession`` (or its slot id)
+        with a payload; ``SensorSession.push`` is the single-sensor form.
+        """
+        self._ingest_items(items)
+
+    def _ingest_items(self, items: Sequence[IngestItem]) -> None:
+        """Scatter event payloads into their slots under one jit call
+        (the body behind ``SensorSession.push``).
 
         ``items`` pairs a slot id with packed AER words (uint64), a host
         ``EventStream``, or a pre-padded ``EventBatch``.  Payloads longer
-        than ``chunk_capacity`` are split host-side.  With
-        ``with_support=True`` also returns, per input item, the STCF
-        support of its events against the slot's surface (concatenated over
-        split chunks) and the signal verdicts ``support >= threshold``.
-
-        The plain path fuses every chunk into one scatter call; on a
-        sharded engine each chunk row is routed to the device owning its
-        slot and scattered locally under ``shard_map`` (donated state, no
-        collectives).  The ``with_support`` path instead processes chunks
-        *sequentially* — each chunk's support sees all earlier chunks'
-        writes — which makes the labels exactly those of the offline
-        ``stcf_chunked`` scan with ``chunk=chunk_capacity``, at the cost of
-        one jit call per chunk (on a sharded engine this labeling path runs
-        through the global gather/scatter, not the data-parallel fast
-        path).
+        than ``chunk_capacity`` are split host-side.  Every chunk fuses
+        into one scatter call; on a sharded engine each chunk row is
+        routed to the device owning its slot and scattered locally under
+        ``shard_map`` (donated state, no collectives).
         """
-        slot_ids, chunks, spans = self._collect(items)
+        slot_ids, chunks, _ = self._collect(items)
         if not chunks:
-            return [] if with_support else None
-
-        if with_support:
-            sups, valids = [], []
-            for slot, chunk in zip(slot_ids, chunks):
-                sid = jnp.asarray([slot], jnp.int32)
-                ev1 = jax.tree_util.tree_map(lambda f: f[None], chunk)
-                sups.append(ingest_support(
-                    self.state, sid, ev1, self._stcf_cfg, self.cfg.mode,
-                    self._params, jnp.float32(self._v_tw),
-                ))
-                valids.append(chunk.valid)
-                self.state = ingest_step(
-                    self.state, sid, ev1, polarities=self.cfg.polarities
-                )
-            if self._plan:  # re-pin: the global scatter may drop the layout
-                self.state = self._plan.place(self.state)
-            sup_np = np.concatenate([np.asarray(s)[0] for s in sups])
-            valid = np.concatenate([np.asarray(v) for v in valids])
-            cap = self.cfg.chunk_capacity
-            out = []
-            for lo, hi in spans:
-                s = sup_np[lo * cap:hi * cap]
-                v = valid[lo * cap:hi * cap]
-                out.append((s[v], s[v] >= self.cfg.stcf_threshold))
-            return out
-
+            return
         if self._plan:
             sids, ev = self._plan.route(slot_ids, chunks)
             self.state = self._plan.ingest(self.state, sids, ev)
-            return None
-
+            return
         sids, ev = self._stack_chunks(slot_ids, chunks)
         self.state = ingest_step(
             self.state, sids, ev, polarities=self.cfg.polarities
         )
-        return None
 
-    def ingest_and_read(self, items: Sequence[IngestItem], t_now) -> jax.Array:
-        """Scatter event payloads and read the whole pool at ``t_now`` in
-        one fused jit'd program; returns (S, P, H, W) like ``readout``.
+    def _ingest_labeled(self, items: Sequence[IngestItem]) -> list:
+        """Scatter payloads *and* label each event with its STCF support
+        (the body behind ``SensorSession.push_labeled``).
 
-        Consecutive calls at the **same** ``t_now`` take the dirty-tile
-        incremental path: only the tiles this call's chunks (plus any
-        interleaved plain ``ingest``) touched are re-read through the
-        ``ts_decay`` kernel; every clean tile comes from the cache filled
-        by the previous call.  When ``t_now`` moves, the cache is cold, or
-        more than ``max_dirty_tiles`` tiles are dirty, the call refills
-        the cache with one dense pass — the *identical* compiled program
-        ``readout`` runs, so fused and plain readouts are bit-identical
-        (see ``ops.ts_fused_dirty``).  An empty ``items`` list is a pure
-        cached read.
+        Chunks process sequentially — each chunk's support sees all
+        earlier chunks' writes — so the labels are exactly those of the
+        offline ``stcf_chunked`` scan with ``chunk=chunk_capacity``, at
+        the cost of one jit call per chunk (on a sharded engine this
+        labeling path runs through the global gather/scatter, not the
+        data-parallel fast path).  Returns, per input item,
+        ``(support, support >= threshold)`` over its valid events.
+        """
+        slot_ids, chunks, spans = self._collect(items)
+        if not chunks:
+            return []
+        sups, valids = [], []
+        for slot, chunk in zip(slot_ids, chunks):
+            sid = jnp.asarray([slot], jnp.int32)
+            ev1 = jax.tree_util.tree_map(lambda f: f[None], chunk)
+            sups.append(ingest_support(
+                self.state, sid, ev1, self._stcf_cfg, self.cfg.mode,
+                self._params, jnp.float32(self._v_tw),
+            ))
+            valids.append(chunk.valid)
+            self.state = ingest_step(
+                self.state, sid, ev1, polarities=self.cfg.polarities
+            )
+        if self._plan:  # re-pin: the global scatter may drop the layout
+            self.state = self._plan.place(self.state)
+        sup_np = np.concatenate([np.asarray(s)[0] for s in sups])
+        valid = np.concatenate([np.asarray(v) for v in valids])
+        cap = self.cfg.chunk_capacity
+        out = []
+        for lo, hi in spans:
+            s = sup_np[lo * cap:hi * cap]
+            v = valid[lo * cap:hi * cap]
+            out.append((s[v], s[v] >= self.cfg.stcf_threshold))
+        return out
 
-        On a sharded engine the whole step instead runs per shard under
+    # -- spec reads ----------------------------------------------------------
+    def _check_spec(self, spec: spec_mod.ReadoutSpec) -> None:
+        if not isinstance(spec, spec_mod.ReadoutSpec):
+            raise TypeError(
+                f"expected a ReadoutSpec, got {type(spec).__name__}; "
+                "compose one with serve.spec (e.g. "
+                "ReadoutSpec(surface=surface()))"
+            )
+        if spec_mod.needs_counts(spec) and self.state.counts is None:
+            raise ValueError(
+                "spec contains a count(...) product but this engine has no "
+                "counter plane; declare a count-bearing spec in "
+                "TSEngineConfig.specs so init_state materializes it"
+            )
+
+    def _resolved(self, spec: spec_mod.ReadoutSpec):
+        """Per-spec (traced decay params, static thresholds), host-
+        resolved once per engine and cached."""
+        entry = self._dynamic_cache.get(spec)
+        if entry is None:
+            entry = (spec_mod.resolve_dynamic(spec, self.cfg),
+                     spec_mod.resolve_static(spec, self.cfg))
+            self._dynamic_cache[spec] = entry
+        return entry
+
+    def read(
+        self,
+        spec: spec_mod.ReadoutSpec = spec_mod.SURFACE_SPEC,
+        t_now: float = 0.0,
+    ) -> Dict[str, jax.Array]:
+        """Read every product of ``spec`` over the whole pool at ``t_now``
+        in **one fused batched dispatch** (the spec is the jit cache key;
+        an equal spec never retraces).  Product arrays lead with the slot
+        axis — ``n_slots_padded`` rows on a sharded engine; dead/free
+        slots read as never-written (zero surfaces, zero counts).
+
+        The ``surface()`` product runs the same ``ts_decay`` math the
+        offline ``time_surface.surface_read_kernel`` dispatches, so
+        engine and offline readouts of equal SAE state stay bit-identical,
+        composed or not, sharded or not.
+        """
+        self._check_spec(spec)
+        dynamic, statics = self._resolved(spec)
+        t = jnp.float32(t_now)
+        if self._plan:
+            fn = self._plan.spec_reader(spec)
+            out = fn(self.state.surfaces.sae, self.state.counts, t, dynamic)
+        else:
+            out = read_spec_products(
+                self.state.surfaces.sae, self.state.counts, t, dynamic,
+                spec=spec, cfg=self.cfg, backend=self._backend,
+                statics=statics,
+            )
+        return dict(out)
+
+    def serve_step(
+        self,
+        items: Sequence[IngestItem],
+        spec: spec_mod.ReadoutSpec = spec_mod.SURFACE_SPEC,
+        t_now: float = 0.0,
+    ) -> Dict[str, jax.Array]:
+        """Fused scatter + spec read: ingest ``items`` and serve every
+        product of ``spec`` at ``t_now`` (the body behind
+        ``SensorSession.push_and_read``; an empty ``items`` list is a
+        pure cached read).
+
+        The spec's first surface product rides the **dirty-tile cache**:
+        consecutive steps under one cache epoch — same ``t_now``, same
+        surface product — re-read only the tiles this call's chunks
+        (plus any interleaved plain pushes) touched; every clean tile
+        comes from the cache filled by the previous step.  When the
+        epoch moves (``t_now`` changed, a different surface product took
+        the cache over, cold cache) or more than ``max_dirty_tiles``
+        tiles are dirty, the step refills the cache with one dense pass
+        — the *identical* compiled program a plain ``read`` runs, so
+        fused and plain readouts are bit-identical (see
+        ``ops.ts_fused_dirty``).  Non-surface products (and any second
+        surface product) always read dense, post-scatter.
+
+        On a sharded engine the scatter+refresh runs per shard under
         ``shard_map`` with donated state: the dirty mask, cache, and
         incremental-vs-dense choice are all shard-local (no collectives,
         no host sync).
         """
+        self._check_spec(spec)
+        dynamic, _ = self._resolved(spec)
+        surface_products = spec.surface_products()
+        if not surface_products:
+            # nothing cacheable: plain scatter, then one dense spec read
+            self._ingest_items(items)
+            return self.read(spec, t_now)
+
         slot_ids, chunks, _ = self._collect(items)
+        name0, prod0 = surface_products[0]
+        params0 = dynamic[name0]
         refresh_all = (
             self._cache_t is None or float(t_now) != self._cache_t
+            or self._cache_surface != (name0, prod0)
         )
         if self._plan:
             if chunks:
@@ -770,13 +985,13 @@ class TimeSurfaceEngine:
                 fn = (self._plan.ingest_read_dense if refresh_all
                       else self._plan.ingest_read_inc)
                 self.state, surface = fn(
-                    self.state, sids, ev, jnp.float32(t_now), self._params
+                    self.state, sids, ev, jnp.float32(t_now), params0
                 )
             else:   # pure cached read: refresh only, no scatter
                 fn = (self._plan.refresh_dense if refresh_all
                       else self._plan.refresh_inc)
                 self.state, surface = fn(
-                    self.state, jnp.float32(t_now), self._params
+                    self.state, jnp.float32(t_now), params0
                 )
         else:
             state = self.state
@@ -791,7 +1006,7 @@ class TimeSurfaceEngine:
                 state.surfaces.sae,
                 state.cache.tiles.reshape(s * tp, bh, bw),
                 state.cache.dirty.reshape(s * tp),
-                jnp.float32(t_now), self._params,
+                jnp.float32(t_now), params0,
                 max_dirty=self._max_dirty, block=self.cfg.block,
                 backend=self._backend, force_dense=refresh_all,
             )
@@ -800,51 +1015,91 @@ class TimeSurfaceEngine:
                 dirty=dirty.reshape(s, tp),
             ))
         self._cache_t = float(t_now)
-        return surface
-
-    # -- readout -------------------------------------------------------------
-    def readout(self, t_now) -> jax.Array:
-        """Decayed TS over the whole pool: (S, P, H, W) via the ts_decay
-        kernel (dead slots read as all-zero surfaces); S is
-        ``n_slots_padded`` on a sharded engine.
-
-        Goes through ``time_surface.surface_read_kernel`` — the same entry
-        point offline readers use — so engine and offline readouts of equal
-        SAE state are bit-identical, sharded or not.
-        """
-        if self._plan:
-            return self._plan.readout(
-                self.state.surfaces, jnp.float32(t_now), self._params
+        self._cache_surface = (name0, prod0)
+        out = {name0: surface}
+        if spec not in self._rest_cache:
+            rest = {n: p for n, p in spec.products if n != name0}
+            self._rest_cache[spec] = (
+                spec_mod.ReadoutSpec(**rest) if rest else None
             )
-        return ts.surface_read_kernel(
-            self.state.surfaces, jnp.float32(t_now), self._params,
-            block=self.cfg.block, backend=self._backend,
+        rest_spec = self._rest_cache[spec]
+        if rest_spec is not None:
+            out.update(self.read(rest_spec, t_now))
+        return {name: out[name] for name in spec.names}
+
+    # -- deprecated method-per-feature shims (one release of grace) ----------
+    def _deprecated(self, name: str, use: str) -> None:
+        if name in self._warned:
+            return
+        self._warned.add(name)
+        warnings.warn(
+            f"TimeSurfaceEngine.{name}() is deprecated; use {use} "
+            "(see the serve.spec module docstring)",
+            DeprecationWarning, stacklevel=3,
         )
+
+    def acquire(self) -> int:
+        """Deprecated: use ``attach()`` (returns a ``SensorSession``)."""
+        self._deprecated("acquire", "attach()")
+        return self.attach().slot
+
+    def release(self, slot: int) -> None:
+        """Deprecated: use ``SensorSession.detach()``."""
+        self._deprecated("release", "SensorSession.detach()")
+        self._check_acquired(slot)
+        session = self._sessions.get(slot)
+        if session is not None:
+            session.detach()
+        else:  # slot acquired before the session era — wipe directly
+            self._detach(slot)
+
+    def ingest(
+        self,
+        items: Sequence[IngestItem],
+        with_support: bool = False,
+    ):
+        """Deprecated: use ``SensorSession.push`` / ``push_labeled`` (or
+        the pool-level ``serve_step`` for multi-sensor steps)."""
+        self._deprecated(
+            "ingest", "SensorSession.push()/push_labeled()"
+        )
+        if with_support:
+            return self._ingest_labeled(items)
+        self._ingest_items(items)
+        return None
+
+    def ingest_and_read(self, items: Sequence[IngestItem], t_now) -> jax.Array:
+        """Deprecated: use ``serve_step(items, SURFACE_SPEC, t_now)`` (or
+        ``SensorSession.push_and_read``); this shim returns its
+        ``surface`` product, unchanged from the pre-spec behavior."""
+        self._deprecated(
+            "ingest_and_read", "serve_step(items, spec, t_now)"
+        )
+        return self.serve_step(items, spec_mod.SURFACE_SPEC, t_now)["surface"]
+
+    def readout(self, t_now) -> jax.Array:
+        """Deprecated: use ``read(ReadoutSpec(surface=surface()), t_now)``
+        — this shim returns that spec's ``surface`` product, bit-identical
+        to the pre-spec readout."""
+        self._deprecated("readout", 'read(spec, t_now)["surface"]')
+        return self.read(spec_mod.SURFACE_SPEC, t_now)["surface"]
 
     def readout_with_mask(self, t_now):
-        """Surface plus the fused comparator mask V > V_tw: one HBM pass."""
-        if self._plan:
-            return self._plan.readout_with_mask(
-                self.state.surfaces.sae, jnp.float32(t_now), self._params
-            )
-        return ops.ts_decay_with_mask(
-            self.state.surfaces.sae, jnp.float32(t_now), self._params,
-            v_tw_static=self._v_tw, block=self.cfg.block,
-            backend=self._backend,
+        """Deprecated: use ``read`` with a composed
+        ``ReadoutSpec(surface=surface(), mask=mask())``."""
+        self._deprecated(
+            "readout_with_mask",
+            "read(ReadoutSpec(surface=surface(), mask=mask()), t_now)",
         )
+        out = self.read(_SURFACE_MASK_SPEC, t_now)
+        return out["surface"], out["mask"]
 
     def support_map(self, t_now) -> jax.Array:
-        """Dense STCF support count per pixel over all slots (S, P, H, W):
-        SAE -> decay -> comparator -> patch sum, fused in one kernel."""
-        if self._plan:
-            return self._plan.support_map(
-                self.state.surfaces.sae, jnp.float32(t_now), self._params
-            )
-        return ops.stcf_support_fused(
-            self.state.surfaces.sae, self._params, self._v_tw,
-            jnp.float32(t_now), radius=self.cfg.stcf_radius,
-            backend=self._backend,
+        """Deprecated: use ``read`` with a ``stcf()`` product."""
+        self._deprecated(
+            "support_map", "read(ReadoutSpec(stcf=stcf()), t_now)"
         )
+        return self.read(_STCF_SPEC, t_now)["stcf"]
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:
@@ -858,6 +1113,9 @@ class TimeSurfaceEngine:
             "dirty_tiles": int(np.asarray(s.cache.dirty).sum()),
             "cache_t": self._cache_t,
             "max_dirty_tiles": self._max_dirty,
+            "sessions": sorted(self._sessions),
+            "counts_plane": s.counts is not None,
+            "compiled_specs": len(self._dynamic_cache),
         }
         if self._plan:
             out["mesh"] = {

@@ -1,0 +1,29 @@
+"""Fast config-registry checks (construction only — the slow arch smoke
+builds and runs the models).  Keeps every ``configs/*`` module inside the
+fast-suite coverage floor: constructing a config must never require
+devices, weights, or compilation."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCH_NAMES, ModelConfig, get_config
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_every_arch_config_constructs(arch):
+    cfg = get_config(arch)
+    assert isinstance(cfg, ModelConfig)
+    assert cfg.vocab > 0 and cfg.d_model > 0 and cfg.n_layers > 0
+    red = cfg.reduced()
+    assert red.n_layers <= cfg.n_layers and red.d_model <= cfg.d_model
+
+
+def test_isc_config_constructs():
+    cfg = get_config("isc-qvga")
+    assert cfg.h > 0 and cfg.w > 0 and cfg.mode in ("3d", "2d", "ideal")
+    assert dataclasses.is_dataclass(cfg)
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("not-an-arch")

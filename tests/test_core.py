@@ -7,7 +7,7 @@ import pytest
 from repro.core import edram, representations as rep, stcf
 from repro.core import time_surface as ts
 from repro.core.isc_array import ISCArray
-from repro.events import datasets, pipeline
+from repro.events import datasets, pipeline, synthetic as syn
 from repro.hw import constants as C
 from repro.hw import spice_fit
 
@@ -206,6 +206,59 @@ def test_event_count_and_ebbi():
     assert float(cnt.max()) <= 15
     assert set(np.unique(np.asarray(bi))) <= {0.0, 1.0}
     assert bool(((cnt > 0) == (bi > 0)).all())
+
+
+def test_event_count_and_ebbi_drop_out_of_range_coords():
+    """Regression: negative coordinates must not wrap into the far
+    column/row — jnp's ``mode="drop"`` only drops past-the-end indices,
+    so unmasked ``x=-1`` incremented column W-1 (the same bug class
+    fixed for the SAE scatter in the serving engine)."""
+    h, w = 6, 8
+    ev = ts.EventBatch(
+        x=jnp.asarray([-1, w, 3, -2, 3], jnp.int32),
+        y=jnp.asarray([2, 1, -1, h, 3], jnp.int32),
+        t=jnp.asarray([0.01, 0.02, 0.03, 0.04, 0.05], jnp.float32),
+        p=jnp.zeros(5, jnp.int32),
+        valid=jnp.ones(5, bool),
+    )
+    cnt = np.asarray(rep.event_count(ev, h, w))
+    bi = np.asarray(rep.ebbi(ev, h, w))
+    # only the last event is fully in range
+    assert cnt.sum() == 1.0 and cnt[3, 3] == 1.0
+    assert bi.sum() == 1.0 and bi[3, 3] == 1.0
+    # the wrap targets of the OOB events stay untouched
+    assert cnt[2, w - 1] == 0.0 and bi[2, w - 1] == 0.0
+    assert cnt[h - 1, 3] == 0.0 and bi[h - 1, 3] == 0.0
+
+
+def test_window_chunks_vectorized_equals_reference():
+    """The single-pass bucketing must reproduce the original per-window
+    loop field-for-field, including truncation and padding."""
+    for seed, cap, win in ((0, 64, 0.02), (1, 9, 0.007), (2, 4096, 0.05)):
+        s = datasets.dnd21_like("driving" if seed % 2 else "hotel_bar",
+                                h=32, w=48, duration=0.06, seed=seed)
+        got = pipeline.window_chunks(s, win, cap)
+        want = pipeline._window_chunks_reference(s, win, cap)
+        for f in ("x", "y", "t", "p", "valid"):
+            g, w_ = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+            assert g.dtype == w_.dtype and g.shape == w_.shape, (seed, f)
+            np.testing.assert_array_equal(g, w_, err_msg=f"{seed}/{f}")
+    # truncation actually exercised at cap=9: fewer kept events than input
+    s = datasets.dnd21_like("hotel_bar", h=32, w=48, duration=0.06, seed=1)
+    assert int(np.asarray(pipeline.window_chunks(s, 0.007, 9).valid).sum()) < s.n
+
+
+def test_window_chunks_empty_stream():
+    z = np.zeros(0)
+    es = syn.EventStream(x=z.astype(np.int32), y=z.astype(np.int32),
+                         t=z.astype(np.float32), p=z.astype(np.int32),
+                         is_signal=z.astype(bool), h=8, w=8)
+    got = pipeline.window_chunks(es, 0.02, 32)
+    want = pipeline._window_chunks_reference(es, 0.02, 32)
+    for f in ("x", "y", "t", "p", "valid"):
+        g, w_ = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert g.dtype == w_.dtype and (g == w_).all(), f
+    assert got.x.shape == (1, 32) and not np.asarray(got.valid).any()
 
 
 def test_sram_quantized_overflow_aliasing():

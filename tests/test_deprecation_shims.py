@@ -1,0 +1,151 @@
+"""The one-release deprecation shims over the session/spec path.
+
+Each pre-spec method name — ``acquire`` / ``release`` / ``ingest`` /
+``readout`` / ``readout_with_mask`` / ``support_map`` /
+``ingest_and_read`` — must emit a ``DeprecationWarning`` exactly once per
+engine and return values bit-identical to the session/spec path it
+forwards to, on the single-device engine and on a 1-device mesh.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.events import aer, datasets
+from repro.launch.mesh import make_host_mesh
+from repro.serve import spec as rs
+from repro.serve.api import pool_items
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 48, 64
+
+pytestmark = pytest.mark.filterwarnings("always::DeprecationWarning")
+
+
+def _cfg(**kw):
+    base = dict(h=H, w=W, n_slots=3, chunk_capacity=512, mode="edram",
+                backend="interpret")
+    base.update(kw)
+    return TSEngineConfig(**base)
+
+
+def _stream(seed=0, kind="hotel_bar"):
+    return datasets.dnd21_like(kind, h=H, w=W, duration=0.06, seed=seed)
+
+
+def _engines(mesh):
+    m = make_host_mesh(1) if mesh else None
+    return (TimeSurfaceEngine(_cfg(), mesh=m),
+            TimeSurfaceEngine(_cfg(), mesh=m))
+
+
+def _deprecations(rec):
+    return [str(r.message) for r in rec
+            if issubclass(r.category, DeprecationWarning)]
+
+
+@pytest.mark.parametrize("mesh", [False, True], ids=["single", "mesh1"])
+def test_each_shim_warns_exactly_once(mesh):
+    eng, _ = _engines(mesh)
+    calls = {
+        "acquire": lambda: eng.acquire(),
+        "ingest": lambda: eng.ingest([(0, _stream(seed=1))]),
+        "readout": lambda: eng.readout(0.08),
+        "readout_with_mask": lambda: eng.readout_with_mask(0.08),
+        "support_map": lambda: eng.support_map(0.08),
+        "ingest_and_read": lambda: eng.ingest_and_read([], 0.08),
+        "release": lambda: eng.release(0),
+    }
+    for name, call in calls.items():
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            call()
+            msgs = _deprecations(rec)
+            assert len(msgs) == 1, (name, msgs)
+            assert name in msgs[0], (name, msgs[0])
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            if name == "acquire":       # second call needs a free slot;
+                s = eng.acquire()       # detach via the session so the
+                eng._sessions[s].detach()   # release shim stays unwarned
+            elif name == "release":     # slot 0 must be live again (the
+                assert eng.attach().slot == 0   # new API adds no warning)
+                call()
+            else:
+                call()
+            assert not _deprecations(rec), (name, "warned twice")
+    # a fresh engine warns again (per-engine grace, not process-global)
+    fresh, _ = _engines(mesh)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fresh.acquire()
+    assert len(_deprecations(rec)) == 1
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+@pytest.mark.parametrize("mesh", [False, True], ids=["single", "mesh1"])
+def test_shim_values_bit_identical_to_session_spec_path(mesh):
+    """Old-name calls on one engine vs session/spec calls on a twin fed
+    the same streams: every output matches bitwise."""
+    old, new = _engines(mesh)
+    streams = [_stream(seed=i, kind="driving" if i % 2 else "hotel_bar")
+               for i in range(3)]
+    words = [aer.pack(s) for s in streams]
+
+    slots = [old.acquire() for _ in range(2)]
+    cams = [new.attach() for _ in range(2)]
+    assert slots == [c.slot for c in cams]
+
+    old.ingest(list(zip(slots, words[:2])))
+    for cam, w in zip(cams, words[:2]):
+        cam.push(w)
+
+    np.testing.assert_array_equal(
+        np.asarray(old.readout(0.08)),
+        np.asarray(new.read(rs.SURFACE_SPEC, 0.08)["surface"]))
+
+    v_o, m_o = old.readout_with_mask(0.08)
+    both = new.read(rs.ReadoutSpec(surface=rs.surface(), mask=rs.mask()),
+                    0.08)
+    np.testing.assert_array_equal(np.asarray(v_o),
+                                  np.asarray(both["surface"]))
+    np.testing.assert_array_equal(np.asarray(m_o), np.asarray(both["mask"]))
+
+    np.testing.assert_array_equal(
+        np.asarray(old.support_map(0.08)),
+        np.asarray(new.read(rs.ReadoutSpec(stcf=rs.stcf()), 0.08)["stcf"]))
+
+    # fused path: dense fill then incremental, both epochs
+    for t_now in (0.08, 0.08, 0.1):
+        got = old.ingest_and_read([(slots[0], words[2])], t_now)
+        want = new.serve_step(pool_items([(cams[0], words[2])]),
+                              rs.SURFACE_SPEC, t_now)["surface"]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # labeling path
+    (sup_o, sig_o), = old.ingest([(slots[1], streams[1])], with_support=True)
+    sup_n, sig_n = cams[1].push_labeled(streams[1])
+    np.testing.assert_array_equal(sup_o, sup_n)
+    np.testing.assert_array_equal(sig_o, sig_n)
+
+    # lifecycle parity: release == detach (wipe, no generation bump)
+    old.release(slots[1])
+    cams[1].detach()
+    np.testing.assert_array_equal(
+        np.asarray(old.readout(0.08)),
+        np.asarray(new.read(rs.SURFACE_SPEC, 0.08)["surface"]))
+    assert old.n_live == new.n_live == 1
+    assert old.acquire() == new.attach().slot
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_release_validates_like_before():
+    eng = TimeSurfaceEngine(_cfg())
+    slot = eng.acquire()
+    eng.release(slot)
+    with pytest.raises(ValueError):
+        eng.release(slot)                  # double release
+    with pytest.raises(ValueError):
+        eng.release(99)                    # out of range
+    with pytest.raises(ValueError):
+        eng.ingest([(slot, _stream())])    # free slot

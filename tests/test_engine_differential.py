@@ -2,7 +2,9 @@
 
 A model-based harness drives random interleavings of
 ``acquire`` / ``ingest`` / ``readout`` / ``release`` / ``ingest_and_read``
-(plus the ``with_support`` labeling path) against ``TimeSurfaceEngine``
+(plus the ``with_support`` labeling path and composed ``ReadoutSpec``
+reads — surface/stcf/count/ebbi from one dispatch) against
+``TimeSurfaceEngine``
 while an *oracle* replays the same event log through the offline
 primitives — ``core.time_surface.surface_init/update`` folded per slot and
 read through the shared ``surface_read_kernel`` entry point, with STCF
@@ -27,6 +29,8 @@ import pytest
 from repro.core import stcf
 from repro.core import time_surface as ts
 from repro.events import synthetic as syn
+from repro.kernels import ops
+from repro.serve import spec as rs
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 try:
@@ -42,10 +46,16 @@ H, W = 24, 32
 CAP = 64          # small capacity so streams routinely split host-side
 T_READS = (0.03, 0.05, 0.08)   # includes reads older than newest writes
 
+#: the composed spec the walk reads alongside the classic surface —
+#: exercises the one-dispatch multi-product path against the oracle
+COMPOSED = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          count=rs.count(4), ebbi=rs.ebbi())
+
 
 def _cfg(mode):
     return TSEngineConfig(h=H, w=W, n_slots=3, chunk_capacity=CAP,
-                          mode=mode, backend="interpret", block=(8, 16))
+                          mode=mode, backend="interpret", block=(8, 16),
+                          specs=(COMPOSED,))
 
 
 class EngineModel:
@@ -57,6 +67,7 @@ class EngineModel:
         self.params = self.cfg.decay_params()
         self.oracle = {}       # slot -> SurfaceState
         self.counts = {}       # slot -> ingested valid-event count
+        self.pixel_counts = {}  # slot -> (H, W) int64 per-pixel count
 
     # -- actions ------------------------------------------------------------
     def acquire(self):
@@ -67,6 +78,7 @@ class EngineModel:
         slot = self.eng.acquire()
         self.oracle[slot] = ts.surface_init(H, W)
         self.counts[slot] = 0
+        self.pixel_counts[slot] = np.zeros((H, W), np.int64)
         return slot
 
     def release(self, slot):
@@ -77,6 +89,7 @@ class EngineModel:
         self.eng.release(slot)
         del self.oracle[slot]
         del self.counts[slot]
+        del self.pixel_counts[slot]
 
     def _stream(self, rng, n):
         """A random time-sorted host stream (may exceed chunk capacity)."""
@@ -96,6 +109,7 @@ class EngineModel:
         )
         self.oracle[slot] = ts.surface_update(self.oracle[slot], batch)
         self.counts[slot] += stream.n
+        np.add.at(self.pixel_counts[slot], (stream.y, stream.x), 1)
 
     def ingest(self, rng, slot, n_events):
         if slot not in self.oracle:
@@ -162,6 +176,34 @@ class EngineModel:
         self._t = t
         self._check_surface(self.eng.readout(t))
 
+    def read_spec(self, t):
+        """The composed-spec path: one dispatch, four products, each
+        checked against the offline oracle per live slot (surface/stcf
+        bitwise via the shared kernels, count/ebbi exact integers)."""
+        out = self.eng.read(COMPOSED, t)
+        self._t = t
+        self._check_surface(out["surface"])
+        sup = np.asarray(out["stcf"])
+        cnt = np.asarray(out["count"])
+        bi = np.asarray(out["ebbi"])
+        v_tw = self.cfg.v_tw()
+        for slot in range(self.cfg.n_slots):
+            if slot in self.oracle:
+                want_sup = ops.stcf_support_fused(
+                    self.oracle[slot].sae, self.params, v_tw,
+                    jnp.float32(t), radius=self.cfg.stcf_radius,
+                    backend="interpret",
+                )
+                assert (sup[slot] == np.asarray(want_sup)).all(), slot
+                want_cnt = np.minimum(self.pixel_counts[slot], 15)
+                assert (cnt[slot] == want_cnt.astype(np.float32)).all(), slot
+                want_bi = np.isfinite(
+                    np.asarray(self.oracle[slot].sae)).any(axis=0)
+                assert (bi[slot] == want_bi.astype(np.float32)).all(), slot
+            else:
+                assert (sup[slot] == 0).all() and (cnt[slot] == 0).all()
+                assert (bi[slot] == 0).all()
+
     def ingest_and_read(self, rng, slot, n_events, t):
         if slot in self.oracle:
             stream = self._stream(rng, n_events)
@@ -188,7 +230,7 @@ class EngineModel:
 def _walk(model, rng, n_steps):
     slots = range(model.cfg.n_slots)
     for _ in range(n_steps):
-        action = rng.integers(0, 7)
+        action = rng.integers(0, 8)
         if action == 0:
             model.acquire()
         elif action == 1:
@@ -205,6 +247,8 @@ def _walk(model, rng, n_steps):
         elif action == 5:
             model.ingest_with_support(rng, int(rng.choice(list(slots))),
                                       int(rng.integers(1, 2 * CAP)))
+        elif action == 6:
+            model.read_spec(float(rng.choice(T_READS)))
         else:
             model.check_counts()
     model.check_counts()
@@ -270,6 +314,10 @@ if hyp is not None:
         @rule(t=T_NOW)
         def readout(self, t):
             self.model.readout(t)
+
+        @rule(t=T_NOW)
+        def read_spec(self, t):
+            self.model.read_spec(t)
 
         @rule(seed=RNG_SEED, slot=SLOT_IDS, n=N_EVENTS, t=T_NOW)
         def ingest_and_read(self, seed, slot, n, t):

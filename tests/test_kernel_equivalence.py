@@ -355,6 +355,75 @@ def check_ts_fused_dirty(rng):
         assert not np.asarray(d0).any()
 
 
+def check_ts_wrapped_read(rng):
+    """The [26] wrapped-timestamp readout: ref backend bitwise vs the
+    independent oracle; interpret within the tier-3 ULP bound."""
+    h = int(rng.integers(1, 64))
+    w = int(rng.integers(1, 128))
+    n_bits = int(rng.choice([8, 12, 16]))
+    tick = float(rng.choice([1e-4, 1e-3]))
+    tau = float(rng.uniform(0.005, 0.1))
+    t_read = float(rng.uniform(0.0, 2.0))
+    from repro.core import representations as rep
+
+    params = rep.edram_ideal_params(tau)
+    sae = _rand_sae(rng, (1, h, w), t_max=1.5)
+    stored = ops.ts_quantize_sae(sae, n_bits=n_bits, tick=tick)
+    want = ref.ts_wrapped_read_ref(stored, t_read, tau, n_bits=n_bits,
+                                   tick=tick)
+    ctx = f"ts_wrapped_read h={h} w={w} n_bits={n_bits} tick={tick}"
+    _bitwise(ops.ts_wrapped_read(stored, t_read, params, n_bits=n_bits,
+                                 tick=tick, backend="ref"),
+             want, ctx + " (ref vs oracle)")
+    _ulp_close(ops.ts_wrapped_read(stored, t_read, params, n_bits=n_bits,
+                                   tick=tick, backend="interpret"),
+               want, ctx + " (interpret vs oracle)")
+
+
+def check_spec_read_bitwise(rng):
+    """The api_redesign acceptance gate at the ops level: a composed
+    ReadoutSpec dispatch's surface/stcf products are bit-identical to
+    the standalone ``ts_decay`` / ``stcf_support_fused`` dispatches the
+    pre-spec methods ran — per backend, on the serving domain."""
+    from repro.serve import spec as rs
+    from repro.serve.ts_engine import TSEngineConfig, read_spec_products
+
+    h, w, block, _ = _rand_geometry(rng, SERVING_BLOCKS, max_h=48,
+                                    max_w=150)
+    t_now = float(rng.uniform(0.0, 0.1))
+    s = int(rng.integers(1, 4))
+    mode = "edram" if rng.random() < 0.5 else "ideal"
+    cfg = TSEngineConfig(h=h, w=w, n_slots=s, mode=mode,
+                         tau=float(rng.uniform(0.01, 0.1)), block=block)
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          mask=rs.mask(), e=rs.ebbi())
+    sae = _rand_sae(rng, (s, 1, h, w))
+    params = cfg.decay_params()
+    dynamic = rs.resolve_dynamic(spec, cfg)
+    statics = rs.resolve_static(spec, cfg)
+    for backend in ("interpret", "ref"):
+        out = read_spec_products(sae, None, jnp.float32(t_now), dynamic,
+                                 spec=spec, cfg=cfg, backend=backend,
+                                 statics=statics)
+        ctx = f"spec read h={h} w={w} block={block} mode={mode} ({backend})"
+        _bitwise(out["surface"],
+                 ops.ts_decay(sae, jnp.float32(t_now), params, block=block,
+                              backend=backend),
+                 ctx + " surface vs standalone ts_decay")
+        _bitwise(out["stcf"],
+                 ops.stcf_support_fused(sae, params, cfg.v_tw(),
+                                        jnp.float32(t_now),
+                                        radius=cfg.stcf_radius,
+                                        backend=backend),
+                 ctx + " stcf vs standalone support")
+        _, m = ops.ts_decay_with_mask(sae, jnp.float32(t_now), params,
+                                      cfg.v_tw(), block=block,
+                                      backend=backend)
+        _bitwise(out["mask"], m, ctx + " mask vs standalone")
+        _bitwise(out["e"], jnp.isfinite(sae).any(axis=-3).astype(jnp.float32),
+                 ctx + " ebbi")
+
+
 def check_decay_scan(rng):
     """Blocked scan vs lax.scan: allclose, not bitwise — the kernel
     reassociates the f32 recurrence at block boundaries (same contract
@@ -375,7 +444,8 @@ def check_decay_scan(rng):
 
 CHECKS = [check_serving_bitwise, check_ts_decay, check_ts_decay_with_mask,
           check_stcf_support, check_stcf_support_fused, check_ts_fused,
-          check_ts_fused_dirty, check_decay_scan]
+          check_ts_fused_dirty, check_ts_wrapped_read,
+          check_spec_read_bitwise, check_decay_scan]
 
 
 # ---------------------------------------------------------------------------

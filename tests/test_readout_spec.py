@@ -1,0 +1,377 @@
+"""Declarative readout-spec serving API: sessions + composable products.
+
+Pins the tentpole contracts of ``serve.spec`` / ``serve.api``:
+
+  * a ``ReadoutSpec`` is hashable and order-insensitive — the jit cache
+    key property — and one composed read is **one** fused dispatch;
+  * every product equals its standalone/offline counterpart: ``surface``
+    and ``stcf`` bitwise vs the standalone ``kernels.ops`` dispatches,
+    ``count``/``ebbi``/``sae_raw`` exactly vs ``core.representations`` on
+    the same events, ``ts_quantized`` bitwise vs
+    ``representations.ts_sram_quantized`` (they share one compiled
+    readout);
+  * the counter plane materializes only when the engine config declares
+    a count-bearing spec, and undeclared count reads fail fast;
+  * ``SensorSession`` owns the slot lifecycle (attach/push/read/detach);
+  * the fused ``serve_step`` path serves composed specs bit-identically
+    to a dense read, across cache epochs and spec switches.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import representations as rep
+from repro.core import time_surface as ts
+from repro.events import aer, datasets, pipeline
+from repro.kernels import ops
+from repro.serve import spec as rs
+from repro.serve.api import SensorSession, attach_many, pool_items
+from repro.serve.ts_engine import (
+    TSEngineConfig, TimeSurfaceEngine, read_spec_products,
+)
+
+H, W = 48, 64
+
+COMPOSED = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          count=rs.count(4))
+EVERYTHING = rs.ReadoutSpec(
+    surface=rs.surface(), mask=rs.mask(), stcf=rs.stcf(),
+    count=rs.count(4), ebbi=rs.ebbi(), sae=rs.sae_raw(),
+    quantized=rs.ts_quantized(tau=0.024),
+)
+
+
+def _cfg(**kw):
+    base = dict(h=H, w=W, n_slots=4, chunk_capacity=512, mode="edram",
+                backend="interpret", specs=(COMPOSED, EVERYTHING))
+    base.update(kw)
+    return TSEngineConfig(**base)
+
+
+def _stream(kind="hotel_bar", seed=0, duration=0.06):
+    return datasets.dnd21_like(kind, h=H, w=W, duration=duration, seed=seed)
+
+
+# ----------------------------------------------------------------------------
+# the spec as a value: hashable, order-insensitive, closed
+# ----------------------------------------------------------------------------
+
+def test_spec_is_hashable_and_order_insensitive():
+    a = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf())
+    b = rs.ReadoutSpec(stcf=rs.stcf(), surface=rs.surface())
+    assert a == b and hash(a) == hash(b)
+    assert a != rs.ReadoutSpec(surface=rs.surface())
+    assert a.names == ("stcf", "surface")          # canonical (sorted)
+    assert "stcf" in a and a["surface"] == rs.surface()
+    with pytest.raises(KeyError):
+        a["missing"]
+
+
+def test_spec_rejects_junk():
+    with pytest.raises(ValueError):
+        rs.ReadoutSpec()                           # empty
+    with pytest.raises(TypeError):
+        rs.ReadoutSpec(surface="surface")          # not a product
+    with pytest.raises(AttributeError):
+        spec = rs.ReadoutSpec(surface=rs.surface())
+        spec.products = ()                         # immutable
+
+
+def test_spec_is_the_jit_cache_key():
+    """Equal specs (any construction order) share one compiled entry;
+    a different spec adds exactly one."""
+    eng = TimeSurfaceEngine(_cfg())
+    cam = eng.attach()
+    cam.push(_stream(seed=1))
+    n0 = read_spec_products._cache_size()
+    cam.read(rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf()), 0.08)
+    n1 = read_spec_products._cache_size()
+    assert n1 == n0 + 1
+    cam.read(rs.ReadoutSpec(stcf=rs.stcf(), surface=rs.surface()), 0.08)
+    assert read_spec_products._cache_size() == n1   # equal spec: no retrace
+    cam.read(rs.ReadoutSpec(surface=rs.surface()), 0.08)
+    assert read_spec_products._cache_size() == n1 + 1
+
+
+# ----------------------------------------------------------------------------
+# product correctness: standalone dispatches and offline baselines
+# ----------------------------------------------------------------------------
+
+def test_composed_surface_and_stcf_bitwise_vs_standalone():
+    """The acceptance gate: a composed spec's surface product equals a
+    standalone ts_decay dispatch bitwise; stcf equals the standalone
+    fused support op bitwise."""
+    cfg = _cfg()
+    eng = TimeSurfaceEngine(cfg)
+    cams = attach_many(eng, 2)
+    for cam, seed in zip(cams, (1, 2)):
+        cam.push(_stream(seed=seed, kind="driving" if seed % 2 else "hotel_bar"))
+    out = eng.read(COMPOSED, 0.08)
+    sae = eng.state.surfaces.sae
+    want_v = ops.ts_decay(sae, jnp.float32(0.08), cfg.decay_params(),
+                          block=cfg.block, backend="interpret")
+    want_s = ops.stcf_support_fused(sae, cfg.decay_params(), cfg.v_tw(),
+                                    jnp.float32(0.08), radius=cfg.stcf_radius,
+                                    backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out["surface"]),
+                                  np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(out["stcf"]),
+                                  np.asarray(want_s))
+
+
+@pytest.mark.parametrize("mode", ["edram", "ideal"])
+def test_products_match_offline_representations(mode):
+    """count/ebbi/sae_raw/ts_quantized served off pool state equal the
+    offline ``core.representations`` baselines on the same (AER-
+    quantized) events — exactly."""
+    cfg = _cfg(mode=mode)
+    eng = TimeSurfaceEngine(cfg)
+    cam = eng.attach()
+    stream = _stream(seed=3)
+    words = aer.pack(stream)
+    cam.push(words)
+    out = cam.read(EVERYTHING, 0.08)
+
+    unpacked = aer.unpack(words, H, W)
+    batch = pipeline.to_event_batch(unpacked, 1 << 14)
+    np.testing.assert_array_equal(
+        np.asarray(out["count"]), np.asarray(rep.event_count(batch, H, W, 4)))
+    np.testing.assert_array_equal(
+        np.asarray(out["ebbi"]), np.asarray(rep.ebbi(batch, H, W)))
+    np.testing.assert_array_equal(
+        np.asarray(out["sae"]), np.asarray(rep.sae(batch, H, W)))
+    # shared ts_wrapped_read program -> bitwise, not just allclose
+    np.testing.assert_array_equal(
+        np.asarray(out["quantized"]),
+        np.asarray(rep.ts_sram_quantized(batch, H, W, 0.08, tau=0.024)))
+
+
+def test_count_saturates_at_n_bits():
+    eng = TimeSurfaceEngine(_cfg(specs=(rs.ReadoutSpec(c=rs.count(2)),)))
+    cam = eng.attach()
+    n = 16
+    burst = ts.EventBatch(
+        x=jnp.full(512, 5, jnp.int32).at[n:].set(0),
+        y=jnp.full(512, 5, jnp.int32).at[n:].set(0),
+        t=jnp.linspace(0.0, 0.01, 512, dtype=jnp.float32),
+        p=jnp.zeros(512, jnp.int32),
+        valid=jnp.asarray([True] * n + [False] * (512 - n)),
+    )
+    out = cam.read(rs.ReadoutSpec(c=rs.count(2)), 0.02)
+    assert float(out["c"].max()) == 0.0
+    cam.push(burst)
+    out = cam.read(rs.ReadoutSpec(c=rs.count(2)), 0.02)
+    assert float(out["c"][5, 5]) == 3.0          # saturated at 2^2 - 1
+    out8 = cam.read(rs.ReadoutSpec(c=rs.count(8)), 0.02)
+    assert float(out8["c"][5, 5]) == float(n)    # raw counts retained
+
+
+def test_counts_only_materialize_when_declared():
+    plain = TimeSurfaceEngine(_cfg(specs=()))
+    assert plain.state.counts is None
+    assert not plain.stats()["counts_plane"]
+    with pytest.raises(ValueError):
+        plain.read(COMPOSED, 0.08)
+    counted = TimeSurfaceEngine(_cfg())
+    assert counted.state.counts is not None
+    assert counted.stats()["counts_plane"]
+    # SAE-only specs never needed a declaration
+    cam = plain.attach()
+    cam.push(_stream(seed=1))
+    out = cam.read(rs.ReadoutSpec(e=rs.ebbi(), q=rs.ts_quantized()), 0.08)
+    assert set(out) == {"e", "q"}
+
+
+def test_counts_wipe_on_detach_and_reuse():
+    eng = TimeSurfaceEngine(_cfg())
+    cam = eng.attach()
+    cam.push(_stream(seed=1))
+    assert float(cam.read(COMPOSED, 0.08)["count"].max()) > 0
+    slot = cam.slot
+    cam.detach()
+    cam2 = eng.attach()
+    assert cam2.slot == slot
+    assert float(cam2.read(COMPOSED, 0.08)["count"].max()) == 0.0
+
+
+def test_surface_override_products():
+    """A spec can serve a second decay profile off the same SAE."""
+    cfg = _cfg(mode="edram")
+    eng = TimeSurfaceEngine(cfg)
+    cam = eng.attach()
+    cam.push(_stream(seed=2))
+    spec = rs.ReadoutSpec(hw=rs.surface(),
+                          ideal=rs.surface(mode="ideal", tau=0.024))
+    out = cam.read(spec, 0.08)
+    sae = eng.state.surfaces.sae[cam.slot]
+    want_ideal = ops.ts_decay(sae, jnp.float32(0.08),
+                              rep.edram_ideal_params(0.024),
+                              block=cfg.block, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out["ideal"]),
+                                  np.asarray(want_ideal))
+    assert not (np.asarray(out["hw"]) == np.asarray(out["ideal"])).all()
+
+
+# ----------------------------------------------------------------------------
+# sessions: the slot lifecycle without raw ints
+# ----------------------------------------------------------------------------
+
+def test_session_lifecycle():
+    eng = TimeSurfaceEngine(_cfg(n_slots=2))
+    a, b = attach_many(eng, 2)
+    assert isinstance(a, SensorSession) and (a.slot, b.slot) == (0, 1)
+    assert eng.n_live == 2
+    with pytest.raises(RuntimeError):
+        eng.attach()                                # pool full
+    a.push(_stream(seed=1))
+    assert eng.stats()["n_events"][0] > 0
+    b.detach()
+    assert not b.alive and eng.n_live == 1
+    with pytest.raises(RuntimeError):
+        b.push(_stream())                           # detached session
+    with pytest.raises(RuntimeError):
+        b.read(COMPOSED, 0.08)
+    c = eng.attach()                                # slot reused, wiped
+    assert c.slot == 1 and c.generation == 2
+    assert float(c.read(rs.SURFACE_SPEC, 0.08)["surface"].max()) == 0.0
+
+
+def test_session_context_manager():
+    eng = TimeSurfaceEngine(_cfg(n_slots=1))
+    with eng.attach() as cam:
+        cam.push(_stream(seed=1))
+        assert eng.n_live == 1
+    assert eng.n_live == 0 and not cam.alive
+
+
+def test_session_labeling_path():
+    """push_labeled returns the offline stcf_chunked labels."""
+    from repro.core import stcf as stcf_core
+
+    cfg = _cfg(chunk_capacity=512)
+    eng = TimeSurfaceEngine(cfg)
+    cam = eng.attach()
+    stream = _stream(seed=7)
+    n = min(stream.n, 512)
+    sub = stream.take(slice(0, n))
+    sup, sig = cam.push_labeled(sub)
+    batch = pipeline.to_event_batch(sub, 512)
+    scfg = cfg.stcf_config()
+    params, v_tw = stcf_core.resolve_edram(scfg, "edram")
+    want_sup, want_sig = stcf_core.stcf_chunked(
+        batch, H, W, scfg, chunk=512, mode="edram", params=params, v_tw=v_tw)
+    np.testing.assert_array_equal(sup, np.asarray(want_sup)[:n])
+    np.testing.assert_array_equal(sig, np.asarray(want_sig)[:n])
+
+
+# ----------------------------------------------------------------------------
+# fused serve_step: composed specs through the dirty-tile cache
+# ----------------------------------------------------------------------------
+
+def test_serve_step_composed_matches_dense_read():
+    """Dense fill, incremental repeats, and t-move refills all serve the
+    composed spec bit-identically to a fresh dense read."""
+    eng = TimeSurfaceEngine(_cfg())
+    cams = attach_many(eng, 3)
+    streams = [_stream(seed=i, kind="driving" if i % 2 else "hotel_bar")
+               for i in range(5)]
+    for i, t_now in enumerate((0.08, 0.08, 0.08, 0.1)):   # holds, then moves
+        items = pool_items([(cams[i % 3], streams[i])])
+        got = eng.serve_step(items, COMPOSED, t_now)
+        want = eng.read(COMPOSED, t_now)
+        for name in COMPOSED.names:
+            np.testing.assert_array_equal(
+                np.asarray(got[name]), np.asarray(want[name]),
+                err_msg=f"step {i} product {name}")
+    assert eng.stats()["dirty_tiles"] == 0
+
+
+def test_serve_step_spec_switch_is_cache_coherent():
+    """Interleaving fused reads of different surface products must never
+    serve one product's cached tiles as another's (the spec-keyed cache
+    epoch)."""
+    eng = TimeSurfaceEngine(_cfg(mode="edram"))
+    cam = eng.attach()
+    ideal = rs.ReadoutSpec(surface=rs.surface(mode="ideal", tau=0.024))
+    for i, spec in enumerate((rs.SURFACE_SPEC, ideal, rs.SURFACE_SPEC, ideal)):
+        got = eng.serve_step(
+            pool_items([(cam, _stream(seed=i))]), spec, 0.08)
+        want = eng.read(spec, 0.08)
+        np.testing.assert_array_equal(
+            np.asarray(got["surface"]), np.asarray(want["surface"]),
+            err_msg=f"switch {i}")
+
+
+def test_serve_step_without_surface_product():
+    """A spec with no surface product still scatters and serves (no
+    cache involvement)."""
+    eng = TimeSurfaceEngine(_cfg())
+    cam = eng.attach()
+    spec = rs.ReadoutSpec(c=rs.count(4), e=rs.ebbi())
+    got = cam.push_and_read(_stream(seed=1), spec, 0.08)
+    want = cam.read(spec, 0.08)
+    for name in spec.names:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]))
+    assert float(got["c"].max()) > 0
+
+
+def test_serve_step_pure_read_and_empty_payload():
+    eng = TimeSurfaceEngine(_cfg())
+    cam = eng.attach()
+    cam.push(_stream(seed=1))
+    before = cam.read(COMPOSED, 0.08)
+    got = cam.push_and_read(None, COMPOSED, 0.08)      # pure cached read
+    for name in COMPOSED.names:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(before[name]))
+
+
+def test_surface_override_mode_mismatch_fails_fast():
+    """A decay override the resolved mode cannot use must raise at
+    resolution, never silently serve the engine-default surface."""
+    eng = TimeSurfaceEngine(_cfg(mode="edram"))
+    eng.attach()
+    with pytest.raises(ValueError):     # tau is ideal-only
+        eng.read(rs.ReadoutSpec(s=rs.surface(tau=0.01)), 0.08)
+    with pytest.raises(ValueError):     # cmem_f is edram-only
+        eng.read(rs.ReadoutSpec(s=rs.surface(mode="ideal", cmem_f=1e-14)),
+                 0.08)
+    # well-formed overrides still resolve on either engine mode
+    ideal_eng = TimeSurfaceEngine(_cfg(mode="ideal"))
+    ideal_eng.attach()
+    with pytest.raises(ValueError):     # engine-inherited ideal + cmem_f
+        ideal_eng.read(rs.ReadoutSpec(s=rs.surface(cmem_f=1e-14)), 0.08)
+    out = ideal_eng.read(rs.ReadoutSpec(s=rs.surface(tau=0.01)), 0.08)
+    assert set(out) == {"s"}
+
+
+def test_read_rejects_non_spec():
+    eng = TimeSurfaceEngine(_cfg())
+    eng.attach()
+    with pytest.raises(TypeError):
+        eng.read("surface", 0.08)
+
+
+# ----------------------------------------------------------------------------
+# backend parity for the new products
+# ----------------------------------------------------------------------------
+
+def test_spec_backend_parity_interpret_vs_ref():
+    """Integer/binary products bitwise across backends; float products
+    allclose (the tier-3 contract)."""
+    outs = {}
+    for backend in ("interpret", "ref"):
+        eng = TimeSurfaceEngine(_cfg(backend=backend))
+        cam = eng.attach()
+        cam.push(_stream(seed=5))
+        outs[backend] = cam.read(EVERYTHING, 0.08)
+    for name in ("count", "ebbi", "sae"):
+        np.testing.assert_array_equal(
+            np.asarray(outs["interpret"][name]),
+            np.asarray(outs["ref"][name]), err_msg=name)
+    for name in ("surface", "quantized"):
+        np.testing.assert_allclose(
+            np.asarray(outs["interpret"][name]),
+            np.asarray(outs["ref"][name]), rtol=1e-6, atol=1e-7,
+            err_msg=name)

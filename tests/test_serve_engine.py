@@ -1,9 +1,17 @@
 """Streaming time-surface serving engine tests: slot lifecycle, offline
-equivalence (bit-identical), and backend dispatch parity."""
+equivalence (bit-identical), and backend dispatch parity.
+
+Deliberately written against the pre-spec method names
+(``acquire``/``ingest``/``readout``/...): since those are now deprecated
+shims over the session/spec path, every assertion here doubles as a
+shim-equivalence gate (the warn-once behavior itself is pinned in
+``test_deprecation_shims.py``; warnings are silenced here)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 from repro.core import stcf
 from repro.core import time_surface as ts

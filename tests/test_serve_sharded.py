@@ -15,15 +15,19 @@ import pytest
 
 from repro.events import aer, datasets
 from repro.launch.mesh import make_host_mesh
+from repro.serve import spec as rs
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 H, W = 48, 64
 
+COMPOSED = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          count=rs.count(4), ebbi=rs.ebbi())
+
 
 def _cfg(**kw):
     base = dict(h=H, w=W, n_slots=4, chunk_capacity=512, mode="edram",
-                backend="interpret")
+                backend="interpret", specs=(COMPOSED,))
     base.update(kw)
     return TSEngineConfig(**base)
 
@@ -145,6 +149,43 @@ def test_sharded_fused_small_pool_refill_is_dense():
                                   np.asarray(eng.readout(0.1)))
 
 
+def test_sharded_composed_spec_read_single_device_mesh():
+    """The spec path under shard_map: a composed ReadoutSpec read on a
+    1-device mesh is bit-identical to the unsharded engine, product for
+    product, through plain reads and the fused serve_step."""
+    cfg = _cfg(n_slots=3)
+    streams = _streams(3)
+    words = [aer.pack(s) for s in streams]
+
+    ref = TimeSurfaceEngine(cfg)
+    eng = TimeSurfaceEngine(cfg, mesh=make_host_mesh(1))
+    for e in (ref, eng):
+        cams = [e.attach() for _ in range(3)]
+        e.serve_step(list(zip([c.slot for c in cams], words)),
+                     COMPOSED, 0.08)
+    want = ref.read(COMPOSED, 0.08)
+    got = eng.read(COMPOSED, 0.08)
+    for name in COMPOSED.names:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]), err_msg=name)
+    # incremental fused step at the held epoch, then a t-move refill
+    extra = aer.pack(_streams(4)[3])
+    for t_now in (0.08, 0.1):
+        w_step = ref.serve_step([(0, extra)], COMPOSED, t_now)
+        g_step = eng.serve_step([(0, extra)], COMPOSED, t_now)
+        for name in COMPOSED.names:
+            np.testing.assert_array_equal(
+                np.asarray(g_step[name]), np.asarray(w_step[name]),
+                err_msg=f"{name} at t={t_now}")
+    # session detach wipes the counter plane on the sharded reset path
+    ref._sessions[1].detach()
+    eng._sessions[1].detach()
+    np.testing.assert_array_equal(
+        np.asarray(eng.read(COMPOSED, 0.1)["count"]),
+        np.asarray(ref.read(COMPOSED, 0.1)["count"]))
+    assert float(np.asarray(eng.read(COMPOSED, 0.1)["count"])[1].max()) == 0.0
+
+
 # ----------------------------------------------------------------------------
 # slow: multi-device subprocess sweep
 # ----------------------------------------------------------------------------
@@ -160,11 +201,15 @@ def test_sharded_matches_unsharded_1_2_4_8_devices():
     import numpy as np
     from repro.events import aer, datasets
     from repro.launch.mesh import make_host_mesh
+    from repro.serve import spec as rs
     from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
     H, W, N = 48, 64, 6
+    COMPOSED = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                              count=rs.count(4), ebbi=rs.ebbi())
     cfg = TSEngineConfig(h=H, w=W, n_slots=N, chunk_capacity=512,
-                         mode='edram', backend='interpret')
+                         mode='edram', backend='interpret',
+                         specs=(COMPOSED,))
     streams = [datasets.dnd21_like('driving' if i % 2 else 'hotel_bar',
                                    h=H, w=W, duration=0.06, seed=i)
                for i in range(N)]
@@ -194,6 +239,17 @@ def test_sharded_matches_unsharded_1_2_4_8_devices():
         if eng.n_slots_padded > N:
             assert float(got[N:].max()) == 0.0, nd
             assert not np.asarray(m_e)[N:].any(), nd
+
+        # composed spec read: every product bit-identical to unsharded,
+        # dead pad slots all-zero in every product
+        want_spec = ref.read(COMPOSED, 0.08)
+        got_spec = eng.read(COMPOSED, 0.08)
+        for name in COMPOSED.names:
+            g, w_ = np.asarray(got_spec[name]), np.asarray(want_spec[name])
+            assert (g[:N] == w_[:N]).all(), f'spec {name} differs at nd={nd}'
+            if eng.n_slots_padded > N:
+                assert float(np.abs(g[N:]).max()) == 0.0, (
+                    f'pad slots leaked through spec {name} at nd={nd}')
 
         # release + reacquire on the sharded reset path keeps the rest of
         # the pool byte-stable
