@@ -1,0 +1,187 @@
+"""Streaming-runtime throughput: sustained mixed-rate traffic through
+``serve.stream.StreamRuntime`` vs the per-chunk synchronous
+request/response pattern (PR 1-4's model: push a chunk, read, block —
+for every arrival).
+
+**Reading the rows.**  Both paths see the *same* events arriving on the
+same virtual-clock granule grid (4 sensors, driving / hotel_bar / glyph
+scenes at their naturally different rates, ~4 Meps offered):
+
+  * ``stream_sync_per_chunk_us`` — the baseline: every arrival granule,
+    each sensor's events are pushed and the full spec read + host-synced
+    immediately.  One dispatch + one sync per (sensor, granule).
+  * ``stream_runtime_us`` — the runtime: bounded queues coalesce each
+    deadline's arrivals into capacity-sized chunks, one pipelined
+    push+read per deadline, one host sync per deadline.
+  * ``stream_speedup`` — runtime events/sec over baseline events/sec.
+    The harness *asserts* >= 2x: that is the acceptance floor, and the
+    coalescing + pipelining win is structural (~10x here), so a shared
+    CI runner's scheduler noise cannot flip it.
+  * ``stream_p50/p95/p99_latency_us`` — per-deadline readout latency
+    (dispatch -> result synced) of the runtime path, after warmup.
+  * ``stream_churn_drop_rate`` — a second replay under overload
+    (drop_oldest, small queues) with mid-run attach/detach; its
+    ``derived`` is the exact deterministic drop rate.
+
+**Bitwise gates, every run**: the runtime replay's per-deadline products
+are digest-compared against a synchronous oracle replay of the same
+coalesced chunk sequence on a fresh engine (``events.replay
+.check_oracle``), and the baseline engine's final SAE state must equal
+the runtime engine's bitwise (same events, order-insensitive scatter,
+regardless of how differently the two paths chunked them) — speed is
+never bought with drift.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.events import pipeline
+from repro.events import replay as rp
+from repro.events import synthetic as syn
+from repro.serve import spec as rs
+from repro.serve.stream import StreamConfig, StreamRuntime
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 120, 160
+DURATION = 0.1
+# 5 ms deadlines -> 21 readouts per replay: enough latency samples that
+# the regression-gated p99 row is not literally the single worst sample
+DEADLINE = 0.005
+SUBSTEPS = 2            # arrival granules per deadline (same 2.5 ms
+                        # granule grid both paths see)
+N_SENSORS = 4
+NOISE_HZ = 20.0         # boosts the offered rate to ~4 Meps
+
+
+def _engine_cfg() -> TSEngineConfig:
+    return TSEngineConfig(h=H, w=W, n_slots=N_SENSORS,
+                          chunk_capacity=1 << 12, mode="edram")
+
+
+def _runtime_cfg() -> StreamConfig:
+    # queue sized so nothing drops: the throughput comparison must run
+    # both paths over identical event sets
+    return StreamConfig(policy="block", queue_capacity=1 << 17,
+                        deadline_s=DEADLINE, pipeline=True)
+
+
+def sync_per_chunk(engine, feeds):
+    """The request/response baseline: one push + read + host sync per
+    (sensor, arrival granule).  Returns (wall_s, n_events, n_calls,
+    final surface)."""
+    cams = [engine.attach() for _ in feeds]
+    cap = engine.cfg.chunk_capacity
+    granule = DEADLINE / SUBSTEPS
+    n_gran = int(np.floor(DURATION / granule)) + SUBSTEPS
+    ptrs = [0] * len(feeds)
+    n_events = n_calls = 0
+    surf = None
+    t0 = time.perf_counter()
+    for g in range(1, n_gran + 1):
+        now = g * granule
+        for cam, feed, i in zip(cams, feeds, range(len(feeds))):
+            t = feed.stream.t
+            hi = int(np.searchsorted(t, np.float32(now), side="left"))
+            if hi <= ptrs[i]:
+                continue
+            sl = slice(ptrs[i], hi)
+            ptrs[i] = hi
+            stream = syn.EventStream(
+                x=feed.stream.x[sl], y=feed.stream.y[sl], t=t[sl],
+                p=feed.stream.p[sl], is_signal=np.ones(hi - sl.start, bool),
+                h=H, w=W,
+            )
+            n_events += stream.n
+            for lo in range(0, stream.n, cap):
+                part = stream.take(slice(lo, lo + cap))
+                engine.push([(cam, pipeline.to_event_batch(part, cap))])
+                surf = engine.read(rs.SURFACE_SPEC, now)["surface"]
+                jax.block_until_ready(surf)
+                n_calls += 1
+    wall = time.perf_counter() - t0
+    return wall, n_events, n_calls, np.asarray(surf)
+
+
+def throughput_rows():
+    feeds = rp.mixed_scene_feeds(H, W, DURATION, N_SENSORS, seed=7,
+                                 noise_hz=NOISE_HZ)
+    total = sum(f.stream.n for f in feeds)
+
+    # -- warm every jit entry on throwaway engines, with the *same* feeds
+    # so every padded ingest batch size the timed runs hit is compiled
+    sync_per_chunk(TimeSurfaceEngine(_engine_cfg()), feeds)
+    rp.replay(TimeSurfaceEngine(_engine_cfg()), feeds, _runtime_cfg(),
+              rs.SURFACE_SPEC, arrival_substeps=SUBSTEPS)
+
+    # -- baseline: per-chunk synchronous push+read ---------------------------
+    base_eng = TimeSurfaceEngine(_engine_cfg())
+    wall_b, n_b, calls_b, _ = sync_per_chunk(base_eng, feeds)
+    eps_b = n_b / wall_b
+
+    # -- runtime: coalesced + pipelined replay of the same traffic -----------
+    run_eng = TimeSurfaceEngine(_engine_cfg())
+    report = rp.replay(run_eng, feeds, _runtime_cfg(), rs.SURFACE_SPEC,
+                       arrival_substeps=SUBSTEPS)
+    assert report.ingested == n_b == total, (
+        f"paths saw different events: runtime {report.ingested}, "
+        f"baseline {n_b}, feeds {total} (queue too small?)"
+    )
+    eps_r = report.events_per_sec
+    rp.check_oracle(report, lambda: TimeSurfaceEngine(_engine_cfg()),
+                    rs.SURFACE_SPEC)
+
+    # cross-path gate: same events -> same final SAE state, bitwise (the
+    # scatter is an order-insensitive max-combine), however differently
+    # the two paths chunked and interleaved them
+    assert (np.asarray(base_eng.state.surfaces.sae)
+            == np.asarray(run_eng.state.surfaces.sae)).all(), (
+        "baseline and runtime SAE states diverged"
+    )
+    assert (np.asarray(base_eng.state.surfaces.n_events)
+            == np.asarray(run_eng.state.surfaces.n_events)).all()
+
+    speedup = eps_r / eps_b
+    assert speedup >= 2.0, (
+        f"streaming runtime not >=2x the per-chunk synchronous baseline: "
+        f"{eps_r / 1e6:.3f} vs {eps_b / 1e6:.3f} Meps ({speedup:.2f}x, "
+        f"{calls_b} sync calls vs {report.n_steps} deadlines)"
+    )
+    return [
+        ("stream_sync_per_chunk_us", wall_b * 1e6 / calls_b, eps_b / 1e6),
+        ("stream_runtime_us", report.wall_s * 1e6 / report.n_steps,
+         eps_r / 1e6),                                          # Meps
+        ("stream_speedup", report.wall_s * 1e6, speedup),
+        ("stream_p50_latency_us", report.latency_p50_us, None),
+        ("stream_p95_latency_us", report.latency_p95_us, None),
+        ("stream_p99_latency_us", report.latency_p99_us, None),
+    ]
+
+
+def churn_rows():
+    """Overload + churn replay: small drop_oldest queues, sensors
+    attaching/detaching mid-run, bitwise oracle gate on the result."""
+    feeds = rp.mixed_scene_feeds(H, W, DURATION, 6, seed=11,
+                                 noise_hz=NOISE_HZ, churn=True)
+    cfg = TSEngineConfig(h=H, w=W, n_slots=6, chunk_capacity=1 << 12,
+                         mode="edram")
+    scfg = StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                        deadline_s=DEADLINE, pipeline=True)
+    report = rp.replay(TimeSurfaceEngine(cfg), feeds, scfg, rs.SURFACE_SPEC,
+                       arrival_substeps=SUBSTEPS)
+    rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg), rs.SURFACE_SPEC)
+    assert report.dropped > 0, "churn config must actually overload"
+    assert report.discarded > 0, "churn config must detach with queued events"
+    return [
+        ("stream_churn_drop_rate", report.wall_s * 1e6, report.drop_rate),
+        ("stream_churn_ingested_meps", report.wall_s * 1e6 / report.n_steps,
+         report.events_per_sec / 1e6),
+    ]
+
+
+def rows():
+    out = throughput_rows()
+    out.extend(churn_rows())
+    return out

@@ -1,0 +1,134 @@
+"""Benchmark-artifact regression gate: current ``BENCH_*.json`` vs the
+committed baselines.
+
+    python benchmarks/compare.py <current_dir> <baseline_dir> \
+        [--threshold 0.25]
+
+Gated metrics (the serving SLOs, not every row — micro-rows are too
+noisy on shared runners to gate individually):
+
+  * ``serve`` ingest events/sec  (``serve_ingest_*sensors_us``.derived,
+    higher is better)
+  * streaming-runtime events/sec (``stream_runtime_us``.derived, higher)
+  * p99 readout latency          (``stream_p99_latency_us``.us_per_call,
+    lower is better)
+
+A metric regresses when it is more than ``--threshold`` (default 25%)
+worse than its baseline; any regression exits 1 with a table of every
+gated row.  Rows/files missing from the *baseline* are skipped with a
+warning (that's the refresh path: regenerate via the
+``workflow_dispatch`` CI job, commit the artifact); rows missing from
+the *current* run fail — the benchmark that should have produced them
+did not run.
+
+These are absolute wall-clock gates: baselines are only meaningful for
+the runner class that produced them (the ``git_sha`` in each artifact
+says which commit; regenerate on CI hardware via ``workflow_dispatch``
+before trusting the gate on a new runner class), and the p99 latency
+row is the noisiest — ``bench_stream`` samples ~21 deadlines per run,
+so one severe scheduler stall on a loaded machine can trip it.  A red
+gate on an otherwise-clean PR means: rerun once, then suspect the
+runner before the code.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from typing import List, Optional, Tuple
+
+#: (artifact file, row-name regex, field, direction)
+GATES: List[Tuple[str, str, str, str]] = [
+    ("BENCH_serve.json", r"^serve_ingest_\d+sensors_us$", "derived",
+     "higher"),
+    ("BENCH_stream.json", r"^stream_runtime_us$", "derived", "higher"),
+    ("BENCH_stream.json", r"^stream_p99_latency_us$", "us_per_call",
+     "lower"),
+]
+
+
+def load_rows(path: str) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def compare(current_dir: str, baseline_dir: str,
+            threshold: float) -> int:
+    regressions = []
+    print(f"{'metric':<42s} {'baseline':>12s} {'current':>12s} "
+          f"{'ratio':>8s}  verdict")
+    for fname, pattern, field, direction in GATES:
+        base = load_rows(os.path.join(baseline_dir, fname))
+        cur = load_rows(os.path.join(current_dir, fname))
+        if base is None:
+            print(f"# no baseline {fname}; skipping its gates "
+                  "(refresh via the workflow_dispatch job and commit it)",
+                  file=sys.stderr)
+            continue
+        if cur is None:
+            print(f"# current run produced no {fname}", file=sys.stderr)
+            regressions.append((fname, "artifact missing"))
+            continue
+        rx = re.compile(pattern)
+        names = sorted(n for n in base if rx.match(n))
+        if not names:
+            print(f"# baseline {fname} has no rows matching {pattern}",
+                  file=sys.stderr)
+        for name in names:
+            if name not in cur:
+                regressions.append((name, "row missing from current run"))
+                print(f"{name:<42s} {'':>12s} {'MISSING':>12s}")
+                continue
+            b = base[name][field]
+            c = cur[name][field]
+            if c is None:
+                # a gated metric that stopped being measured is a
+                # failure, not a skip — same rule as a missing row
+                regressions.append((name, f"current {field} is null"))
+                print(f"{name:<42s} {'':>12s} {'NULL':>12s}")
+                continue
+            if b is None or b == 0:
+                print(f"# baseline {name}.{field} is null/zero; skipping "
+                      "(refresh the baselines)", file=sys.stderr)
+                continue
+            ratio = c / b
+            if direction == "higher":
+                bad = ratio < 1.0 - threshold
+            else:
+                bad = ratio > 1.0 + threshold
+            verdict = "REGRESSION" if bad else "ok"
+            print(f"{name:<42s} {b:12.3f} {c:12.3f} {ratio:8.3f}  "
+                  f"{verdict} ({field}, {direction} is better)")
+            if bad:
+                regressions.append((name, f"{field} {b:.3f} -> {c:.3f} "
+                                          f"({ratio:.2f}x, {direction} is "
+                                          "better)"))
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond "
+              f"{threshold:.0%}:", file=sys.stderr)
+        for name, why in regressions:
+            print(f"  {name}: {why}", file=sys.stderr)
+        return 1
+    print("\nall gated metrics within threshold")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current_dir",
+                    help="directory with this run's BENCH_*.json")
+    ap.add_argument("baseline_dir",
+                    help="directory with the committed baselines")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed relative regression (default 0.25)")
+    args = ap.parse_args()
+    sys.exit(compare(args.current_dir, args.baseline_dir, args.threshold))
+
+
+if __name__ == "__main__":
+    main()

@@ -9,34 +9,105 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_recon    — Table III SSIM protocol
   * bench_serve    — streaming engine: events/sec + readout latency vs
                      concurrent sensor count
+  * bench_stream   — real-time runtime: coalesced+pipelined replay vs
+                     per-chunk synchronous serving, latency percentiles,
+                     overload/churn drop accounting
 
 Run everything:    PYTHONPATH=src python -m benchmarks.run
 Run a subset:      PYTHONPATH=src python -m benchmarks.run --only hw,edram
+
+``--json DIR`` additionally writes one machine-readable
+``BENCH_<module>.json`` artifact per module (rows + wall time + git sha)
+— the format ``benchmarks/compare.py`` and the CI regression gate
+consume.  Arguments are strict: unknown flags and unknown ``--only``
+names are errors, not silent no-ops (a typo'd flag must fail the build,
+not skip the gate).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
 
-MODULES = ["edram", "hw", "ts", "denoise", "classify", "recon", "serve"]
+MODULES = ["edram", "hw", "ts", "denoise", "classify", "recon", "serve",
+           "stream"]
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_sha() -> str:
+    """Current commit (CI env first, then git; 'unknown' offline)."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=_REPO, timeout=10,
+        )
+        return out.stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — best-effort metadata only
+        return "unknown"
+
+
+def write_artifact(json_dir: str, name: str, rows, wall_s: float,
+                   sha: str, failed: bool) -> str:
+    """One ``BENCH_<module>.json`` per module: the machine-readable twin
+    of the CSV rows, with enough provenance to diff across commits."""
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{name}.json")
+    payload = {
+        "module": name,
+        "git_sha": sha,
+        "wall_s": round(wall_s, 3),
+        "failed": failed,
+        "rows": [
+            {"name": rn, "us_per_call": us, "derived": derived}
+            for rn, us, derived in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="3DS-ISC benchmark harness (CSV to stdout, optional "
+                    "JSON artifacts)"
+    )
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
-    args, _ = ap.parse_known_args()
-    which = args.only.split(",") if args.only else MODULES
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="also write one BENCH_<module>.json per module "
+                         "into DIR (the CI regression-gate artifact)")
+    # strict parsing: parse_known_args silently ignored typo'd flags
+    # (`--onIy serve` ran the full suite and CI stayed green)
+    args = ap.parse_args()
+    which = args.only.split(",") if args.only else list(MODULES)
+    unknown = sorted(set(which) - set(MODULES))
+    if unknown:
+        ap.error(
+            f"unknown benchmark module(s): {', '.join(unknown)} "
+            f"(choose from: {', '.join(MODULES)})"
+        )
 
+    sha = git_sha()
     print("name,us_per_call,derived")
     failed = []
     for name in which:
-        mod = __import__(f"benchmarks.bench_{name}", fromlist=["rows"])
         t0 = time.time()
+        rows = []
+        ok = True
         try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["rows"])
             for row_name, us, derived in mod.rows():
+                rows.append((row_name, us, derived))
                 us_s = f"{us:.1f}" if us is not None else ""
                 dv = f"{derived:.4f}" if derived is not None else ""
                 print(f"{row_name},{us_s},{dv}", flush=True)
@@ -44,10 +115,17 @@ def main() -> None:
             print(f"bench_{name},ERROR,", flush=True)
             traceback.print_exc(file=sys.stderr)
             failed.append(name)
-        print(f"# bench_{name} wall: {time.time()-t0:.1f}s", file=sys.stderr)
+            ok = False
+        wall = time.time() - t0
+        print(f"# bench_{name} wall: {wall:.1f}s", file=sys.stderr)
+        if args.json:
+            path = write_artifact(args.json, name, rows, wall, sha,
+                                  failed=not ok)
+            print(f"# wrote {path}", file=sys.stderr)
     if failed:
         # every remaining module still ran, but CI must see the failure
-        # (bench_serve's rows assert bit-identity gates, not just timings)
+        # (bench_serve/bench_stream rows assert bit-identity gates and
+        # speedup floors, not just timings)
         print(f"# FAILED: {','.join(failed)}", file=sys.stderr)
         sys.exit(1)
 

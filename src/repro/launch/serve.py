@@ -1,10 +1,15 @@
 """Serving drivers.
 
-Two engines behind one entrypoint:
+Three modes behind one entrypoint:
 
   * ``tokens``  — batched LM prefill+decode on a (reduced) arch config
-  * ``sensors`` — the streaming multi-sensor time-surface engine: AER
-                  event streams in, decayed surfaces / STCF masks out
+  * ``sensors`` — the request/response multi-sensor time-surface engine:
+                  AER event streams in, decayed surfaces / STCF masks out
+  * ``stream``  — the real-time runtime: mixed-rate scene traffic replayed
+                  through bounded ingress queues with deadline-coalesced,
+                  pipelined dispatch; reports throughput, p50/p95/p99
+                  readout latency, and drop rate, then gates the whole
+                  replay bitwise against a synchronous oracle
 
     PYTHONPATH=src python -m repro.launch.serve tokens --arch gemma2-27b \
         --reduced --requests 4 --new-tokens 16
@@ -12,6 +17,10 @@ Two engines behind one entrypoint:
         --duration 0.2 --hw 120x160
     PYTHONPATH=src python -m repro.launch.serve sensors --sensors 8 \
         --mesh 4          # slot pool sharded over 4 (emulated) devices
+    PYTHONPATH=src python -m repro.launch.serve stream --sensors 6 \
+        --policy drop_oldest --queue 4096 --churn     # overload + churn
+    PYTHONPATH=src python -m repro.launch.serve stream --speed 1.0 \
+        # paced at real time (0 = as fast as possible)
 """
 from __future__ import annotations
 
@@ -147,6 +156,49 @@ def run_sensors(args) -> None:
               f"events ingested {stats['n_events'][cam.slot]}")
 
 
+def run_stream(args) -> None:
+    from repro.events import replay as rp
+    from repro.launch import mesh as mesh_mod
+    from repro.serve import spec as rs
+    from repro.serve.stream import StreamConfig
+    from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+    try:
+        h, w = (int(v) for v in args.hw.split("x"))
+    except ValueError:
+        raise SystemExit(
+            f"--hw must be HxW (e.g. 240x320), got {args.hw!r}"
+        ) from None
+    mesh = None
+    if args.mesh:
+        mesh_mod.ensure_host_device_count(args.mesh)
+        mesh = mesh_mod.make_host_mesh(args.mesh)
+        print(f"mesh: {dict(mesh.shape)}")
+
+    cfg = TSEngineConfig(h=h, w=w, n_slots=max(args.slots, args.sensors),
+                         chunk_capacity=args.chunk, mode=args.mode,
+                         backend=args.backend)
+    scfg = StreamConfig(policy=args.policy, queue_capacity=args.queue,
+                        deadline_s=args.deadline)
+    feeds = rp.mixed_scene_feeds(h, w, args.duration, args.sensors,
+                                 seed=args.seed, churn=args.churn)
+    for i, f in enumerate(feeds):
+        detach = f"{f.detach_t * 1e3:.0f}ms" if f.detach_t else "end"
+        print(f"feed {i}: {f.name:>12s} {f.stream.n:7d} events, "
+              f"attach {f.attach_t * 1e3:.0f}ms -> {detach}")
+
+    report = rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), feeds, scfg,
+                       rs.SURFACE_SPEC, speed=args.speed,
+                       arrival_substeps=args.substeps)
+    print(report.summary())
+    if not args.no_oracle:
+        n = rp.check_oracle(
+            report, lambda: TimeSurfaceEngine(cfg, mesh=mesh),
+            rs.SURFACE_SPEC,
+        )
+        print(f"bitwise oracle gate: OK over {n} deadlines")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     sub = ap.add_subparsers(dest="engine", required=True)
@@ -175,11 +227,42 @@ def main() -> None:
                          "through the fused serve_step at one frame deadline "
                          "(0/1 disables)")
 
+    st = sub.add_parser("stream", help="real-time streaming runtime replay")
+    st.add_argument("--sensors", type=int, default=4)
+    st.add_argument("--slots", type=int, default=8)
+    st.add_argument("--hw", default="120x160", help="HxW, e.g. 240x320")
+    st.add_argument("--duration", type=float, default=0.1,
+                    help="virtual seconds of traffic to replay")
+    st.add_argument("--deadline", type=float, default=0.01, metavar="S",
+                    help="readout deadline / microbatch flush period")
+    st.add_argument("--policy", choices=("block", "drop_oldest",
+                                         "drop_newest"),
+                    default="block", help="ingress-queue overload policy")
+    st.add_argument("--queue", type=int, default=1 << 15,
+                    help="per-sensor ingress queue capacity (events)")
+    st.add_argument("--speed", type=float, default=0.0,
+                    help="pacing vs real time (0 = as fast as possible)")
+    st.add_argument("--substeps", type=int, default=4,
+                    help="arrival granules per deadline")
+    st.add_argument("--churn", action="store_true",
+                    help="mid-run sensor attach/detach")
+    st.add_argument("--chunk", type=int, default=4096)
+    st.add_argument("--mode", choices=("edram", "ideal"), default="edram")
+    st.add_argument("--backend", choices=("pallas", "interpret", "ref"),
+                    default=None)
+    st.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard the slot pool over an N-device mesh")
+    st.add_argument("--seed", type=int, default=0)
+    st.add_argument("--no-oracle", action="store_true",
+                    help="skip the synchronous bitwise oracle gate")
+
     args = ap.parse_args()
     if args.engine == "tokens":
         run_tokens(args)
-    else:
+    elif args.engine == "sensors":
         run_sensors(args)
+    else:
+        run_stream(args)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,9 @@ from repro.serve.spec import (  # noqa: F401
     SURFACE_SPEC, ReadoutSpec, count, ebbi, mask, sae_raw, stcf, surface,
     ts_quantized,
 )
+from repro.serve.stream import (  # noqa: F401
+    StreamConfig, StreamRuntime, StreamSensor,
+)
 from repro.serve.ts_engine import (  # noqa: F401
     EngineState, TSEngineConfig, TimeSurfaceEngine,
 )

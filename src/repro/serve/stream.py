@@ -1,0 +1,458 @@
+"""Real-time streaming runtime: continuous event traffic over the engine.
+
+The PR 1-4 engine is request/response — callers hand it pre-windowed
+chunks and block on every read.  ``StreamRuntime`` turns it into the
+sustained-traffic system the paper's in-sensor array actually is: events
+arrive continuously, storage is finite, and readouts happen on
+*deadlines*, not on demand.
+
+Three layers, all deterministic given the event timestamps::
+
+    sensor.offer(events)          bounded ingress queue, overload policy
+          |                       (the software analogue of finite analog
+          v                        storage: MOMCAP charge, LL retention)
+    runtime.step(t_deadline)      coalesce queues -> engine-shaped chunks
+          |                       (cap by chunk_capacity AND by deadline)
+          v
+    push (async) + read (async)   pipelined dispatch: the next step's
+    sync previous read            host work overlaps the previous read's
+                                  device compute — ONE host sync/deadline
+
+**Overload policy** (``StreamConfig.policy``) — what happens when a
+sensor's queue is full; every path keeps exact drop counters:
+
+  * ``"block"``       — ``offer`` accepts what fits and returns the count;
+                        the producer holds the rest (backpressure).
+  * ``"drop_oldest"`` — new events evict the oldest queued ones (the
+                        cache-like bounded-space semantics of streaming
+                        DVS filters); ``dropped`` counts evictions.
+  * ``"drop_newest"`` — overflow is discarded on arrival.
+
+**Coalescing** is rate-adaptive with no tuning: at each deadline the
+whole queue drains into ceil(n / chunk_capacity) chunks.  At high rates
+chunks run full (dispatch overhead amortized); at low rates a partial
+chunk ships at the deadline (latency stays bounded).  The final surface
+is invariant to the chunking — the engine scatter is a max-combine and
+the counter plane an add, both order-insensitive — which the replay
+oracle (``events.replay``) gates bitwise.
+
+**Pipelining** exploits JAX async dispatch (single-device and mesh modes
+both): ``step(t)`` dispatches this deadline's scatter and spec read,
+*then* syncs the previous deadline's read.  Host-side work (queue drains,
+``EventBatch`` padding, dispatch overhead) for step k runs while step
+k-1's read is still on the device; each step performs exactly one host
+sync.  ``flush()`` syncs the last in-flight read.  With
+``pipeline=False`` every step syncs its own read — the synchronous
+comparator ``benchmarks/bench_stream.py`` measures against.
+
+Determinism contract: which events are accepted, dropped, and coalesced
+into which chunk of which step is a pure function of the offered event
+sequence and the deadline times — never of wall-clock timing.  The
+recorded action log (attach/detach/step with host-side chunk copies)
+replays bitwise through a fresh engine (``events.replay.oracle_digests``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.events import aer
+from repro.events import pipeline
+from repro.events import synthetic as syn
+from repro.serve import spec as spec_mod
+
+__all__ = [
+    "POLICIES", "StreamConfig", "StreamSensor", "StreamRuntime",
+    "StepRecord", "digest_products",
+]
+
+POLICIES = ("block", "drop_oldest", "drop_newest")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static runtime configuration.
+
+    ``queue_capacity`` bounds each sensor's ingress queue in *events* —
+    the finite-storage knob; ``deadline_s`` is the readout period (every
+    ``step`` call is one deadline); ``policy`` picks the overload
+    behavior; ``pipeline=False`` degrades to sync-per-step (the
+    benchmark comparator); ``record_chunks=False`` drops the host-side
+    chunk copies from the action log (timing-only runs — the oracle
+    replay then has nothing to consume).
+    """
+
+    policy: str = "drop_oldest"
+    queue_capacity: int = 1 << 15
+    deadline_s: float = 0.01
+    pipeline: bool = True
+    record_chunks: bool = True
+    max_record_steps: Optional[int] = 10_000
+    # retention bound on the action log: beyond this many recorded
+    # steps the oldest step entries are trimmed (counted in
+    # ``log_trimmed_steps``) so a long-running deployment cannot retain
+    # every ingested event in host memory.  A trimmed log is no longer
+    # oracle-replayable from t=0 — ``events.replay.check_oracle`` says
+    # so explicitly.  ``None`` disables trimming (replay-harness runs).
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"policy must be one of {POLICIES}, got {self.policy!r}"
+            )
+        assert self.queue_capacity >= 1, self.queue_capacity
+        assert self.deadline_s > 0, self.deadline_s
+        assert self.max_record_steps is None or self.max_record_steps >= 1
+
+
+#: one queued segment: (x, y, t, p) host arrays, equal length
+_Segment = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+def _as_arrays(events, h: int, w: int) -> _Segment:
+    """Normalize an offer payload (``EventStream``, packed uint64 AER
+    words, or an (x, y, t, p) tuple of arrays) to host numpy arrays."""
+    if isinstance(events, np.ndarray) and events.dtype == np.uint64:
+        events = aer.unpack(events, h, w)
+    if isinstance(events, syn.EventStream):
+        return (events.x.astype(np.int32), events.y.astype(np.int32),
+                events.t.astype(np.float32), events.p.astype(np.int32))
+    x, y, t, p = events
+    return (np.asarray(x, np.int32), np.asarray(y, np.int32),
+            np.asarray(t, np.float32), np.asarray(p, np.int32))
+
+
+class StreamSensor:
+    """One sensor's bounded ingress queue + its engine session.
+
+    Create via ``StreamRuntime.connect()``.  ``offer(events)`` is the
+    producer side; the runtime drains the queue at each deadline.  All
+    counters are exact and deterministic (see the module docstring).
+    """
+
+    def __init__(self, runtime: "StreamRuntime", session):
+        self._runtime = runtime
+        self.session = session
+        self._segments: List[_Segment] = []
+        self._queued = 0
+        # -- exact accounting --------------------------------------------
+        self.offered = 0     # events handed to offer()
+        self.accepted = 0    # events that entered the queue
+        self.dropped = 0     # evicted (drop_oldest) or refused (drop_newest)
+        self.refused = 0     # block policy: events offer() did not take
+        self.ingested = 0    # events drained into engine chunks
+        self.discarded = 0   # queued events thrown away by disconnect()
+
+    # -- producer side --------------------------------------------------------
+    @property
+    def slot(self) -> int:
+        return self.session.slot
+
+    @property
+    def queued(self) -> int:
+        """Events currently waiting in the queue."""
+        return self._queued
+
+    def offer(self, events) -> int:
+        """Offer events; returns how many were *consumed* (accepted or
+        dropped by policy).  Under ``"block"`` the return value may be
+        short — the producer re-offers the remainder later (that IS the
+        backpressure).  Events must be time-sorted within one offer.
+        Accepted events are **copied** into the queue: producers may
+        reuse or mutate their buffers immediately after ``offer``
+        returns (the natural real-time sensor-loop pattern)."""
+        if self.session is None:
+            raise RuntimeError("sensor is disconnected")
+        cfg = self._runtime.cfg
+        x, y, t, p = _as_arrays(events, self._runtime.engine.cfg.h,
+                                self._runtime.engine.cfg.w)
+        n = len(x)
+        self.offered += n
+        if n == 0:
+            return 0
+        free = cfg.queue_capacity - self._queued
+        if cfg.policy == "block":
+            take = min(free, n)
+            self.refused += n - take
+            if take:
+                self._append((x[:take], y[:take], t[:take], p[:take]))
+            return take
+        if cfg.policy == "drop_newest":
+            take = min(free, n)
+            self.dropped += n - take
+            if take:
+                self._append((x[:take], y[:take], t[:take], p[:take]))
+            return n
+        # drop_oldest: everything enters, the head makes room
+        self._append((x, y, t, p))
+        overflow = self._queued - cfg.queue_capacity
+        if overflow > 0:
+            self._evict_oldest(overflow)
+        return n
+
+    def _append(self, seg: _Segment) -> None:
+        # own a copy: _as_arrays/asarray and slicing return views of the
+        # producer's buffers, which it may legitimately reuse after
+        # offer() returns — the queue (and the action log built from it)
+        # must never alias caller memory
+        self._segments.append(tuple(np.array(a, copy=True) for a in seg))
+        self._queued += len(seg[0])
+        self.accepted += len(seg[0])
+
+    def _evict_oldest(self, n: int) -> None:
+        self.dropped += n
+        self._queued -= n
+        while n > 0:
+            head = self._segments[0]
+            m = len(head[0])
+            if m <= n:
+                self._segments.pop(0)
+                n -= m
+            else:
+                self._segments[0] = tuple(a[n:] for a in head)
+                n = 0
+
+    # -- runtime side ---------------------------------------------------------
+    def _drain(self) -> Optional[_Segment]:
+        """Pop everything queued as one concatenated segment."""
+        if not self._queued:
+            return None
+        segs = self._segments
+        out = tuple(
+            np.concatenate([s[i] for s in segs]) for i in range(4)
+        ) if len(segs) > 1 else segs[0]
+        self._segments = []
+        self.ingested += self._queued
+        self._queued = 0
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "slot": self.slot if self.session is not None else None,
+            "queued": self._queued, "offered": self.offered,
+            "accepted": self.accepted, "dropped": self.dropped,
+            "refused": self.refused, "ingested": self.ingested,
+            "discarded": self.discarded,
+        }
+
+
+@dataclasses.dataclass
+class StepRecord:
+    """One deadline's dispatch, with enough host state to replay it.
+
+    ``chunks`` holds host-side copies of the coalesced (slot, events)
+    pairs exactly as dispatched (absent when ``record_chunks=False``);
+    ``digest`` is the SHA-256 of the synced products, filled at sync
+    time, which the synchronous oracle must reproduce bitwise.
+    ``latency_s`` is dispatch -> sync-returned wall time (in pipelined
+    mode the sync happens at the next deadline, so it is the latency the
+    *consumer* of the previous frame observes).
+    """
+
+    t_read: float
+    n_events: int
+    n_chunks: int
+    chunks: Optional[List[Tuple[int, _Segment]]]
+    wall_dispatch: float
+    latency_s: float = float("nan")
+    digest: str = ""
+
+
+#: action-log entries: ("attach", slot) | ("detach", slot) | ("step", rec)
+LogEntry = Tuple[str, Union[int, StepRecord]]
+
+
+def digest_products(products: Dict[str, jax.Array]) -> str:
+    """SHA-256 over the (name-sorted) product arrays' raw bytes — the
+    bitwise-equality currency of the replay oracle gate."""
+    h = hashlib.sha256()
+    for name in sorted(products):
+        a = np.asarray(products[name])
+        h.update(name.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+class _Inflight:
+    __slots__ = ("record", "products")
+
+    def __init__(self, record: StepRecord, products: Dict[str, jax.Array]):
+        self.record = record
+        self.products = products
+
+
+class StreamRuntime:
+    """Continuous-traffic front end over a ``TimeSurfaceEngine``.
+
+    One runtime owns its engine's traffic: ``connect()`` attaches a
+    session and wraps it in a ``StreamSensor`` queue, ``step(t)`` runs
+    one deadline (drain -> pipelined push+read -> sync previous), and
+    ``flush()`` syncs the tail.  Works identically over a single-device
+    or mesh-sharded engine — the pipelining is JAX async dispatch, which
+    both modes provide.
+    """
+
+    def __init__(
+        self,
+        engine,
+        cfg: StreamConfig = StreamConfig(),
+        spec: spec_mod.ReadoutSpec = spec_mod.SURFACE_SPEC,
+        *,
+        max_latency_samples: int = 100_000,
+    ):
+        self.engine = engine
+        self.cfg = cfg
+        self.spec = spec
+        self.sensors: Dict[int, StreamSensor] = {}   # slot -> sensor
+        self.log: List[LogEntry] = []
+        self.latencies_s: List[float] = []
+        self._max_lat = max_latency_samples
+        self._inflight: Optional[_Inflight] = None
+        self._retired: Dict[str, int] = {
+            k: 0 for k in ("offered", "accepted", "dropped", "refused",
+                           "ingested", "discarded")
+        }
+        self.n_steps = 0
+        self.log_trimmed_steps = 0
+
+    # -- lifecycle ------------------------------------------------------------
+    def connect(self) -> StreamSensor:
+        """Attach a session (raises ``RuntimeError`` when the pool is
+        full) and return its queue-fronted sensor handle."""
+        session = self.engine.attach()
+        sensor = StreamSensor(self, session)
+        self.sensors[session.slot] = sensor
+        self.log.append(("attach", session.slot))
+        return sensor
+
+    def disconnect(self, sensor: StreamSensor) -> None:
+        """Detach: the sensor's queued events are discarded (counted in
+        ``discarded`` — a disconnect is data loss, and we say so), its
+        slot returns to the pool."""
+        if sensor.session is None:
+            raise RuntimeError("sensor already disconnected")
+        sensor.discarded += sensor.queued
+        sensor._segments, sensor._queued = [], 0
+        slot = sensor.slot
+        st = sensor.stats()
+        for k in self._retired:
+            self._retired[k] += st[k]
+        self.sensors.pop(slot, None)
+        sensor.session.detach()
+        sensor.session = None
+        self.log.append(("detach", slot))
+
+    # -- the deadline loop ----------------------------------------------------
+    def _coalesce(self):
+        """Drain every queue into capacity-sized engine chunks.
+
+        Returns (items, chunk_copies, n_events): ``items`` are
+        (slot, EventBatch) pairs for ``engine.push``; ``chunk_copies``
+        are the host-side numpy twins for the action log."""
+        cap = self.engine.cfg.chunk_capacity
+        h, w = self.engine.cfg.h, self.engine.cfg.w
+        items, copies, n_events = [], [], 0
+        for slot in sorted(self.sensors):
+            seg = self.sensors[slot]._drain()
+            if seg is None:
+                continue
+            x, y, t, p = seg
+            n_events += len(x)
+            for lo in range(0, len(x), cap):
+                part = tuple(a[lo:lo + cap] for a in (x, y, t, p))
+                stream = syn.EventStream(
+                    x=part[0], y=part[1], t=part[2], p=part[3],
+                    is_signal=np.ones(len(part[0]), bool), h=h, w=w,
+                )
+                items.append((slot, pipeline.to_event_batch(stream, cap)))
+                copies.append((slot, part))
+        return items, copies, n_events
+
+    def step(self, t_deadline: float) -> StepRecord:
+        """Run one deadline: coalesce, dispatch scatter + spec read,
+        sync the *previous* read (one host sync).  Returns this step's
+        record (its ``latency_s``/``digest`` fill at the next sync).
+        With ``pipeline=False`` the sync is this step's own read."""
+        items, copies, n_events = self._coalesce()
+        wall0 = time.perf_counter()
+        if items:
+            self.engine.push(items)
+        products = self.engine.read(self.spec, t_deadline)
+        record = StepRecord(
+            t_read=float(t_deadline), n_events=n_events,
+            n_chunks=len(items),
+            chunks=copies if self.cfg.record_chunks else None,
+            wall_dispatch=wall0,
+        )
+        self.log.append(("step", record))
+        self.n_steps += 1
+        cap = self.cfg.max_record_steps
+        if cap is not None and self.n_steps - self.log_trimmed_steps > cap:
+            for i, (kind, _) in enumerate(self.log):
+                if kind == "step":   # trim the oldest step (chunks and all)
+                    del self.log[i]
+                    self.log_trimmed_steps += 1
+                    break
+        prev = self._inflight
+        self._inflight = _Inflight(record, products)
+        if self.cfg.pipeline:
+            if prev is not None:
+                self._sync(prev)
+        else:
+            self._sync(self._inflight)
+            self._inflight = None
+        return record
+
+    def _sync(self, fl: _Inflight) -> None:
+        jax.block_until_ready(fl.products)
+        lat = time.perf_counter() - fl.record.wall_dispatch
+        fl.record.latency_s = lat
+        if len(self.latencies_s) < self._max_lat:
+            self.latencies_s.append(lat)
+        fl.record.digest = digest_products(fl.products)
+
+    def flush(self) -> Optional[Dict[str, jax.Array]]:
+        """Sync the in-flight read (if any) and return its products —
+        the tail of the pipeline, and the way tests grab the *current*
+        step's output right after ``step``."""
+        fl, self._inflight = self._inflight, None
+        if fl is None:
+            return None
+        if np.isnan(fl.record.latency_s):   # not yet synced
+            self._sync(fl)
+        return fl.products
+
+    # -- telemetry ------------------------------------------------------------
+    def counters(self) -> Dict[str, int]:
+        """Exact event accounting: retired (disconnected) + live sensors."""
+        out = dict(self._retired)
+        out["queued"] = 0
+        for sensor in self.sensors.values():
+            st = sensor.stats()
+            for k in self._retired:
+                out[k] += st[k]
+            out["queued"] += st["queued"]
+        return out
+
+    def stats(self) -> dict:
+        c = self.counters()
+        lat = np.asarray(self.latencies_s, np.float64)
+        return {
+            **c,
+            "n_steps": self.n_steps,
+            "log_trimmed_steps": self.log_trimmed_steps,
+            "n_sensors": len(self.sensors),
+            "policy": self.cfg.policy,
+            "deadline_s": self.cfg.deadline_s,
+            "drop_rate": c["dropped"] / c["offered"] if c["offered"] else 0.0,
+            "latency_p50_us": float(np.percentile(lat, 50) * 1e6) if lat.size else None,
+            "latency_p95_us": float(np.percentile(lat, 95) * 1e6) if lat.size else None,
+            "latency_p99_us": float(np.percentile(lat, 99) * 1e6) if lat.size else None,
+        }

@@ -2,8 +2,11 @@
 
 A model-based harness drives random interleavings of
 ``acquire`` / ``ingest`` / ``readout`` / ``release`` / ``ingest_and_read``
-(plus the ``with_support`` labeling path and composed ``ReadoutSpec``
-reads — surface/stcf/count/ebbi from one dispatch) against
+(plus the ``with_support`` labeling path, composed ``ReadoutSpec``
+reads — surface/stcf/count/ebbi from one dispatch — and the streaming
+runtime's ``stream_connect`` / ``stream_offer`` / ``stream_step``
+drop/coalesce actions, whose bounded drop_oldest queue is mirrored
+event-for-event by an independent policy model) against
 ``TimeSurfaceEngine``
 while an *oracle* replays the same event log through the offline
 primitives — ``core.time_surface.surface_init/update`` folded per slot and
@@ -31,6 +34,7 @@ from repro.core import time_surface as ts
 from repro.events import synthetic as syn
 from repro.kernels import ops
 from repro.serve import spec as rs
+from repro.serve.stream import StreamConfig, StreamRuntime
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 try:
@@ -45,6 +49,7 @@ except ImportError:
 H, W = 24, 32
 CAP = 64          # small capacity so streams routinely split host-side
 T_READS = (0.03, 0.05, 0.08)   # includes reads older than newest writes
+SQ_CAP = 100      # stream ingress queue: < 2*CAP so offers routinely drop
 
 #: the composed spec the walk reads alongside the classic surface —
 #: exercises the one-dispatch multi-product path against the oracle
@@ -68,6 +73,17 @@ class EngineModel:
         self.oracle = {}       # slot -> SurfaceState
         self.counts = {}       # slot -> ingested valid-event count
         self.pixel_counts = {}  # slot -> (H, W) int64 per-pixel count
+        # the streaming runtime shares the SAME engine pool: stream
+        # sensors occupy slots alongside directly-acquired ones, and the
+        # walk interleaves queue/coalesce traffic with direct calls
+        self.runtime = StreamRuntime(
+            self.eng,
+            StreamConfig(policy="drop_oldest", queue_capacity=SQ_CAP,
+                         deadline_s=0.01),
+        )
+        self.stream_sensors = {}   # slot -> StreamSensor
+        self.squeue = {}           # slot -> mirror of queued events
+        self.sdropped = {}         # slot -> mirror drop counter
 
     # -- actions ------------------------------------------------------------
     def acquire(self):
@@ -82,6 +98,19 @@ class EngineModel:
         return slot
 
     def release(self, slot):
+        if slot in self.stream_sensors:
+            # a stream-owned slot releases through the runtime: queued
+            # events are discarded and counted, the slot frees up
+            sensor = self.stream_sensors.pop(slot)
+            queued = sum(len(e[0]) for e in self.squeue.pop(slot))
+            self.sdropped.pop(slot)
+            before = sensor.discarded
+            self.runtime.disconnect(sensor)
+            assert sensor.discarded - before == queued
+            del self.oracle[slot]
+            del self.counts[slot]
+            del self.pixel_counts[slot]
+            return
         if slot not in self.oracle:
             with pytest.raises(ValueError):
                 self.eng.release(slot)
@@ -154,6 +183,72 @@ class EngineModel:
         np.testing.assert_array_equal(sup, want_sup)
         np.testing.assert_array_equal(sig, want_sup >= scfg.threshold)
         self._oracle_ingest(slot, stream)
+
+    # -- streaming-runtime actions (drop/coalesce differential) -------------
+    def stream_connect(self):
+        """Attach a queue-fronted stream sensor on the shared pool."""
+        if self.eng.n_live == self.cfg.n_slots:
+            with pytest.raises(RuntimeError):
+                self.runtime.connect()
+            return None
+        sensor = self.runtime.connect()
+        slot = sensor.slot
+        self.oracle[slot] = ts.surface_init(H, W)
+        self.counts[slot] = 0
+        self.pixel_counts[slot] = np.zeros((H, W), np.int64)
+        self.stream_sensors[slot] = sensor
+        self.squeue[slot] = []
+        self.sdropped[slot] = 0
+        return slot
+
+    def stream_offer(self, rng, n_events):
+        """Offer events to a random stream sensor's bounded queue and
+        check the runtime's drop accounting against an independent
+        mirror of the drop_oldest policy (evict-from-head, exact)."""
+        if not self.stream_sensors:
+            return
+        slot = int(rng.choice(sorted(self.stream_sensors)))
+        sensor = self.stream_sensors[slot]
+        s = self._stream(rng, n_events)
+        consumed = sensor.offer((s.x, s.y, s.t, s.p))
+        assert consumed == n_events          # drop_oldest consumes all
+        # mirror: append, then evict oldest overflow
+        q = self.squeue[slot]
+        q.append((s.x, s.y, s.t, s.p))
+        size = sum(len(e[0]) for e in q)
+        overflow = size - SQ_CAP
+        while overflow > 0:
+            head = q[0]
+            m = len(head[0])
+            if m <= overflow:
+                q.pop(0)
+                self.sdropped[slot] += m
+                overflow -= m
+            else:
+                q[0] = tuple(a[overflow:] for a in head)
+                self.sdropped[slot] += overflow
+                overflow = 0
+        assert sensor.dropped == self.sdropped[slot], slot
+        assert sensor.queued == sum(len(e[0]) for e in q), slot
+
+    def stream_step(self, t):
+        """One deadline: every stream queue drains (coalesced into
+        capacity chunks) and the pool is read at ``t``.  The oracle
+        ingests exactly the mirror queues' surviving events — so a drop
+        the runtime failed to take, or a coalescing boundary that lost
+        or duplicated an event, shows up as a bitwise surface diff."""
+        self.runtime.step(t)
+        products = self.runtime.flush()
+        for slot, q in self.squeue.items():
+            for x, y, tt, p in q:
+                stream = syn.EventStream(
+                    x=x, y=y, t=tt, p=p,
+                    is_signal=np.ones(len(x), bool), h=H, w=W,
+                )
+                self._oracle_ingest(slot, stream)
+            q.clear()
+        self._t = t
+        self._check_surface(products["surface"])
 
     # -- checks -------------------------------------------------------------
     def _check_surface(self, got):
@@ -230,7 +325,7 @@ class EngineModel:
 def _walk(model, rng, n_steps):
     slots = range(model.cfg.n_slots)
     for _ in range(n_steps):
-        action = rng.integers(0, 8)
+        action = rng.integers(0, 11)
         if action == 0:
             model.acquire()
         elif action == 1:
@@ -249,6 +344,12 @@ def _walk(model, rng, n_steps):
                                       int(rng.integers(1, 2 * CAP)))
         elif action == 6:
             model.read_spec(float(rng.choice(T_READS)))
+        elif action == 7:
+            model.stream_connect()
+        elif action == 8:
+            model.stream_offer(rng, int(rng.integers(0, 2 * CAP)))
+        elif action == 9:
+            model.stream_step(float(rng.choice(T_READS)))
         else:
             model.check_counts()
     model.check_counts()
@@ -260,6 +361,24 @@ def test_differential_walk(mode, seed):
     model = EngineModel(mode)
     model.acquire()      # start with one live slot so early steps bite
     _walk(model, np.random.default_rng((seed, mode == "edram")), 25)
+
+
+def test_differential_stream_overload():
+    """Hammer the drop/coalesce path: two stream sensors, repeated
+    over-capacity offers (evictions on every one), interleaved deadline
+    steps, then a release that discards a live queue."""
+    model = EngineModel("edram")
+    rng = np.random.default_rng(11)
+    model.stream_connect()
+    model.stream_connect()
+    for i in range(8):
+        model.stream_offer(rng, int(rng.integers(1, 2 * CAP)))
+        if i % 2:
+            model.stream_step(float(rng.choice(T_READS)))
+    model.stream_offer(rng, 2 * CAP)     # leave a queue behind...
+    model.release(sorted(model.stream_sensors)[0])   # ...and discard it
+    model.stream_step(0.08)
+    model.check_counts()
 
 
 def test_differential_repeated_reads_same_t():
@@ -323,6 +442,18 @@ if hyp is not None:
         def ingest_and_read(self, seed, slot, n, t):
             self.model.ingest_and_read(
                 np.random.default_rng(seed), slot, n, t)
+
+        @rule()
+        def stream_connect(self):
+            self.model.stream_connect()
+
+        @rule(seed=RNG_SEED, n=N_EVENTS)
+        def stream_offer(self, seed, n):
+            self.model.stream_offer(np.random.default_rng(seed), n)
+
+        @rule(t=T_NOW)
+        def stream_step(self, t):
+            self.model.stream_step(t)
 
         @precondition(lambda self: hasattr(self, "model"))
         @invariant()

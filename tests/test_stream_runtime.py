@@ -1,0 +1,442 @@
+"""Unit tests for the real-time streaming runtime + replay harness.
+
+Everything here runs under the virtual clock — which events are
+accepted, dropped, coalesced into which chunk of which deadline is a
+pure function of event timestamps and the deadline grid, so every
+assertion below is exact (drop *counts*, chunk *sizes*, bitwise
+surfaces), not statistical.
+"""
+import numpy as np
+import pytest
+
+from repro.events import pipeline
+from repro.events import replay as rp
+from repro.events import synthetic as syn
+from repro.serve import spec as rs
+from repro.serve.stream import StreamConfig, StreamRuntime
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 24, 32
+CAP = 64
+
+
+def make_cfg(n_slots=4):
+    return TSEngineConfig(h=H, w=W, n_slots=n_slots, chunk_capacity=CAP,
+                          backend="interpret", block=(8, 16))
+
+
+def make_engine(n_slots=4):
+    return TimeSurfaceEngine(make_cfg(n_slots))
+
+
+def events(rng, n, t_lo=0.0, t_hi=0.06):
+    t = np.sort(t_lo + rng.random(n).astype(np.float32) * (t_hi - t_lo))
+    return syn.EventStream(
+        x=rng.integers(0, W, n).astype(np.int32),
+        y=rng.integers(0, H, n).astype(np.int32),
+        t=t.astype(np.float32),
+        p=rng.integers(0, 2, n).astype(np.int32),
+        is_signal=np.ones(n, bool), h=H, w=W,
+    )
+
+
+def surface_of(engine_events, t_read):
+    """Fresh-engine oracle: push ``engine_events`` on slot 0, read."""
+    eng = make_engine()
+    cam = eng.attach()
+    if engine_events.n:
+        cam.push(engine_events)
+    return np.asarray(eng.read(rs.SURFACE_SPEC, t_read)["surface"])
+
+
+# ---------------------------------------------------------------------------
+# coalescing + deadlines
+# ---------------------------------------------------------------------------
+
+def test_coalescing_boundaries():
+    """A queue drains into ceil(n/capacity) chunks: full, full, remainder."""
+    rt = StreamRuntime(make_engine(), StreamConfig(queue_capacity=1 << 12))
+    cam = rt.connect()
+    ev = events(np.random.default_rng(0), 2 * CAP + 5)
+    assert cam.offer(ev) == 2 * CAP + 5
+    rec = rt.step(0.06)
+    assert rec.n_events == 2 * CAP + 5
+    assert rec.n_chunks == 3
+    sizes = [len(seg[0]) for _, seg in rec.chunks]
+    assert sizes == [CAP, CAP, 5]
+    assert all(slot == cam.slot for slot, _ in rec.chunks)
+    got = rt.flush()["surface"]
+    assert (np.asarray(got)[cam.slot] == surface_of(ev, 0.06)[0]).all()
+    assert cam.queued == 0 and cam.ingested == 2 * CAP + 5
+
+
+def test_deadline_alignment():
+    """Each deadline's chunks hold exactly the events of its window."""
+    rng = np.random.default_rng(1)
+    stream = events(rng, 300, t_lo=0.0, t_hi=0.03)
+    eng = make_engine()
+    report = rp.replay(
+        eng, [rp.SensorFeed(stream=stream)],
+        StreamConfig(policy="block", queue_capacity=1 << 12,
+                     deadline_s=0.01),
+        arrival_substeps=4,
+    )
+    d = 0.01
+    per_step = [e.n_events for kind, e in report.log if kind == "step"]
+    want = [
+        int(((stream.t >= np.float32((k - 1) * d))
+             & (stream.t < np.float32(k * d))).sum())
+        for k in range(1, len(per_step) + 1)
+    ]
+    assert per_step == want
+    assert sum(per_step) == stream.n
+    assert report.ingested == stream.n and report.dropped == 0
+
+
+def test_step_reads_at_deadline_even_when_idle():
+    """Deadlines with no traffic still produce a frame (and a digest)."""
+    rt = StreamRuntime(make_engine(), StreamConfig())
+    rt.connect()
+    rec = rt.step(0.02)
+    assert rec.n_events == 0 and rec.n_chunks == 0
+    assert rt.flush() is not None
+    assert rec.digest  # filled at sync
+
+
+# ---------------------------------------------------------------------------
+# overload policies: exact drop accounting
+# ---------------------------------------------------------------------------
+
+def test_policy_block_backpressure():
+    rt = StreamRuntime(
+        make_engine(), StreamConfig(policy="block", queue_capacity=10))
+    cam = rt.connect()
+    ev = events(np.random.default_rng(2), 25)
+    assert cam.offer(ev) == 10          # only what fits is consumed
+    assert cam.queued == 10 and cam.refused == 15 and cam.dropped == 0
+    assert cam.offer(ev.take(slice(10, 25))) == 0   # full: nothing enters
+    rt.step(0.06)
+    assert cam.queued == 0
+    assert cam.offer(ev.take(slice(10, 25))) == 10  # drained: room again
+    rt.step(0.07)
+    rt.flush()
+    assert cam.ingested == 20 and cam.dropped == 0
+    # the engine saw exactly the first 20 events, in order
+    got = np.asarray(rt.engine.state.surfaces.n_events)[cam.slot]
+    assert got == 20
+
+
+def test_policy_drop_newest():
+    rt = StreamRuntime(
+        make_engine(), StreamConfig(policy="drop_newest", queue_capacity=10))
+    cam = rt.connect()
+    ev = events(np.random.default_rng(3), 25)
+    assert cam.offer(ev) == 25          # everything consumed...
+    assert cam.accepted == 10 and cam.dropped == 15   # ...overflow discarded
+    rt.step(0.06)
+    got = rt.flush()["surface"]
+    want = surface_of(ev.take(slice(0, 10)), 0.06)    # the OLDEST survive
+    assert (np.asarray(got)[cam.slot] == want[0]).all()
+
+
+def test_policy_drop_oldest():
+    rt = StreamRuntime(
+        make_engine(), StreamConfig(policy="drop_oldest", queue_capacity=10))
+    cam = rt.connect()
+    ev = events(np.random.default_rng(4), 25)
+    assert cam.offer(ev) == 25
+    assert cam.accepted == 25 and cam.dropped == 15 and cam.queued == 10
+    rt.step(0.06)
+    got = rt.flush()["surface"]
+    want = surface_of(ev.take(slice(15, 25)), 0.06)   # the NEWEST survive
+    assert (np.asarray(got)[cam.slot] == want[0]).all()
+
+
+def test_drop_oldest_eviction_spans_segments():
+    """Eviction walks whole and partial queued segments correctly."""
+    rt = StreamRuntime(
+        make_engine(), StreamConfig(policy="drop_oldest", queue_capacity=8))
+    cam = rt.connect()
+    rng = np.random.default_rng(5)
+    ev = events(rng, 12)
+    for lo in (0, 3, 6, 9):             # four 3-event offers
+        cam.offer(ev.take(slice(lo, lo + 3)))
+    assert cam.queued == 8 and cam.dropped == 4
+    rt.step(0.06)
+    got = rt.flush()["surface"]
+    want = surface_of(ev.take(slice(4, 12)), 0.06)    # last 8 survive
+    assert (np.asarray(got)[cam.slot] == want[0]).all()
+
+
+def test_counter_conservation():
+    """accepted == ingested + dropped-evictions + discarded + queued."""
+    rt = StreamRuntime(
+        make_engine(), StreamConfig(policy="drop_oldest", queue_capacity=32))
+    cams = [rt.connect() for _ in range(3)]
+    rng = np.random.default_rng(6)
+    for i, cam in enumerate(cams):
+        cam.offer(events(rng, 50 + 20 * i))
+    rt.step(0.06)
+    cams[0].offer(events(rng, 40))
+    rt.disconnect(cams[0])              # queued events -> discarded
+    rt.step(0.07)
+    rt.flush()
+    c = rt.counters()
+    assert c["accepted"] == (c["ingested"] + c["dropped"]
+                             + c["discarded"] + c["queued"])
+    assert c["discarded"] == 32         # full queue at disconnect
+
+
+# ---------------------------------------------------------------------------
+# churn + lifecycle
+# ---------------------------------------------------------------------------
+
+def test_churn_midrun_replay_oracle():
+    feeds = rp.mixed_scene_feeds(H, W, 0.06, 4, seed=1, churn=True)
+    assert any(f.attach_t > 0 for f in feeds)
+    assert any(f.detach_t is not None for f in feeds)
+    cfg = make_cfg()
+    report = rp.replay(
+        TimeSurfaceEngine(cfg), feeds,
+        StreamConfig(policy="drop_oldest", queue_capacity=256,
+                     deadline_s=0.01),
+    )
+    n = rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg))
+    assert n == report.n_steps > 0
+    kinds = [k for k, _ in report.log]
+    assert kinds.count("attach") == 4 and kinds.count("detach") == 1
+
+
+def test_disconnect_frees_slot_and_dead_sensor_raises():
+    rt = StreamRuntime(make_engine(n_slots=2), StreamConfig())
+    a, b = rt.connect(), rt.connect()
+    with pytest.raises(RuntimeError):
+        rt.connect()                    # pool full
+    slot_a = a.slot
+    rt.disconnect(a)
+    with pytest.raises(RuntimeError):
+        a.offer(events(np.random.default_rng(0), 4))
+    with pytest.raises(RuntimeError):
+        rt.disconnect(a)
+    c = rt.connect()                    # slot reused
+    assert c.slot == slot_a
+    rt.disconnect(b)
+    rt.disconnect(c)
+
+
+# ---------------------------------------------------------------------------
+# pipelining + determinism + oracle
+# ---------------------------------------------------------------------------
+
+def _replay_once(pipeline_on: bool, policy="block"):
+    feeds = rp.mixed_scene_feeds(H, W, 0.05, 3, seed=2)
+    cfg = make_cfg()
+    return rp.replay(
+        TimeSurfaceEngine(cfg), feeds,
+        StreamConfig(policy=policy, queue_capacity=1 << 14,
+                     deadline_s=0.01, pipeline=pipeline_on),
+    )
+
+
+def test_pipelined_bitwise_equals_synchronous():
+    """Pipelining moves *when* syncs happen, never what is computed."""
+    a = _replay_once(True)
+    b = _replay_once(False)
+    assert a.digests == b.digests
+    assert (a.ingested, a.dropped, a.n_steps) == (
+        b.ingested, b.dropped, b.n_steps)
+
+
+def test_replay_deterministic():
+    a = _replay_once(True, policy="drop_oldest")
+    b = _replay_once(True, policy="drop_oldest")
+    assert a.digests == b.digests
+    assert (a.offered, a.accepted, a.ingested, a.dropped) == (
+        b.offered, b.accepted, b.ingested, b.dropped)
+
+
+def test_replay_report_fields():
+    report = _replay_once(True)
+    assert report.n_steps == len(report.digests) > 0
+    assert report.events_per_sec > 0 and report.wall_s > 0
+    assert report.latency_p50_us is not None
+    assert report.latency_p50_us <= report.latency_p99_us
+    assert report.drop_rate == 0.0      # block + huge queue
+    assert "Meps" in report.summary()
+
+
+def test_offer_copies_producer_buffers():
+    """Producers may reuse/mutate their buffers right after offer()."""
+    rt = StreamRuntime(make_engine(), StreamConfig())
+    cam = rt.connect()
+    ev = events(np.random.default_rng(10), 30)
+    x, y, t, p = ev.x.copy(), ev.y.copy(), ev.t.copy(), ev.p.copy()
+    cam.offer((x, y, t, p))
+    x[:], y[:], t[:], p[:] = 0, 0, 9.9, 0    # producer reuses its buffer
+    rec = rt.step(0.06)
+    got = rt.flush()["surface"]
+    assert (np.asarray(got)[cam.slot] == surface_of(ev, 0.06)[0]).all()
+    # the action log must hold the original values too (oracle input)
+    _, (lx, ly, lt, lp) = rec.chunks[0]
+    np.testing.assert_array_equal(lt, ev.t)
+
+
+def test_log_trimming_bounds_retention():
+    """Beyond max_record_steps the oldest step entries are trimmed (and
+    counted); a trimmed replay refuses the oracle gate with a clear
+    error instead of silently diverging."""
+    rt = StreamRuntime(
+        make_engine(),
+        StreamConfig(max_record_steps=3, queue_capacity=1 << 12))
+    cam = rt.connect()
+    rng = np.random.default_rng(9)
+    for k in range(6):
+        cam.offer(events(rng, 10))
+        rt.step(0.01 * (k + 1))
+    rt.flush()
+    steps = [e for kind, e in rt.log if kind == "step"]
+    assert len(steps) == 3 and rt.log_trimmed_steps == 3
+    assert rt.n_steps == 6 and rt.stats()["log_trimmed_steps"] == 3
+    assert any(kind == "attach" for kind, _ in rt.log)   # lifecycle kept
+
+    cfg = make_cfg()
+    report = rp.replay(
+        TimeSurfaceEngine(cfg), rp.mixed_scene_feeds(H, W, 0.04, 2, seed=9),
+        StreamConfig(queue_capacity=1 << 14, deadline_s=0.01,
+                     max_record_steps=2),
+    )
+    with pytest.raises(ValueError, match="max_record_steps"):
+        rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg))
+
+
+def test_paced_replay_same_results():
+    """Wall-clock pacing (speed > 0) slows the loop, never the results."""
+    import time
+
+    feeds = rp.mixed_scene_feeds(H, W, 0.04, 2, seed=8)
+    cfg = make_cfg()
+    scfg = StreamConfig(queue_capacity=1 << 14, deadline_s=0.01)
+    fast = rp.replay(TimeSurfaceEngine(cfg), feeds, scfg)
+    t0 = time.perf_counter()
+    paced = rp.replay(TimeSurfaceEngine(cfg),
+                      rp.mixed_scene_feeds(H, W, 0.04, 2, seed=8),
+                      scfg, speed=2.0)   # 2x real time: >= ~20ms of pacing
+    wall = time.perf_counter() - t0
+    assert paced.digests == fast.digests
+    assert (paced.ingested, paced.dropped) == (fast.ingested, fast.dropped)
+    assert wall >= 0.04 / 2.0 * 0.5      # pacing actually slept
+
+
+def test_oracle_needs_recorded_chunks():
+    feeds = rp.mixed_scene_feeds(H, W, 0.03, 2, seed=3)
+    cfg = make_cfg()
+    report = rp.replay(
+        TimeSurfaceEngine(cfg), feeds,
+        StreamConfig(queue_capacity=1 << 14, deadline_s=0.01,
+                     record_chunks=False),
+    )
+    with pytest.raises(ValueError, match="record_chunks"):
+        rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg))
+
+
+def test_offer_accepts_aer_words_and_tuples():
+    from repro.events import aer
+
+    rt = StreamRuntime(make_engine(), StreamConfig())
+    cam = rt.connect()
+    ev = events(np.random.default_rng(7), 20)
+    assert cam.offer(aer.pack(ev)) == 20            # packed uint64 words
+    assert cam.offer((ev.x, ev.y, ev.t, ev.p)) == 20  # raw arrays
+    rec = rt.step(0.06)
+    rt.flush()
+    assert rec.n_events == 40
+
+
+def test_composed_spec_stream():
+    """The runtime serves composed specs; oracle gate covers every product."""
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          count=rs.count(4))
+    cfg = TSEngineConfig(h=H, w=W, n_slots=2, chunk_capacity=CAP,
+                         backend="interpret", block=(8, 16), specs=(spec,))
+    feeds = rp.mixed_scene_feeds(H, W, 0.04, 2, seed=4)
+    report = rp.replay(
+        TimeSurfaceEngine(cfg), feeds,
+        StreamConfig(queue_capacity=1 << 14, deadline_s=0.01),
+        spec,
+    )
+    rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg), spec)
+
+
+def test_stream_mesh_single_device():
+    """The runtime over a 1-device mesh engine: same bits as unsharded."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = make_cfg()
+    feeds = rp.mixed_scene_feeds(H, W, 0.04, 2, seed=6)
+    scfg = StreamConfig(queue_capacity=1 << 14, deadline_s=0.01)
+    plain = rp.replay(TimeSurfaceEngine(cfg), feeds, scfg)
+    mesh = make_host_mesh(1)
+    sharded = rp.replay(TimeSurfaceEngine(cfg, mesh=mesh),
+                        rp.mixed_scene_feeds(H, W, 0.04, 2, seed=6), scfg)
+    assert plain.digests == sharded.digests
+    rp.check_oracle(sharded, lambda: TimeSurfaceEngine(cfg, mesh=mesh))
+
+
+# the multi-device sweep runs in a subprocess so the main test process
+# stays single-device (same pattern as test_serve_sharded's slow sweep)
+_MESH_SWEEP = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import numpy as np
+from repro.events import replay as rp
+from repro.launch.mesh import make_host_mesh
+from repro.serve.stream import StreamConfig
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 24, 32
+cfg = TSEngineConfig(h=H, w=W, n_slots=4, chunk_capacity=64,
+                     backend='interpret', block=(8, 16))
+scfg = StreamConfig(policy='drop_oldest', queue_capacity=256,
+                    deadline_s=0.01)
+
+def feeds():
+    return rp.mixed_scene_feeds(H, W, 0.05, 4, seed=12, churn=True)
+
+plain = rp.replay(TimeSurfaceEngine(cfg), feeds(), scfg)
+for nd in (2, 4):
+    mesh = make_host_mesh(nd)
+    rep = rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), feeds(), scfg)
+    assert rep.digests == plain.digests, f'{nd}-device digests diverged'
+    assert (rep.ingested, rep.dropped, rep.discarded) == (
+        plain.ingested, plain.dropped, plain.discarded), nd
+    rp.check_oracle(rep, lambda: TimeSurfaceEngine(cfg, mesh=mesh))
+    print(f'mesh {nd}: OK ({rep.n_steps} deadlines)')
+"""
+
+
+@pytest.mark.slow
+def test_stream_mesh_multi_device_sweep():
+    """Pipelined streaming over 2- and 4-device meshes: per-deadline
+    digests, drop accounting, and the synchronous oracle all match the
+    unsharded runtime bitwise (pool-shaped products pad to
+    n_slots_padded == n_slots here, so digests compare directly)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    inherited = os.environ.get("PYTHONPATH")
+    env = dict(os.environ, PYTHONPATH=(
+        src + os.pathsep + inherited if inherited else src))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_MESH_SWEEP)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    assert out.returncode == 0, (
+        f"mesh sweep failed\nSTDOUT:\n{out.stdout}\n"
+        f"STDERR:\n{out.stderr[-3000:]}"
+    )
+    assert "mesh 2: OK" in out.stdout and "mesh 4: OK" in out.stdout
