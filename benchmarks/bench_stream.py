@@ -22,6 +22,16 @@ scenes at their naturally different rates, ~4 Meps offered):
   * ``stream_churn_drop_rate`` — a second replay under overload
     (drop_oldest, small queues) with mid-run attach/detach; its
     ``derived`` is the exact deterministic drop rate.
+  * ``stream_tier_p99_latency_us`` / ``stream_tier_drop_rate`` — the QoS
+    mixed-overload scenario, one row per tier (the 4-tuple row form):
+    high-rate ``telemetry`` + low-rate ``gesture`` sensors offered at
+    well over the step chunk budget, so every deadline is overloaded
+    and priority preemption decides who is served.  The harness
+    *asserts* the QoS contract: the gesture tier's p99 readout latency
+    stays within its SLO budget, telemetry (not gesture) absorbs the
+    drops and deferrals, per-tier counters conserve exactly, and the
+    whole run replays bitwise through the synchronous oracle.  The CI
+    gate regresses the p99 rows *per tier* (``compare.py``).
 
 **Bitwise gates, every run**: the runtime replay's per-deadline products
 are digest-compared against a synchronous oracle replay of the same
@@ -42,7 +52,9 @@ from repro.events import pipeline
 from repro.events import replay as rp
 from repro.events import synthetic as syn
 from repro.serve import spec as rs
-from repro.serve.stream import StreamConfig, StreamRuntime
+from repro.serve.stream import (
+    GESTURE_TIER, TELEMETRY_TIER, StreamConfig, StreamRuntime,
+)
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 H, W = 120, 160
@@ -181,7 +193,106 @@ def churn_rows():
     ]
 
 
+def _tiered_feeds(seed: int = 13):
+    """The QoS mixed-overload workload: 2 high-rate telemetry sensors
+    (driving scenes + heavy noise) and 2 low-rate gesture sensors
+    (sparse glyphs, little noise)."""
+    feeds = []
+    for i in range(2):
+        rng = np.random.default_rng((seed, i))
+        stream = syn.dvs_from_intensity(
+            syn.driving_scene(H, W, rng), H, W, DURATION, rng,
+            noise_hz=NOISE_HZ, fps=500.0,
+        )
+        feeds.append(rp.SensorFeed(stream=stream, name=f"telemetry-{i}",
+                                   qos=TELEMETRY_TIER))
+    for i in range(2):
+        rng = np.random.default_rng((seed, 100 + i))
+        stream = syn.dvs_from_intensity(
+            syn.moving_glyph_scene(H, W, i, rng), H, W, DURATION, rng,
+            noise_hz=0.5, fps=500.0,
+        )
+        # thin 4x: the gesture tier must be genuinely sparse relative
+        # to the chunk budget, or "gesture never drops" stops being a
+        # priority-preemption property and becomes a queue-size race
+        keep = slice(None, None, 4)
+        stream = syn.EventStream(
+            x=stream.x[keep], y=stream.y[keep], t=stream.t[keep],
+            p=stream.p[keep], is_signal=stream.is_signal[keep], h=H, w=W,
+        )
+        feeds.append(rp.SensorFeed(stream=stream, name=f"gesture-{i}",
+                                   qos=GESTURE_TIER))
+    return feeds
+
+
+def qos_rows():
+    """Mixed-tier overload: the step chunk budget is smaller than the
+    steady-state demand, so *every* deadline is overloaded and priority
+    preemption decides service — gesture always fits (sparse), the two
+    telemetry sensors alternate on the leftover budget and their
+    drop_oldest queues absorb the excess.  The QoS contract is asserted,
+    the run is oracle-gated bitwise, and the p99 rows are emitted per
+    tier for the per-tier CI gate."""
+    def scfg():
+        # telemetry queue == one chunk: a deferred telemetry sensor
+        # needs exactly 1 chunk next step, so budget 3 = 2 gesture + 1
+        # telemetry keeps both telemetry sensors in alternating service
+        # instead of starving one forever
+        return StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                            deadline_s=DEADLINE, step_chunk_budget=3,
+                            pipeline=True)
+
+    feeds = _tiered_feeds()
+    # warm the jit cache on a throwaway engine with the same traffic
+    rp.replay(TimeSurfaceEngine(_engine_cfg()), _tiered_feeds(), scfg(),
+              rs.SURFACE_SPEC, arrival_substeps=SUBSTEPS)
+
+    report = rp.replay(TimeSurfaceEngine(_engine_cfg()), feeds, scfg(),
+                       rs.SURFACE_SPEC, arrival_substeps=SUBSTEPS)
+    rp.check_oracle(report, lambda: TimeSurfaceEngine(_engine_cfg()),
+                    rs.SURFACE_SPEC)
+
+    overloaded = sum(
+        1 for kind, e in report.log if kind == "step" and e.overload)
+    assert overloaded > report.n_steps // 2, (
+        f"QoS scenario must actually overload: only {overloaded} of "
+        f"{report.n_steps} steps exceeded the chunk budget"
+    )
+    tiers = report.tiers
+    for tier, row in tiers.items():
+        assert row["offered"] == (
+            row["ingested"] + row["dropped"] + row["refused"]
+            + row["discarded"] + row["deferred"]
+        ), f"per-tier conservation broken for {tier}: {row}"
+    ges, tel = tiers["gesture"], tiers["telemetry"]
+    assert ges["dropped"] == 0, (
+        f"gesture must never drop under priority preemption: {ges}"
+    )
+    assert tel["dropped"] > 0, (
+        f"telemetry must absorb the overload drops: {tel}"
+    )
+    assert tel["deferrals"] > 0, "telemetry must be deferred by the budget"
+    assert tel["ingested"] > 0, (
+        "telemetry must still get alternating service, not starve"
+    )
+    slo_us = ges["slo_p99_us"]
+    assert ges["latency_p99_us"] is not None and slo_us is not None
+    assert ges["latency_p99_us"] <= slo_us, (
+        f"gesture p99 {ges['latency_p99_us']:.0f}us blew its "
+        f"{slo_us:.0f}us SLO budget"
+    )
+    out = []
+    for tier in sorted(tiers):
+        row = tiers[tier]
+        out.append(("stream_tier_p99_latency_us",
+                    row["latency_p99_us"], None, tier))
+        drop_rate = row["dropped"] / row["offered"] if row["offered"] else 0.0
+        out.append(("stream_tier_drop_rate", None, drop_rate, tier))
+    return out
+
+
 def rows():
     out = throughput_rows()
     out.extend(churn_rows())
+    out.extend(qos_rows())
     return out

@@ -1,8 +1,9 @@
 """Benchmark-artifact regression gate: current ``BENCH_*.json`` vs the
-committed baselines.
+committed baselines and/or the rolling trend history.
 
     python benchmarks/compare.py <current_dir> <baseline_dir> \
-        [--threshold 0.25]
+        [--threshold 0.25] [--strict] [--trend TREND.json] \
+        [--summary SUMMARY.md]
 
 Gated metrics (the serving SLOs, not every row — micro-rows are too
 noisy on shared runners to gate individually):
@@ -12,23 +13,45 @@ noisy on shared runners to gate individually):
   * streaming-runtime events/sec (``stream_runtime_us``.derived, higher)
   * p99 readout latency          (``stream_p99_latency_us``.us_per_call,
     lower is better)
+  * **per-tier** p99 readout latency under the QoS mixed-overload
+    scenario (``stream_tier_p99_latency_us``.us_per_call, lower) — one
+    gate per priority tier, keyed ``name[tier]``, so a regression that
+    only hurts the gesture tier cannot hide behind a healthy telemetry
+    aggregate (or vice versa).
 
-A metric regresses when it is more than ``--threshold`` (default 25%)
-worse than its baseline; any regression exits 1 with a table of every
-gated row.  Rows/files missing from the *baseline* are skipped with a
-warning (that's the refresh path: regenerate via the
-``workflow_dispatch`` CI job, commit the artifact); rows missing from
-the *current* run fail — the benchmark that should have produced them
-did not run.
+Rows are keyed by ``(name, tier)`` — ``tier`` is null for global rows —
+and a metric regresses when it is more than ``--threshold`` (default
+25%) worse than its reference; any regression exits 1 with a table of
+every gated row.
 
-These are absolute wall-clock gates: baselines are only meaningful for
-the runner class that produced them (the ``git_sha`` in each artifact
-says which commit; regenerate on CI hardware via ``workflow_dispatch``
-before trusting the gate on a new runner class), and the p99 latency
-row is the noisiest — ``bench_stream`` samples ~21 deadlines per run,
-so one severe scheduler stall on a loaded machine can trip it.  A red
-gate on an otherwise-clean PR means: rerun once, then suspect the
-runner before the code.
+**Reference selection.**  By default the reference is the committed
+baseline row.  With ``--trend TREND.json`` (the rolling history
+``benchmarks/trend.py`` maintains across CI runs) the reference becomes
+the **median of the last 5 trend runs** holding that key — a single
+noisy baseline commit can no longer fire false alarms, and a slow drift
+across commits still trips the gate.  Keys with fewer than 2 trend runs
+fall back to the committed baseline (the bootstrap path for brand-new
+metrics).
+
+**Missing-key handling.**  Rows missing from the *current* run always
+fail — the benchmark that should have produced them did not run.  Rows
+or files missing from the *baseline* are skipped with a warning by
+default (the refresh path: regenerate via the ``workflow_dispatch`` CI
+job, commit the artifact) — but with ``--strict`` every missing baseline
+key is listed exactly and the gate exits nonzero, so a misnamed baseline
+file fails the build instead of silently passing it.  CI's compare step
+runs ``--strict``; the ``refresh-bench-baselines`` job stays non-strict.
+
+``--summary PATH`` appends the comparison table as GitHub-flavored
+markdown (point it at ``$GITHUB_STEP_SUMMARY`` to make regressions
+readable from the Actions UI without downloading artifacts).
+
+These are absolute wall-clock gates: references are only meaningful for
+the runner class that produced them, and p99 latency rows are the
+noisiest — ``bench_stream`` samples ~21 deadlines per run, so one severe
+scheduler stall on a loaded machine can trip them.  A red gate on an
+otherwise-clean PR means: rerun once, then suspect the runner before the
+code (the trend median makes that failure mode rare but not impossible).
 """
 from __future__ import annotations
 
@@ -37,7 +60,7 @@ import json
 import os
 import re
 import sys
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 #: (artifact file, row-name regex, field, direction)
 GATES: List[Tuple[str, str, str, str]] = [
@@ -46,74 +69,201 @@ GATES: List[Tuple[str, str, str, str]] = [
     ("BENCH_stream.json", r"^stream_runtime_us$", "derived", "higher"),
     ("BENCH_stream.json", r"^stream_p99_latency_us$", "us_per_call",
      "lower"),
+    ("BENCH_stream.json", r"^stream_tier_p99_latency_us$", "us_per_call",
+     "lower"),
 ]
 
+#: how many trailing trend runs the median reference uses
+TREND_WINDOW = 5
+#: minimum trend runs holding a key before the median replaces the
+#: committed baseline (below this, one run would BE the median)
+TREND_MIN_RUNS = 2
 
-def load_rows(path: str) -> Optional[dict]:
+RowKey = Tuple[str, Optional[str]]
+
+
+def key_str(key: RowKey) -> str:
+    name, tier = key
+    return name if tier is None else f"{name}[{tier}]"
+
+
+def load_rows(path: str) -> Optional[Dict[RowKey, dict]]:
+    """Rows of one artifact keyed by (name, tier) — tier None for
+    global rows (and for pre-QoS artifacts that predate the field)."""
     if not os.path.exists(path):
         return None
     with open(path) as f:
         data = json.load(f)
-    return {r["name"]: r for r in data.get("rows", [])}
+    return {
+        (r["name"], r.get("tier")): r for r in data.get("rows", [])
+    }
 
 
-def compare(current_dir: str, baseline_dir: str,
-            threshold: float) -> int:
-    regressions = []
-    print(f"{'metric':<42s} {'baseline':>12s} {'current':>12s} "
-          f"{'ratio':>8s}  verdict")
+def load_trend(path: Optional[str]) -> Optional[dict]:
+    if path is None:
+        return None
+    if not os.path.exists(path):
+        print(f"# trend file {path} does not exist yet; gating against "
+              "committed baselines only (first run bootstraps it)",
+              file=sys.stderr)
+        return {"runs": []}
+    with open(path) as f:
+        return json.load(f)
+
+
+def trend_reference(trend: dict, fname: str, key: RowKey,
+                    field: str) -> Optional[float]:
+    """Median of the last ``TREND_WINDOW`` runs' values for one gated
+    key, or None when fewer than ``TREND_MIN_RUNS`` runs hold it."""
+    name, tier = key
+    values = []
+    for run in trend.get("runs", []):
+        for r in run.get("rows", {}).get(fname, []):
+            if r["name"] == name and r.get("tier") == tier:
+                v = r.get(field)
+                if v is not None:
+                    values.append(v)
+    values = values[-TREND_WINDOW:]
+    if len(values) < TREND_MIN_RUNS:
+        return None
+    values = sorted(values)
+    mid = len(values) // 2
+    if len(values) % 2:
+        return values[mid]
+    return (values[mid - 1] + values[mid]) / 2.0
+
+
+class Report:
+    """Collects the comparison table once, renders text + markdown."""
+
+    def __init__(self) -> None:
+        self.lines: List[Tuple[str, str, str, str, str, str]] = []
+
+    def add(self, key: str, ref: str, cur: str, ratio: str,
+            verdict: str, source: str) -> None:
+        self.lines.append((key, ref, cur, ratio, verdict, source))
+
+    def print_text(self) -> None:
+        print(f"{'metric':<46s} {'reference':>12s} {'current':>12s} "
+              f"{'ratio':>8s}  verdict")
+        for key, ref, cur, ratio, verdict, source in self.lines:
+            print(f"{key:<46s} {ref:>12s} {cur:>12s} {ratio:>8s}  "
+                  f"{verdict} ({source})")
+
+    def write_markdown(self, path: str, threshold: float,
+                       regressions: List[Tuple[str, str]]) -> None:
+        with open(path, "a") as f:
+            f.write("## Benchmark regression gate\n\n")
+            f.write("| metric | reference | current | ratio | verdict |\n")
+            f.write("|---|---:|---:|---:|---|\n")
+            for key, ref, cur, ratio, verdict, source in self.lines:
+                mark = "❌" if verdict.startswith(("REGRESSION", "MISSING",
+                                                  "NULL")) else "✅"
+                f.write(f"| `{key}` | {ref} | {cur} | {ratio} | "
+                        f"{mark} {verdict} ({source}) |\n")
+            if regressions:
+                f.write(f"\n**{len(regressions)} regression(s) beyond "
+                        f"{threshold:.0%}:**\n\n")
+                for name, why in regressions:
+                    f.write(f"- `{name}`: {why}\n")
+            else:
+                f.write("\nall gated metrics within threshold\n")
+
+
+def compare(current_dir: str, baseline_dir: str, threshold: float,
+            strict: bool = False, trend: Optional[dict] = None,
+            summary_path: Optional[str] = None) -> int:
+    regressions: List[Tuple[str, str]] = []
+    missing_baseline: List[str] = []
+    report = Report()
     for fname, pattern, field, direction in GATES:
         base = load_rows(os.path.join(baseline_dir, fname))
         cur = load_rows(os.path.join(current_dir, fname))
         if base is None:
-            print(f"# no baseline {fname}; skipping its gates "
-                  "(refresh via the workflow_dispatch job and commit it)",
-                  file=sys.stderr)
+            msg = (f"baseline artifact {fname} missing "
+                   "(misnamed file, or refresh via the workflow_dispatch "
+                   "job and commit it)")
+            print(f"# {msg}", file=sys.stderr)
+            missing_baseline.append(fname)
             continue
         if cur is None:
             print(f"# current run produced no {fname}", file=sys.stderr)
             regressions.append((fname, "artifact missing"))
             continue
         rx = re.compile(pattern)
-        names = sorted(n for n in base if rx.match(n))
-        if not names:
+        base_keys = sorted(
+            (k for k in base if rx.match(k[0])),
+            key=lambda k: (k[0], k[1] or ""),
+        )
+        # gated keys present in the current run but absent from the
+        # baseline (e.g. a brand-new tier) — visible, and strict-fatal
+        new_keys = sorted(
+            (k for k in cur if rx.match(k[0]) and k not in base),
+            key=lambda k: (k[0], k[1] or ""),
+        )
+        for key in new_keys:
+            missing_baseline.append(f"{fname}: {key_str(key)}")
+            print(f"# baseline {fname} lacks gated row {key_str(key)}",
+                  file=sys.stderr)
+        if not base_keys and not new_keys:
             print(f"# baseline {fname} has no rows matching {pattern}",
                   file=sys.stderr)
-        for name in names:
-            if name not in cur:
-                regressions.append((name, "row missing from current run"))
-                print(f"{name:<42s} {'':>12s} {'MISSING':>12s}")
+        for key in base_keys:
+            ks = key_str(key)
+            if key not in cur:
+                regressions.append((ks, "row missing from current run"))
+                report.add(ks, "", "MISSING", "", "MISSING", "current")
                 continue
-            b = base[name][field]
-            c = cur[name][field]
+            c = cur[key][field]
             if c is None:
                 # a gated metric that stopped being measured is a
                 # failure, not a skip — same rule as a missing row
-                regressions.append((name, f"current {field} is null"))
-                print(f"{name:<42s} {'':>12s} {'NULL':>12s}")
+                regressions.append((ks, f"current {field} is null"))
+                report.add(ks, "", "NULL", "", "NULL", "current")
                 continue
-            if b is None or b == 0:
-                print(f"# baseline {name}.{field} is null/zero; skipping "
-                      "(refresh the baselines)", file=sys.stderr)
+            source = "baseline"
+            ref = None
+            if trend is not None:
+                ref = trend_reference(trend, fname, key, field)
+                if ref is not None:
+                    source = f"trend median, last {TREND_WINDOW}"
+            if ref is None:
+                ref = base[key][field]
+            if ref is None or ref == 0:
+                msg = f"{fname}: {ks}.{field} is null/zero"
+                print(f"# {msg}; refresh the baselines", file=sys.stderr)
+                missing_baseline.append(msg)
                 continue
-            ratio = c / b
+            ratio = c / ref
             if direction == "higher":
                 bad = ratio < 1.0 - threshold
             else:
                 bad = ratio > 1.0 + threshold
             verdict = "REGRESSION" if bad else "ok"
-            print(f"{name:<42s} {b:12.3f} {c:12.3f} {ratio:8.3f}  "
-                  f"{verdict} ({field}, {direction} is better)")
+            report.add(ks, f"{ref:.3f}", f"{c:.3f}", f"{ratio:.3f}",
+                       verdict, f"{field}, {direction} is better, {source}")
             if bad:
-                regressions.append((name, f"{field} {b:.3f} -> {c:.3f} "
-                                          f"({ratio:.2f}x, {direction} is "
-                                          "better)"))
+                regressions.append(
+                    (ks, f"{field} {ref:.3f} -> {c:.3f} ({ratio:.2f}x, "
+                         f"{direction} is better, vs {source})"))
+
+    report.print_text()
+    if strict and missing_baseline:
+        regressions.extend(
+            (m, "missing from baseline (--strict)")
+            for m in missing_baseline
+        )
+    if summary_path:
+        report.write_markdown(summary_path, threshold, regressions)
     if regressions:
         print(f"\n{len(regressions)} regression(s) beyond "
               f"{threshold:.0%}:", file=sys.stderr)
         for name, why in regressions:
             print(f"  {name}: {why}", file=sys.stderr)
         return 1
+    if missing_baseline:
+        print(f"\n# {len(missing_baseline)} baseline key(s) missing "
+              "(non-strict: skipped)", file=sys.stderr)
     print("\nall gated metrics within threshold")
     return 0
 
@@ -126,8 +276,23 @@ def main() -> None:
                     help="directory with the committed baselines")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed relative regression (default 0.25)")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing baseline files/keys fail the gate "
+                         "(listed exactly) instead of skipping")
+    ap.add_argument("--trend", default=None, metavar="TREND.json",
+                    help="rolling trend history (benchmarks/trend.py); "
+                         "gate against the median of the last "
+                         f"{TREND_WINDOW} runs instead of the committed "
+                         "baseline where enough history exists")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append a markdown report (use "
+                         "$GITHUB_STEP_SUMMARY in CI)")
     args = ap.parse_args()
-    sys.exit(compare(args.current_dir, args.baseline_dir, args.threshold))
+    sys.exit(compare(
+        args.current_dir, args.baseline_dir, args.threshold,
+        strict=args.strict, trend=load_trend(args.trend),
+        summary_path=args.summary,
+    ))
 
 
 if __name__ == "__main__":

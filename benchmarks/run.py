@@ -1,6 +1,8 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived,tier`` CSV rows (``tier`` is empty for
+global rows; QoS benchmarks emit one row per priority tier and the CI
+gate regresses them per tier):
   * bench_edram    — Table I / Fig. 2d / Fig. 5 / Fig. 10b (cell physics)
   * bench_hw       — Fig. 7 (3D vs 2D) + Fig. 8 (ISC vs SRAM) ratios
   * bench_ts       — Sec. III core-op throughput
@@ -54,6 +56,15 @@ def git_sha() -> str:
         return "unknown"
 
 
+def norm_row(row):
+    """Rows are (name, us, derived) or (name, us, derived, tier) — the
+    4th element tags a per-tier QoS row (None = global)."""
+    if len(row) == 3:
+        return (*row, None)
+    name, us, derived, tier = row
+    return (name, us, derived, tier)
+
+
 def write_artifact(json_dir: str, name: str, rows, wall_s: float,
                    sha: str, failed: bool) -> str:
     """One ``BENCH_<module>.json`` per module: the machine-readable twin
@@ -66,8 +77,9 @@ def write_artifact(json_dir: str, name: str, rows, wall_s: float,
         "wall_s": round(wall_s, 3),
         "failed": failed,
         "rows": [
-            {"name": rn, "us_per_call": us, "derived": derived}
-            for rn, us, derived in rows
+            {"name": rn, "us_per_call": us, "derived": derived,
+             "tier": tier}
+            for rn, us, derived, tier in rows
         ],
     }
     with open(path, "w") as f:
@@ -98,7 +110,7 @@ def main() -> None:
         )
 
     sha = git_sha()
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,tier")
     failed = []
     for name in which:
         t0 = time.time()
@@ -106,13 +118,14 @@ def main() -> None:
         ok = True
         try:
             mod = __import__(f"benchmarks.bench_{name}", fromlist=["rows"])
-            for row_name, us, derived in mod.rows():
-                rows.append((row_name, us, derived))
+            for row in mod.rows():
+                row_name, us, derived, tier = norm_row(row)
+                rows.append((row_name, us, derived, tier))
                 us_s = f"{us:.1f}" if us is not None else ""
                 dv = f"{derived:.4f}" if derived is not None else ""
-                print(f"{row_name},{us_s},{dv}", flush=True)
+                print(f"{row_name},{us_s},{dv},{tier or ''}", flush=True)
         except Exception:  # noqa: BLE001 — keep the harness running
-            print(f"bench_{name},ERROR,", flush=True)
+            print(f"bench_{name},ERROR,,", flush=True)
             traceback.print_exc(file=sys.stderr)
             failed.append(name)
             ok = False

@@ -1,0 +1,146 @@
+"""Rolling benchmark trend history: per-commit ``BENCH_*.json`` rows
+appended to one JSON artifact that survives across CI runs.
+
+    python benchmarks/trend.py append <bench_dir> <trend_file>
+    python benchmarks/trend.py show   <trend_file> [--key NAME[TIER]]
+
+``append`` folds every ``BENCH_*.json`` in ``bench_dir`` into
+``trend_file`` as one *run* entry keyed by ``git_sha`` + date.  A re-run
+of the same commit replaces its previous entry (CI retries must not
+double-count), and the history is capped at ``MAX_RUNS`` entries —
+oldest dropped — so the artifact stays cache-sized forever.
+
+The file is the input to ``compare.py --trend``: the gate references
+the median of the last 5 runs holding each gated key instead of a
+single committed baseline, which kills baseline-staleness false alarms
+(one anomalous baseline commit no longer poisons every later compare)
+while still catching slow drift.  In CI the artifact rides
+``actions/cache`` (key ``bench-trend-*``): each run restores the most
+recent cache, compares against it, appends itself, and saves — an
+append-only ledger with at-most-one-run loss on cache eviction.
+
+Format (one JSON object)::
+
+    {"version": 1,
+     "runs": [
+       {"git_sha": "...", "date": "2026-08-07T12:00:00Z",
+        "rows": {"BENCH_stream.json": [{"name": ..., "us_per_call": ...,
+                                        "derived": ..., "tier": ...}]}},
+       ...]}
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+from typing import Optional
+
+MAX_RUNS = 50
+
+
+def load(path: str) -> dict:
+    if not os.path.exists(path):
+        return {"version": 1, "runs": []}
+    with open(path) as f:
+        data = json.load(f)
+    data.setdefault("version", 1)
+    data.setdefault("runs", [])
+    return data
+
+
+def append_run(bench_dir: str, trend_path: str,
+               now: Optional[str] = None) -> dict:
+    """Fold one benchmark run (a directory of BENCH_*.json) into the
+    trend file; returns the run entry that was appended."""
+    artifacts = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if not artifacts:
+        raise SystemExit(f"no BENCH_*.json artifacts in {bench_dir}")
+    rows = {}
+    sha = "unknown"
+    for path in artifacts:
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("failed"):
+            # a failed module's rows are partial; recording them would
+            # poison the median for every later compare
+            print(f"# skipping failed module artifact {path}",
+                  file=sys.stderr)
+            continue
+        rows[os.path.basename(path)] = [
+            {"name": r["name"], "us_per_call": r.get("us_per_call"),
+             "derived": r.get("derived"), "tier": r.get("tier")}
+            for r in data.get("rows", [])
+        ]
+        if data.get("git_sha") and data["git_sha"] != "unknown":
+            sha = data["git_sha"]
+    run = {
+        "git_sha": sha,
+        "date": now or time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "rows": rows,
+    }
+    trend = load(trend_path)
+    # a re-run of the same commit replaces its previous entry
+    trend["runs"] = [r for r in trend["runs"] if r["git_sha"] != sha]
+    trend["runs"].append(run)
+    trend["runs"] = trend["runs"][-MAX_RUNS:]
+    parent = os.path.dirname(trend_path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = trend_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(trend, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, trend_path)
+    print(f"# trend: {len(trend['runs'])} run(s) in {trend_path} "
+          f"(appended {sha[:12]})", file=sys.stderr)
+    return run
+
+
+def show(trend_path: str, key: Optional[str] = None) -> None:
+    """Print the history, one line per run (optionally a single gated
+    key's value series — name or name[tier])."""
+    trend = load(trend_path)
+    want_name = want_tier = None
+    if key:
+        if key.endswith("]") and "[" in key:
+            want_name, want_tier = key[:-1].split("[", 1)
+        else:
+            want_name = key
+    for run in trend["runs"]:
+        if want_name is None:
+            n = sum(len(v) for v in run["rows"].values())
+            print(f"{run['date']}  {run['git_sha'][:12]}  {n} rows")
+            continue
+        for rows in run["rows"].values():
+            for r in rows:
+                if (r["name"] == want_name
+                        and (want_tier is None or r.get("tier") == want_tier)):
+                    tier = f"[{r['tier']}]" if r.get("tier") else ""
+                    print(f"{run['date']}  {run['git_sha'][:12]}  "
+                          f"{r['name']}{tier}  us={r.get('us_per_call')}  "
+                          f"derived={r.get('derived')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_a = sub.add_parser("append", help="fold one run into the history")
+    ap_a.add_argument("bench_dir", help="directory with BENCH_*.json")
+    ap_a.add_argument("trend_file", help="rolling trend JSON (created if "
+                                         "absent)")
+    ap_s = sub.add_parser("show", help="print the history")
+    ap_s.add_argument("trend_file")
+    ap_s.add_argument("--key", default=None,
+                      help="one gated key: NAME or NAME[TIER]")
+    args = ap.parse_args()
+    if args.cmd == "append":
+        append_run(args.bench_dir, args.trend_file)
+    else:
+        show(args.trend_file, args.key)
+
+
+if __name__ == "__main__":
+    main()

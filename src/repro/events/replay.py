@@ -34,7 +34,8 @@ import numpy as np
 from repro.events import synthetic as syn
 from repro.serve import spec as spec_mod
 from repro.serve.stream import (
-    StepRecord, StreamConfig, StreamRuntime, digest_products,
+    DEFAULT_QOS, GESTURE_TIER, TELEMETRY_TIER, QoSClass, StepRecord,
+    StreamConfig, StreamRuntime, digest_step,
 )
 
 __all__ = [
@@ -50,12 +51,19 @@ class SensorFeed:
     ``attach_t``/``detach_t`` are virtual times; ``detach_t=None`` keeps
     the sensor connected to the end.  Events outside the connection
     window are never offered (the sensor isn't there to produce them).
+    ``qos`` is the QoS class the sensor connects under; ``migrate``
+    optionally re-tiers it mid-run at a virtual time —
+    ``(t, new_qos)`` applies ``runtime.set_tier`` at the first arrival
+    granule past ``t`` (the churn+tier-migration schedule the oracle
+    gate exercises).
     """
 
     stream: syn.EventStream
     attach_t: float = 0.0
     detach_t: Optional[float] = None
     name: str = ""
+    qos: QoSClass = DEFAULT_QOS
+    migrate: Optional[tuple] = None   # (t, QoSClass)
 
 
 @dataclasses.dataclass
@@ -81,6 +89,10 @@ class ReplayReport:
     latency_p50_us: Optional[float]
     latency_p95_us: Optional[float]
     latency_p99_us: Optional[float]
+    # per-tier accounting + latency percentiles (QoS; exact counters,
+    # wall-clock latencies) — see StreamRuntime.tier_counters /
+    # tier_latencies_us for the key meanings
+    tiers: Dict[str, dict] = dataclasses.field(default_factory=dict)
     # the bitwise trail: per-step product digests + the full action log
     digests: List[str] = dataclasses.field(default_factory=list, repr=False)
     log: list = dataclasses.field(default_factory=list, repr=False)
@@ -92,15 +104,26 @@ class ReplayReport:
                          (95, self.latency_p95_us),
                          (99, self.latency_p99_us))
         )
-        return (
+        lines = [
             f"replay: {self.n_steps} deadlines x {self.deadline_s * 1e3:.0f}ms"
-            f" over {self.n_sensors} sensors ({self.policy})\n"
+            f" over {self.n_sensors} sensors ({self.policy})",
             f"  events: offered {self.offered}  ingested {self.ingested}"
             f"  dropped {self.dropped} ({self.drop_rate:.1%})"
-            f"  discarded {self.discarded}  backlog {self.unoffered}\n"
+            f"  discarded {self.discarded}  backlog {self.unoffered}",
             f"  throughput {self.events_per_sec / 1e6:.3f} Meps"
-            f"  readout latency {lat}"
-        )
+            f"  readout latency {lat}",
+        ]
+        for tier, row in sorted(self.tiers.items()):
+            p99 = row.get("latency_p99_us")
+            p99s = f"{p99 / 1e3:.2f}ms" if p99 is not None else "n/a"
+            slo = row.get("slo_p99_us")
+            slos = f"/{slo / 1e3:.0f}ms SLO" if slo is not None else ""
+            lines.append(
+                f"  tier {tier}: offered {row['offered']}"
+                f"  ingested {row['ingested']}  dropped {row['dropped']}"
+                f"  deferred {row['deferred']}  p99 {p99s}{slos}"
+            )
+        return "\n".join(lines)
 
 
 def replay(
@@ -135,7 +158,8 @@ def replay(
     n_steps = int(np.floor(t_end / d)) + 1
 
     state = [
-        {"ptr": 0, "sensor": None, "done": False} for _ in feeds
+        {"ptr": 0, "sensor": None, "done": False, "migrated": False}
+        for _ in feeds
     ]
 
     def churn(now: float) -> None:
@@ -146,7 +170,11 @@ def replay(
                 st["sensor"], st["done"] = None, True
             if (st["sensor"] is None and not st["done"]
                     and f.attach_t <= now):
-                st["sensor"] = runtime.connect()
+                st["sensor"] = runtime.connect(f.qos)
+            if (st["sensor"] is not None and not st["migrated"]
+                    and f.migrate is not None and f.migrate[0] <= now):
+                runtime.set_tier(st["sensor"], f.migrate[1])
+                st["migrated"] = True
 
     def offer_until(now: float) -> None:
         for f, st in zip(feeds, state):
@@ -187,6 +215,11 @@ def replay(
     # the block policy's re-offers of refused events
     offered = sum(s["ptr"] for s in state)
     digests = [e.digest for kind, e in runtime.log if kind == "step"]
+    tiers: Dict[str, dict] = {
+        tier: dict(row) for tier, row in runtime.tier_counters().items()
+    }
+    for tier, lat_row in runtime.tier_latencies_us().items():
+        tiers.setdefault(tier, {}).update(lat_row)
     return ReplayReport(
         n_steps=runtime.n_steps, n_sensors=len(feeds), policy=cfg.policy,
         deadline_s=d, wall_s=wall,
@@ -199,7 +232,7 @@ def replay(
         latency_p50_us=st["latency_p50_us"],
         latency_p95_us=st["latency_p95_us"],
         latency_p99_us=st["latency_p99_us"],
-        digests=digests, log=list(runtime.log),
+        tiers=tiers, digests=digests, log=list(runtime.log),
     )
 
 
@@ -223,12 +256,16 @@ def oracle_digests(
     out: List[str] = []
     for kind, entry in log:
         if kind == "attach":
-            s = engine.attach()
-            assert s.slot == entry, (
+            # entry is (slot, QoSClass); pre-QoS logs recorded bare slots
+            slot, qos = entry if isinstance(entry, tuple) else (entry, None)
+            s = engine.attach(qos=qos)
+            assert s.slot == slot, (
                 f"oracle slot assignment diverged: got {s.slot}, "
-                f"log says {entry}"
+                f"log says {slot}"
             )
-            sessions[entry] = s
+            sessions[slot] = s
+        elif kind == "set_tier":
+            pass   # scheduling metadata: changes *when* work happens, not what
         elif kind == "detach":
             sessions.pop(entry).detach()
         else:
@@ -247,9 +284,12 @@ def oracle_digests(
                     )
                     items.append((slot, pipeline.to_event_batch(stream, cap)))
                 engine.push(items)
-            products = engine.read(spec, rec.t_read)
-            jax.block_until_ready(products)
-            out.append(digest_products(products))
+            # read the specs the step recorded (QoS steps may serve
+            # several); pre-QoS logs recorded none -> the caller's spec
+            specs = rec.specs or (spec,)
+            products_list = [engine.read(sp, rec.t_read) for sp in specs]
+            jax.block_until_ready(products_list)
+            out.append(digest_step(products_list))
     return out
 
 
@@ -290,12 +330,19 @@ def mixed_scene_feeds(
     *,
     noise_hz: float = 5.0,
     churn: bool = False,
+    tiered: bool = False,
 ) -> List[SensorFeed]:
     """Mixed-rate synthetic traffic: the three scene families at their
     naturally different event rates (driving ≫ hotel_bar > glyph), one
     per sensor round-robin.  With ``churn=True`` every third sensor
     connects late and every fourth disconnects early — the mid-run
-    attach/detach pattern the replay harness exists to exercise.
+    attach/detach pattern the replay harness exists to exercise.  With
+    ``tiered=True`` the high-rate scenes (driving, hotel_bar) connect
+    as ``telemetry`` and the sparse glyph sensors as ``gesture`` — the
+    paper's canonical priority split — and, when churn is also on,
+    every sensor with ``i % 5 == 1`` migrates to the *other* tier at
+    mid-run (the churn+tier-migration schedule the oracle digest gate
+    covers).
     """
     feeds: List[SensorFeed] = []
     for i in range(n_sensors):
@@ -314,6 +361,15 @@ def mixed_scene_feeds(
         detach_t = duration * 0.75 if churn and i % 4 == 3 else None
         if attach_t:
             stream = stream.window(attach_t, np.inf)
+        qos = DEFAULT_QOS
+        migrate = None
+        if tiered:
+            qos = GESTURE_TIER if kind == "glyph" else TELEMETRY_TIER
+            if churn and i % 5 == 1:
+                other = (TELEMETRY_TIER if qos is GESTURE_TIER
+                         else GESTURE_TIER)
+                migrate = (duration * 0.5, other)
         feeds.append(SensorFeed(stream=stream, attach_t=attach_t,
-                                detach_t=detach_t, name=f"{kind}-{i}"))
+                                detach_t=detach_t, name=f"{kind}-{i}",
+                                qos=qos, migrate=migrate))
     return feeds

@@ -179,18 +179,45 @@ def run_stream(args) -> None:
                          chunk_capacity=args.chunk, mode=args.mode,
                          backend=args.backend)
     scfg = StreamConfig(policy=args.policy, queue_capacity=args.queue,
-                        deadline_s=args.deadline)
+                        deadline_s=args.deadline,
+                        step_chunk_budget=args.budget or None)
     feeds = rp.mixed_scene_feeds(h, w, args.duration, args.sensors,
-                                 seed=args.seed, churn=args.churn)
+                                 seed=args.seed, churn=args.churn,
+                                 tiered=args.tiers)
     for i, f in enumerate(feeds):
         detach = f"{f.detach_t * 1e3:.0f}ms" if f.detach_t else "end"
+        tier = f" [{f.qos.tier} p{f.qos.priority}]" if args.tiers else ""
+        mig = (f" ->{f.migrate[1].tier}@{f.migrate[0] * 1e3:.0f}ms"
+               if f.migrate else "")
         print(f"feed {i}: {f.name:>12s} {f.stream.n:7d} events, "
-              f"attach {f.attach_t * 1e3:.0f}ms -> {detach}")
+              f"attach {f.attach_t * 1e3:.0f}ms -> {detach}{tier}{mig}")
 
+    if args.speed == 0:
+        # warm the jit cache on a throwaway engine with the same traffic
+        # so the latency percentiles measure steady state, not the
+        # first-deadline compiles (paced runs skip it: they want the
+        # honest cold-start timeline)
+        rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), feeds, scfg,
+                  rs.SURFACE_SPEC, arrival_substeps=args.substeps)
     report = rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), feeds, scfg,
                        rs.SURFACE_SPEC, speed=args.speed,
                        arrival_substeps=args.substeps)
     print(report.summary())
+    if args.tiers:
+        # the QoS table README quotes: one row per tier, SLO verdict last
+        print(f"{'tier':>10s} {'offered':>9s} {'ingested':>9s} "
+              f"{'dropped':>9s} {'deferred':>9s} {'p99':>10s} "
+              f"{'SLO':>8s}  verdict")
+        for tier, row in sorted(report.tiers.items()):
+            p99 = row.get("latency_p99_us")
+            slo = row.get("slo_p99_us")
+            p99s = f"{p99 / 1e3:.2f}ms" if p99 is not None else "n/a"
+            slos = f"{slo / 1e3:.0f}ms" if slo is not None else "none"
+            ok = (p99 is not None and slo is not None and p99 <= slo)
+            verdict = "within SLO" if ok else "CHECK"
+            print(f"{tier:>10s} {row['offered']:9d} {row['ingested']:9d} "
+                  f"{row['dropped']:9d} {row['deferred']:9d} "
+                  f"{p99s:>10s} {slos:>8s}  {verdict}")
     if not args.no_oracle:
         n = rp.check_oracle(
             report, lambda: TimeSurfaceEngine(cfg, mesh=mesh),
@@ -246,6 +273,15 @@ def main() -> None:
                     help="arrival granules per deadline")
     st.add_argument("--churn", action="store_true",
                     help="mid-run sensor attach/detach")
+    st.add_argument("--tiers", action="store_true",
+                    help="QoS demo: gesture/telemetry priority tiers "
+                         "(glyph feeds connect as gesture, the rest as "
+                         "telemetry; with --churn some migrate mid-run); "
+                         "prints the per-tier SLO table")
+    st.add_argument("--budget", type=int, default=0, metavar="N",
+                    help="step chunk budget: >0 caps engine chunks per "
+                         "deadline so overload triggers priority "
+                         "preemption (0 = unlimited)")
     st.add_argument("--chunk", type=int, default=4096)
     st.add_argument("--mode", choices=("edram", "ideal"), default="edram")
     st.add_argument("--backend", choices=("pallas", "interpret", "ref"),

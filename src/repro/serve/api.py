@@ -36,10 +36,11 @@ class SensorSession:
     session's slot may already belong to a new sensor.
     """
 
-    def __init__(self, engine, slot: int):
+    def __init__(self, engine, slot: int, qos=None):
         self._engine = engine
         self._slot = slot
         self._alive = True
+        self.qos = qos   # optional serve.stream.QoSClass tag
 
     # -- lifecycle -----------------------------------------------------------
     @property

@@ -11,12 +11,42 @@ Three layers, all deterministic given the event timestamps::
     sensor.offer(events)          bounded ingress queue, overload policy
           |                       (the software analogue of finite analog
           v                        storage: MOMCAP charge, LL retention)
-    runtime.step(t_deadline)      coalesce queues -> engine-shaped chunks
-          |                       (cap by chunk_capacity AND by deadline)
-          v
+    runtime.step(t_deadline)      EDF-schedule ready sensors -> coalesce
+          |                       their queues into engine-shaped chunks,
+          v                       grouped per tier into shared dispatches
     push (async) + read (async)   pipelined dispatch: the next step's
     sync previous read            host work overlaps the previous read's
                                   device compute — ONE host sync/deadline
+
+**QoS classes** (``QoSClass``) — every sensor carries one: a named
+*tier*, a *priority* (lower = more important), its own readout
+*period* (``period_s``; ``None`` inherits the runtime deadline), a p99
+readout-latency SLO budget (``slo_p99_s``), a declared event rate for
+admission control (``rate_hint``), and optionally its own
+``ReadoutSpec``.  The runtime keeps one *deadline stream* per sensor:
+deadlines at multiples of its period.  ``step(t)`` schedules the
+sensors whose next deadline has arrived in **EDF order** (earliest
+deadline first; ties break by priority, then slot) and coalesces
+same-tier chunks into shared engine dispatches so the fused
+scatter+spec-read path stays batched.
+
+**Overload + preemption** — with ``StreamConfig.step_chunk_budget`` set,
+a step dispatches at most that many engine chunks.  When the ready work
+exceeds the budget the step is *overloaded*: scheduling switches from
+EDF to priority order (a ``gesture`` tier preempts ``telemetry``), and
+sensors that do not fit are **deferred** — their deadline stays put (so
+they lead the next step's EDF order), their queued events keep aging
+under the overload policy (telemetry absorbs the drops), and the
+deferral is counted per tier.
+
+**Admission control** — with ``StreamConfig.capacity_eps`` set (the
+engine's declared drain capacity, events per virtual second),
+``connect(qos)`` refuses a session whose declared rate would break the
+already-admitted tiers' budgets: the demand of each live sensor is
+``max(rate_hint, observed drain-rate EWMA)`` — observed drain rates
+catch under-declared producers — and admission requires
+``demand + new rate_hint <= capacity_eps`` (``AdmissionError``
+otherwise).
 
 **Overload policy** (``StreamConfig.policy``) — what happens when a
 sensor's queue is full; every path keeps exact drop counters:
@@ -28,35 +58,59 @@ sensor's queue is full; every path keeps exact drop counters:
                         DVS filters); ``dropped`` counts evictions.
   * ``"drop_newest"`` — overflow is discarded on arrival.
 
-**Coalescing** is rate-adaptive with no tuning: at each deadline the
-whole queue drains into ceil(n / chunk_capacity) chunks.  At high rates
-chunks run full (dispatch overhead amortized); at low rates a partial
-chunk ships at the deadline (latency stays bounded).  The final surface
-is invariant to the chunking — the engine scatter is a max-combine and
-the counter plane an add, both order-insensitive — which the replay
-oracle (``events.replay``) gates bitwise.
+**Flow control** — ``offer`` returns an ``OfferResult``: an ``int``
+(events consumed, exactly the pre-QoS return value) that also carries a
+``retry_after`` hint in seconds, derived from the sensor's queue
+drain-rate EWMA (backlog / observed drain rate; the sensor period when
+no drain has been observed yet).  ``retry_after == 0.0`` means the queue
+has room — producers need no policy knowledge, just a sleep hint.
+
+**Coalescing** is rate-adaptive with no tuning: at each of its deadlines
+a sensor's whole queue drains into ceil(n / chunk_capacity) chunks.  At
+high rates chunks run full (dispatch overhead amortized); at low rates a
+partial chunk ships at the deadline (latency stays bounded).  The final
+surface is invariant to the chunking — the engine scatter is a
+max-combine and the counter plane an add, both order-insensitive — which
+the replay oracle (``events.replay``) gates bitwise.
+
+**Per-tier accounting** — ``tier_counters()`` aggregates the exact
+per-sensor counters by tier, including across mid-run tier migration
+(``set_tier`` re-attributes a sensor's queued-but-unserved events to its
+new tier, so the conservation identity holds *per tier* under any
+migration schedule)::
+
+    offered == ingested + dropped + refused + discarded + deferred
+
+where ``deferred`` is the still-queued remainder (events whose service
+is deferred to a later deadline) and ``deferrals`` counts scheduler
+postponements cumulatively.  Per-tier readout-latency percentiles
+(``latencies_by_tier``) are the SLO currency the per-tier benchmark
+gate (``benchmarks/compare.py``) consumes.
 
 **Pipelining** exploits JAX async dispatch (single-device and mesh modes
-both): ``step(t)`` dispatches this deadline's scatter and spec read,
-*then* syncs the previous deadline's read.  Host-side work (queue drains,
-``EventBatch`` padding, dispatch overhead) for step k runs while step
-k-1's read is still on the device; each step performs exactly one host
-sync.  ``flush()`` syncs the last in-flight read.  With
+both): ``step(t)`` dispatches this deadline's scatter and spec read(s),
+*then* syncs the previous deadline's read.  Host-side work (queue
+drains, ``EventBatch`` padding, dispatch overhead) for step k runs while
+step k-1's read is still on the device; each step performs exactly one
+host sync.  ``flush()`` syncs the last in-flight read.  With
 ``pipeline=False`` every step syncs its own read — the synchronous
 comparator ``benchmarks/bench_stream.py`` measures against.
 
-Determinism contract: which events are accepted, dropped, and coalesced
-into which chunk of which step is a pure function of the offered event
-sequence and the deadline times — never of wall-clock timing.  The
-recorded action log (attach/detach/step with host-side chunk copies)
-replays bitwise through a fresh engine (``events.replay.oracle_digests``).
+Determinism contract: which events are accepted, dropped, scheduled,
+deferred, and coalesced into which chunk of which step is a pure
+function of the offered event sequence, the per-sensor deadline
+streams, and the QoS classes — never of wall-clock timing.  The
+recorded action log (attach-with-tier / set_tier / detach / step with
+host-side chunk copies, EDF order, and the specs read) replays bitwise
+through a fresh engine (``events.replay.oracle_digests``).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 import time
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -67,11 +121,81 @@ from repro.events import synthetic as syn
 from repro.serve import spec as spec_mod
 
 __all__ = [
-    "POLICIES", "StreamConfig", "StreamSensor", "StreamRuntime",
-    "StepRecord", "digest_products",
+    "POLICIES", "QoSClass", "DEFAULT_QOS", "GESTURE_TIER", "TELEMETRY_TIER",
+    "AdmissionError", "OfferResult", "StreamConfig", "StreamSensor",
+    "StreamRuntime", "StepRecord", "digest_products", "digest_step",
 ]
 
 POLICIES = ("block", "drop_oldest", "drop_newest")
+
+#: the per-sensor counters that aggregate by tier (exact, deterministic)
+TIER_KEYS = ("offered", "accepted", "dropped", "refused", "ingested",
+             "discarded", "deferrals")
+
+
+@dataclasses.dataclass(frozen=True)
+class QoSClass:
+    """One sensor's quality-of-service contract (hashable, logged).
+
+    ``tier`` names the accounting/gating bucket; ``priority`` orders
+    tiers under overload (lower = more important — a priority-0 gesture
+    sensor preempts a priority-2 telemetry one); ``period_s`` is the
+    sensor's own readout period (its deadline stream is the multiples
+    of this period; ``None`` inherits ``StreamConfig.deadline_s``);
+    ``slo_p99_s`` is the tier's p99 readout-latency budget (telemetry
+    for the per-tier benchmark gate, and the budget admission control
+    protects); ``rate_hint`` is the declared event rate in events per
+    *virtual* second (the admission-control currency; 0 = undeclared);
+    ``spec`` optionally overrides the runtime's ``ReadoutSpec`` for
+    steps that serve this sensor (sensors sharing a spec share one
+    fused dispatch — ``TimeSurfaceEngine.read_many`` dedupes).
+    """
+
+    tier: str = "default"
+    priority: int = 1
+    period_s: Optional[float] = None
+    slo_p99_s: float = math.inf
+    rate_hint: float = 0.0
+    spec: Optional[spec_mod.ReadoutSpec] = None
+
+    def __post_init__(self):
+        assert self.tier, "tier name must be non-empty"
+        assert self.period_s is None or self.period_s > 0, self.period_s
+        assert self.slo_p99_s > 0, self.slo_p99_s
+        assert self.rate_hint >= 0, self.rate_hint
+
+
+DEFAULT_QOS = QoSClass()
+#: ready-made tiers for the paper's canonical mixed workload: a
+#: gesture-recognition sensor outranks environment telemetry
+GESTURE_TIER = QoSClass(tier="gesture", priority=0, slo_p99_s=0.25)
+TELEMETRY_TIER = QoSClass(tier="telemetry", priority=2, slo_p99_s=2.0)
+
+
+class AdmissionError(RuntimeError):
+    """connect() refused: the declared rate would break admitted tiers."""
+
+
+class OfferResult(int):
+    """``offer``'s return value: an ``int`` (events consumed — exactly
+    the pre-QoS semantics, so ``offer(ev) == n`` keeps working) that
+    also carries the flow-control breakdown of this offer and a
+    ``retry_after`` sleep hint in seconds (0.0 = queue has room;
+    derived from the queue drain-rate EWMA, never wall time)."""
+
+    def __new__(cls, consumed: int, *, accepted: int = 0, dropped: int = 0,
+                refused: int = 0, retry_after: float = 0.0):
+        self = super().__new__(cls, consumed)
+        self.accepted = accepted
+        self.dropped = dropped
+        self.refused = refused
+        self.retry_after = retry_after
+        return self
+
+    def __repr__(self) -> str:
+        return (f"OfferResult({int(self)}, accepted={self.accepted}, "
+                f"dropped={self.dropped}, refused={self.refused}, "
+                f"retry_after={self.retry_after:.4g})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,17 +203,26 @@ class StreamConfig:
     """Static runtime configuration.
 
     ``queue_capacity`` bounds each sensor's ingress queue in *events* —
-    the finite-storage knob; ``deadline_s`` is the readout period (every
-    ``step`` call is one deadline); ``policy`` picks the overload
-    behavior; ``pipeline=False`` degrades to sync-per-step (the
-    benchmark comparator); ``record_chunks=False`` drops the host-side
-    chunk copies from the action log (timing-only runs — the oracle
-    replay then has nothing to consume).
+    the finite-storage knob; ``deadline_s`` is the default readout
+    period (every ``step`` call is one deadline on the runtime grid;
+    sensors with a ``QoSClass.period_s`` keep their own deadline
+    streams); ``policy`` picks the overload behavior;
+    ``step_chunk_budget`` caps the engine chunks one step may dispatch
+    (``None`` = unlimited; exceeding it is *overload*: priority
+    preempts EDF and the rest defer); ``capacity_eps`` is the declared
+    drain capacity in events per virtual second that admission control
+    protects (``None`` disables admission); ``pipeline=False`` degrades
+    to sync-per-step (the benchmark comparator);
+    ``record_chunks=False`` drops the host-side chunk copies from the
+    action log (timing-only runs — the oracle replay then has nothing
+    to consume).
     """
 
     policy: str = "drop_oldest"
     queue_capacity: int = 1 << 15
     deadline_s: float = 0.01
+    step_chunk_budget: Optional[int] = None
+    capacity_eps: Optional[float] = None
     pipeline: bool = True
     record_chunks: bool = True
     max_record_steps: Optional[int] = 10_000
@@ -107,11 +240,20 @@ class StreamConfig:
             )
         assert self.queue_capacity >= 1, self.queue_capacity
         assert self.deadline_s > 0, self.deadline_s
+        assert self.step_chunk_budget is None or self.step_chunk_budget >= 1
+        assert self.capacity_eps is None or self.capacity_eps > 0
         assert self.max_record_steps is None or self.max_record_steps >= 1
 
 
 #: one queued segment: (x, y, t, p) host arrays, equal length
 _Segment = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+#: scheduling epsilon: a deadline k*period compares ready at t=k*period
+#: despite float rounding of the grid arithmetic
+_EPS = 1e-9
+
+#: EWMA smoothing for the observed per-sensor drain rate
+_EWMA_ALPHA = 0.3
 
 
 def _as_arrays(events, h: int, w: int) -> _Segment:
@@ -128,18 +270,25 @@ def _as_arrays(events, h: int, w: int) -> _Segment:
 
 
 class StreamSensor:
-    """One sensor's bounded ingress queue + its engine session.
+    """One sensor's bounded ingress queue + its engine session + QoS.
 
-    Create via ``StreamRuntime.connect()``.  ``offer(events)`` is the
-    producer side; the runtime drains the queue at each deadline.  All
-    counters are exact and deterministic (see the module docstring).
+    Create via ``StreamRuntime.connect(qos)``.  ``offer(events)`` is the
+    producer side; the runtime drains the queue at each of the sensor's
+    own deadlines.  All counters are exact and deterministic (see the
+    module docstring).
     """
 
-    def __init__(self, runtime: "StreamRuntime", session):
+    def __init__(self, runtime: "StreamRuntime", session,
+                 qos: QoSClass = DEFAULT_QOS):
         self._runtime = runtime
         self.session = session
+        self.qos = qos
         self._segments: List[_Segment] = []
         self._queued = 0
+        # -- per-sensor deadline stream + drain-rate observation ----------
+        self.next_deadline = -math.inf   # ready at the first step
+        self._last_sched_t: Optional[float] = None
+        self.drain_eps: Optional[float] = None   # observed EWMA, ev/s
         # -- exact accounting --------------------------------------------
         self.offered = 0     # events handed to offer()
         self.accepted = 0    # events that entered the queue
@@ -147,6 +296,10 @@ class StreamSensor:
         self.refused = 0     # block policy: events offer() did not take
         self.ingested = 0    # events drained into engine chunks
         self.discarded = 0   # queued events thrown away by disconnect()
+        self.deferrals = 0   # events postponed by overload scheduling
+        # tier-attribution snapshot: counter values at the last tier
+        # change (tier aggregation reads the delta since)
+        self._snap = {k: 0 for k in TIER_KEYS}
 
     # -- producer side --------------------------------------------------------
     @property
@@ -158,14 +311,32 @@ class StreamSensor:
         """Events currently waiting in the queue."""
         return self._queued
 
-    def offer(self, events) -> int:
-        """Offer events; returns how many were *consumed* (accepted or
-        dropped by policy).  Under ``"block"`` the return value may be
-        short — the producer re-offers the remainder later (that IS the
-        backpressure).  Events must be time-sorted within one offer.
-        Accepted events are **copied** into the queue: producers may
-        reuse or mutate their buffers immediately after ``offer``
-        returns (the natural real-time sensor-loop pattern)."""
+    @property
+    def period_s(self) -> float:
+        """This sensor's readout period (its own deadline stream)."""
+        return (self.qos.period_s if self.qos.period_s is not None
+                else self._runtime.cfg.deadline_s)
+
+    def _retry_after(self, backlog: int) -> float:
+        """Flow-control hint: seconds until ``backlog`` events drain at
+        the observed drain rate (the sensor period before any drain has
+        been observed — one full deadline is the natural first guess)."""
+        if backlog <= 0:
+            return 0.0
+        if self.drain_eps and self.drain_eps > 0:
+            return backlog / self.drain_eps
+        return self.period_s
+
+    def offer(self, events) -> OfferResult:
+        """Offer events; returns an ``OfferResult`` — an ``int`` of how
+        many were *consumed* (accepted or dropped by policy) carrying a
+        ``retry_after`` backpressure hint.  Under ``"block"`` the value
+        may be short — the producer re-offers the remainder after
+        ``retry_after`` seconds (that IS the backpressure).  Events must
+        be time-sorted within one offer.  Accepted events are **copied**
+        into the queue: producers may reuse or mutate their buffers
+        immediately after ``offer`` returns (the natural real-time
+        sensor-loop pattern)."""
         if self.session is None:
             raise RuntimeError("sensor is disconnected")
         cfg = self._runtime.cfg
@@ -174,26 +345,36 @@ class StreamSensor:
         n = len(x)
         self.offered += n
         if n == 0:
-            return 0
+            return OfferResult(0, retry_after=self._retry_after(
+                self._queued - cfg.queue_capacity))
         free = cfg.queue_capacity - self._queued
         if cfg.policy == "block":
             take = min(free, n)
             self.refused += n - take
             if take:
                 self._append((x[:take], y[:take], t[:take], p[:take]))
-            return take
+            return OfferResult(
+                take, accepted=take, refused=n - take,
+                retry_after=self._retry_after(n - take),
+            )
         if cfg.policy == "drop_newest":
             take = min(free, n)
             self.dropped += n - take
             if take:
                 self._append((x[:take], y[:take], t[:take], p[:take]))
-            return n
+            return OfferResult(
+                n, accepted=take, dropped=n - take,
+                retry_after=self._retry_after(n - take),
+            )
         # drop_oldest: everything enters, the head makes room
         self._append((x, y, t, p))
         overflow = self._queued - cfg.queue_capacity
         if overflow > 0:
             self._evict_oldest(overflow)
-        return n
+        return OfferResult(
+            n, accepted=n, dropped=max(overflow, 0),
+            retry_after=self._retry_after(overflow),
+        )
 
     def _append(self, seg: _Segment) -> None:
         # own a copy: _as_arrays/asarray and slicing return views of the
@@ -231,13 +412,63 @@ class StreamSensor:
         self._queued = 0
         return out
 
+    def _note_scheduled(self, t: float, drained: int) -> None:
+        """Advance this sensor's deadline stream past ``t`` and fold the
+        drain into the observed drain-rate EWMA (virtual time only)."""
+        if drained > 0:
+            dt = (t - self._last_sched_t
+                  if self._last_sched_t is not None else self.period_s)
+            if dt > 0:
+                inst = drained / dt
+                self.drain_eps = (
+                    inst if self.drain_eps is None
+                    else _EWMA_ALPHA * inst
+                    + (1.0 - _EWMA_ALPHA) * self.drain_eps
+                )
+        self._last_sched_t = t
+        period = self.period_s
+        self.next_deadline = (math.floor((t + _EPS) / period) + 1) * period
+
+    # -- tier attribution -----------------------------------------------------
+    def _tier_delta(self) -> Dict[str, int]:
+        """Counter movement since the last tier change (what the current
+        tier owns)."""
+        return {k: getattr(self, k) - self._snap[k] for k in TIER_KEYS}
+
+    def _fold_tier(self, buckets: Dict[str, Dict[str, int]],
+                   migrate_queued: bool = False) -> None:
+        """Retire this sensor's delta into its current tier's bucket.
+
+        With ``migrate_queued`` (tier migration), the still-queued
+        events' ``offered``/``accepted`` counts move *with* the sensor
+        to its next tier — so each tier's conservation identity
+        (offered == ingested + dropped + refused + discarded + queued)
+        holds exactly on both sides of the migration.
+        """
+        bucket = buckets.setdefault(self.qos.tier,
+                                    {k: 0 for k in TIER_KEYS})
+        delta = self._tier_delta()
+        if migrate_queued:
+            delta["offered"] -= self._queued
+            delta["accepted"] -= self._queued
+        for k in TIER_KEYS:
+            bucket[k] += delta[k]
+        self._snap = {k: getattr(self, k) for k in TIER_KEYS}
+        if migrate_queued:
+            self._snap["offered"] -= self._queued
+            self._snap["accepted"] -= self._queued
+
     def stats(self) -> dict:
         return {
             "slot": self.slot if self.session is not None else None,
+            "tier": self.qos.tier, "priority": self.qos.priority,
+            "period_s": self.period_s,
+            "next_deadline": self.next_deadline,
+            "drain_eps": self.drain_eps,
             "queued": self._queued, "offered": self.offered,
             "accepted": self.accepted, "dropped": self.dropped,
             "refused": self.refused, "ingested": self.ingested,
-            "discarded": self.discarded,
+            "discarded": self.discarded, "deferrals": self.deferrals,
         }
 
 
@@ -247,6 +478,10 @@ class StepRecord:
 
     ``chunks`` holds host-side copies of the coalesced (slot, events)
     pairs exactly as dispatched (absent when ``record_chunks=False``);
+    ``order`` is the EDF/priority schedule this step ran — (slot, tier,
+    deadline) per scheduled sensor, in drain order; ``deferred`` lists
+    the sensors overload pushed past this step as (slot, tier, queued);
+    ``specs`` are the ReadoutSpecs this step read (primary first);
     ``digest`` is the SHA-256 of the synced products, filled at sync
     time, which the synchronous oracle must reproduce bitwise.
     ``latency_s`` is dispatch -> sync-returned wall time (in pipelined
@@ -259,12 +494,20 @@ class StepRecord:
     n_chunks: int
     chunks: Optional[List[Tuple[int, _Segment]]]
     wall_dispatch: float
+    order: List[Tuple[int, str, float]] = dataclasses.field(
+        default_factory=list)
+    deferred: List[Tuple[int, str, int]] = dataclasses.field(
+        default_factory=list)
+    overload: bool = False
+    specs: Tuple[spec_mod.ReadoutSpec, ...] = ()
     latency_s: float = float("nan")
     digest: str = ""
 
 
-#: action-log entries: ("attach", slot) | ("detach", slot) | ("step", rec)
-LogEntry = Tuple[str, Union[int, StepRecord]]
+#: action-log entries:
+#:   ("attach", (slot, QoSClass)) | ("set_tier", (slot, QoSClass))
+#:   | ("detach", slot) | ("step", rec)
+LogEntry = Tuple[str, Union[int, Tuple, StepRecord]]
 
 
 def digest_products(products: Dict[str, jax.Array]) -> str:
@@ -280,23 +523,36 @@ def digest_products(products: Dict[str, jax.Array]) -> str:
     return h.hexdigest()
 
 
-class _Inflight:
-    __slots__ = ("record", "products")
+def digest_step(products_list: Sequence[Dict[str, jax.Array]]) -> str:
+    """Digest of one step's reads.  A single-spec step digests exactly
+    as before (``digest_products``) so pre-QoS digests stay comparable;
+    a multi-spec step chains the per-spec digests in read order."""
+    if len(products_list) == 1:
+        return digest_products(products_list[0])
+    h = hashlib.sha256()
+    for products in products_list:
+        h.update(digest_products(products).encode())
+    return h.hexdigest()
 
-    def __init__(self, record: StepRecord, products: Dict[str, jax.Array]):
+
+class _Inflight:
+    __slots__ = ("record", "products_list")
+
+    def __init__(self, record: StepRecord,
+                 products_list: List[Dict[str, jax.Array]]):
         self.record = record
-        self.products = products
+        self.products_list = products_list
 
 
 class StreamRuntime:
     """Continuous-traffic front end over a ``TimeSurfaceEngine``.
 
-    One runtime owns its engine's traffic: ``connect()`` attaches a
-    session and wraps it in a ``StreamSensor`` queue, ``step(t)`` runs
-    one deadline (drain -> pipelined push+read -> sync previous), and
-    ``flush()`` syncs the tail.  Works identically over a single-device
-    or mesh-sharded engine — the pipelining is JAX async dispatch, which
-    both modes provide.
+    One runtime owns its engine's traffic: ``connect(qos)`` admits and
+    attaches a session and wraps it in a ``StreamSensor`` queue,
+    ``step(t)`` runs one deadline (EDF-schedule -> drain -> pipelined
+    push+read -> sync previous), and ``flush()`` syncs the tail.  Works
+    identically over a single-device or mesh-sharded engine — the
+    pipelining is JAX async dispatch, which both modes provide.
     """
 
     def __init__(
@@ -313,24 +569,72 @@ class StreamRuntime:
         self.sensors: Dict[int, StreamSensor] = {}   # slot -> sensor
         self.log: List[LogEntry] = []
         self.latencies_s: List[float] = []
+        self.latencies_by_tier: Dict[str, List[float]] = {}
         self._max_lat = max_latency_samples
         self._inflight: Optional[_Inflight] = None
         self._retired: Dict[str, int] = {
             k: 0 for k in ("offered", "accepted", "dropped", "refused",
                            "ingested", "discarded")
         }
+        self._tier_retired: Dict[str, Dict[str, int]] = {}
+        self._tier_slo: Dict[str, float] = {}
         self.n_steps = 0
         self.log_trimmed_steps = 0
 
     # -- lifecycle ------------------------------------------------------------
-    def connect(self) -> StreamSensor:
-        """Attach a session (raises ``RuntimeError`` when the pool is
-        full) and return its queue-fronted sensor handle."""
-        session = self.engine.attach()
-        sensor = StreamSensor(self, session)
+    def _admit(self, qos: QoSClass) -> None:
+        """SLO-aware admission control: refuse a session whose declared
+        rate would break the admitted tiers' budgets.  Demand per live
+        sensor is max(declared rate, observed drain-rate EWMA) — the
+        observed rates catch producers that under-declared."""
+        cap = self.cfg.capacity_eps
+        if cap is None:
+            return
+        demand = sum(
+            max(s.qos.rate_hint, s.drain_eps or 0.0)
+            for s in self.sensors.values()
+        )
+        if demand + qos.rate_hint > cap:
+            per_tier: Dict[str, float] = {}
+            for s in self.sensors.values():
+                per_tier[s.qos.tier] = per_tier.get(s.qos.tier, 0.0) + max(
+                    s.qos.rate_hint, s.drain_eps or 0.0)
+            detail = ", ".join(
+                f"{t}={r:.0f}ev/s" for t, r in sorted(per_tier.items()))
+            raise AdmissionError(
+                f"admission refused: tier {qos.tier!r} declares "
+                f"{qos.rate_hint:.0f} ev/s but admitted demand is already "
+                f"{demand:.0f} of {cap:.0f} ev/s capacity ({detail or 'none'})"
+            )
+
+    def connect(self, qos: QoSClass = DEFAULT_QOS) -> StreamSensor:
+        """Admit + attach a session under ``qos`` (raises
+        ``AdmissionError`` when the declared rate does not fit,
+        ``RuntimeError`` when the pool is full) and return its
+        queue-fronted sensor handle."""
+        self._admit(qos)
+        session = self.engine.attach(qos=qos)
+        sensor = StreamSensor(self, session, qos)
         self.sensors[session.slot] = sensor
-        self.log.append(("attach", session.slot))
+        self._tier_slo[qos.tier] = min(
+            self._tier_slo.get(qos.tier, math.inf), qos.slo_p99_s)
+        self.log.append(("attach", (session.slot, qos)))
         return sensor
+
+    def set_tier(self, sensor: StreamSensor, qos: QoSClass) -> None:
+        """Migrate a live sensor to a new QoS class.  The sensor's
+        served/dropped history stays attributed to the old tier; its
+        still-queued events (and their offered/accepted counts) move to
+        the new tier, so per-tier conservation holds exactly across the
+        migration.  The deadline stream re-periods at the next
+        schedule."""
+        if sensor.session is None:
+            raise RuntimeError("sensor is disconnected")
+        sensor._fold_tier(self._tier_retired, migrate_queued=True)
+        sensor.qos = qos
+        self._tier_slo[qos.tier] = min(
+            self._tier_slo.get(qos.tier, math.inf), qos.slo_p99_s)
+        self.log.append(("set_tier", (sensor.slot, qos)))
 
     def disconnect(self, sensor: StreamSensor) -> None:
         """Detach: the sensor's queued events are discarded (counted in
@@ -340,6 +644,7 @@ class StreamRuntime:
             raise RuntimeError("sensor already disconnected")
         sensor.discarded += sensor.queued
         sensor._segments, sensor._queued = [], 0
+        sensor._fold_tier(self._tier_retired)
         slot = sensor.slot
         st = sensor.stats()
         for k in self._retired:
@@ -350,46 +655,121 @@ class StreamRuntime:
         self.log.append(("detach", slot))
 
     # -- the deadline loop ----------------------------------------------------
-    def _coalesce(self):
-        """Drain every queue into capacity-sized engine chunks.
+    def _schedule(self, t: float):
+        """Pick this step's sensors: every sensor whose next deadline
+        has arrived, EDF order (deadline, then priority, then slot).
+        With a ``step_chunk_budget`` and more ready chunks than budget,
+        the step is *overloaded*: order switches to priority-first and
+        the overflow defers (deadline unmoved, so deferred sensors lead
+        the next EDF pass).  Pure virtual-time scheduling — the replay
+        oracle re-derives nothing, it replays the recorded schedule."""
+        ready = [
+            s for _, s in sorted(self.sensors.items())
+            if s.next_deadline <= t + _EPS
+        ]
+        ready.sort(key=lambda s: (s.next_deadline, s.qos.priority, s.slot))
+        budget = self.cfg.step_chunk_budget
+        if budget is None:
+            return ready, [], False
+        cap = self.engine.cfg.chunk_capacity
+        need = {s.slot: -(-s.queued // cap) for s in ready}
+        if sum(need.values()) <= budget:
+            return ready, [], False
+        # overload: priority preempts EDF; deferral is all-or-nothing
+        # per sensor (a partial drain would split one deadline's events
+        # across steps and break the coalescing invariant)
+        by_priority = sorted(
+            ready, key=lambda s: (s.qos.priority, s.next_deadline, s.slot))
+        used, take, defer = 0, [], []
+        for s in by_priority:
+            if need[s.slot] and used + need[s.slot] > budget:
+                defer.append(s)
+            else:
+                take.append(s)
+                used += need[s.slot]
+        return take, defer, True
 
-        Returns (items, chunk_copies, n_events): ``items`` are
-        (slot, EventBatch) pairs for ``engine.push``; ``chunk_copies``
-        are the host-side numpy twins for the action log."""
+    def _coalesce(self, scheduled: Sequence[StreamSensor], t: float):
+        """Drain the scheduled sensors' queues into capacity-sized
+        engine chunks, **grouped by tier** so same-tier chunks share one
+        engine dispatch (the fused scatter stays batched).
+
+        Returns (groups, chunk_copies, n_events, order): ``groups`` is
+        a list of (tier, items) with ``items`` the (slot, EventBatch)
+        pairs for one ``engine.push``; ``chunk_copies`` are the
+        host-side numpy twins for the action log, flat in dispatch
+        order; ``order`` records the EDF schedule (slot, tier, deadline
+        the sensor was served under)."""
         cap = self.engine.cfg.chunk_capacity
         h, w = self.engine.cfg.h, self.engine.cfg.w
-        items, copies, n_events = [], [], 0
-        for slot in sorted(self.sensors):
-            seg = self.sensors[slot]._drain()
+        groups: List[Tuple[str, list]] = []
+        group_of: Dict[str, list] = {}
+        copies, order, n_events = [], [], 0
+        for sensor in scheduled:
+            deadline = sensor.next_deadline
+            order.append((sensor.slot, sensor.qos.tier,
+                          deadline if math.isfinite(deadline) else t))
+            seg = sensor._drain()
+            drained = 0 if seg is None else len(seg[0])
+            sensor._note_scheduled(t, drained)
             if seg is None:
                 continue
-            x, y, t, p = seg
-            n_events += len(x)
-            for lo in range(0, len(x), cap):
-                part = tuple(a[lo:lo + cap] for a in (x, y, t, p))
+            items = group_of.get(sensor.qos.tier)
+            if items is None:
+                items = group_of[sensor.qos.tier] = []
+                groups.append((sensor.qos.tier, items))
+            x, y, tt, p = seg
+            n_events += drained
+            for lo in range(0, drained, cap):
+                part = tuple(a[lo:lo + cap] for a in (x, y, tt, p))
                 stream = syn.EventStream(
                     x=part[0], y=part[1], t=part[2], p=part[3],
                     is_signal=np.ones(len(part[0]), bool), h=h, w=w,
                 )
-                items.append((slot, pipeline.to_event_batch(stream, cap)))
-                copies.append((slot, part))
-        return items, copies, n_events
+                items.append(
+                    (sensor.slot, pipeline.to_event_batch(stream, cap)))
+                copies.append((sensor.slot, part))
+        return groups, copies, n_events, order
+
+    def _step_specs(
+        self, scheduled: Sequence[StreamSensor],
+    ) -> Tuple[spec_mod.ReadoutSpec, ...]:
+        """The ReadoutSpecs this step must serve: the runtime's primary
+        spec plus any scheduled sensor's QoS override, deduped in a
+        deterministic order (primary first, then first-scheduled
+        order).  Sensors sharing a spec share one fused dispatch."""
+        specs = [self.spec]
+        for s in scheduled:
+            if s.qos.spec is not None and s.qos.spec not in specs:
+                specs.append(s.qos.spec)
+        return tuple(specs)
 
     def step(self, t_deadline: float) -> StepRecord:
-        """Run one deadline: coalesce, dispatch scatter + spec read,
+        """Run one deadline: schedule (EDF; priority preempts under
+        overload), coalesce per tier, dispatch scatter + spec read(s),
         sync the *previous* read (one host sync).  Returns this step's
         record (its ``latency_s``/``digest`` fill at the next sync).
         With ``pipeline=False`` the sync is this step's own read."""
-        items, copies, n_events = self._coalesce()
+        scheduled, deferred, overload = self._schedule(t_deadline)
+        for s in deferred:
+            s.deferrals += s.queued
+        groups, copies, n_events, order = self._coalesce(
+            scheduled, t_deadline)
+        specs = self._step_specs(scheduled)
         wall0 = time.perf_counter()
-        if items:
+        for _tier, items in groups:
             self.engine.push(items)
-        products = self.engine.read(self.spec, t_deadline)
+        products_by_spec = self.engine.read_many(specs, t_deadline)
+        products_list = [products_by_spec[sp] for sp in specs]
         record = StepRecord(
             t_read=float(t_deadline), n_events=n_events,
-            n_chunks=len(items),
+            n_chunks=len(copies),
             chunks=copies if self.cfg.record_chunks else None,
             wall_dispatch=wall0,
+            order=order,
+            deferred=[(s.slot, s.qos.tier, s.queued) for s in deferred],
+            overload=overload,
+            specs=specs,
         )
         self.log.append(("step", record))
         self.n_steps += 1
@@ -401,7 +781,7 @@ class StreamRuntime:
                     self.log_trimmed_steps += 1
                     break
         prev = self._inflight
-        self._inflight = _Inflight(record, products)
+        self._inflight = _Inflight(record, products_list)
         if self.cfg.pipeline:
             if prev is not None:
                 self._sync(prev)
@@ -411,23 +791,27 @@ class StreamRuntime:
         return record
 
     def _sync(self, fl: _Inflight) -> None:
-        jax.block_until_ready(fl.products)
+        jax.block_until_ready(fl.products_list)
         lat = time.perf_counter() - fl.record.wall_dispatch
         fl.record.latency_s = lat
         if len(self.latencies_s) < self._max_lat:
             self.latencies_s.append(lat)
-        fl.record.digest = digest_products(fl.products)
+        for tier in {tier for _, tier, _ in fl.record.order}:
+            samples = self.latencies_by_tier.setdefault(tier, [])
+            if len(samples) < self._max_lat:
+                samples.append(lat)
+        fl.record.digest = digest_step(fl.products_list)
 
     def flush(self) -> Optional[Dict[str, jax.Array]]:
-        """Sync the in-flight read (if any) and return its products —
-        the tail of the pipeline, and the way tests grab the *current*
-        step's output right after ``step``."""
+        """Sync the in-flight read (if any) and return its *primary*
+        spec's products — the tail of the pipeline, and the way tests
+        grab the *current* step's output right after ``step``."""
         fl, self._inflight = self._inflight, None
         if fl is None:
             return None
         if np.isnan(fl.record.latency_s):   # not yet synced
             self._sync(fl)
-        return fl.products
+        return fl.products_list[0]
 
     # -- telemetry ------------------------------------------------------------
     def counters(self) -> Dict[str, int]:
@@ -441,6 +825,52 @@ class StreamRuntime:
             out["queued"] += st["queued"]
         return out
 
+    def tier_counters(self) -> Dict[str, Dict[str, int]]:
+        """Exact per-tier accounting (retired + live, migration-safe).
+
+        Every tier satisfies the conservation identity::
+
+            offered == ingested + dropped + refused + discarded + deferred
+
+        where ``deferred`` is the still-queued remainder (events whose
+        service is deferred to a later deadline) and ``deferrals``
+        counts overload postponements cumulatively (telemetry, not part
+        of the identity).
+        """
+        out = {
+            tier: dict(bucket, deferred=0)
+            for tier, bucket in self._tier_retired.items()
+        }
+        for sensor in self.sensors.values():
+            tier = sensor.qos.tier
+            bucket = out.setdefault(
+                tier, {k: 0 for k in TIER_KEYS} | {"deferred": 0})
+            delta = sensor._tier_delta()
+            for k in TIER_KEYS:
+                bucket[k] += delta[k]
+            bucket["deferred"] += sensor.queued
+        return out
+
+    def tier_latencies_us(self) -> Dict[str, Dict[str, Optional[float]]]:
+        """Per-tier readout-latency percentiles (p50/p95/p99, in us)
+        over the steps that served each tier, plus the tier's tightest
+        SLO budget — the per-tier benchmark-gate currency."""
+        out = {}
+        for tier, samples in self.latencies_by_tier.items():
+            lat = np.asarray(samples, np.float64)
+            slo = self._tier_slo.get(tier, math.inf)
+            out[tier] = {
+                "latency_p50_us": float(np.percentile(lat, 50) * 1e6)
+                if lat.size else None,
+                "latency_p95_us": float(np.percentile(lat, 95) * 1e6)
+                if lat.size else None,
+                "latency_p99_us": float(np.percentile(lat, 99) * 1e6)
+                if lat.size else None,
+                "slo_p99_us": slo * 1e6 if math.isfinite(slo) else None,
+                "n_steps": int(lat.size),
+            }
+        return out
+
     def stats(self) -> dict:
         c = self.counters()
         lat = np.asarray(self.latencies_s, np.float64)
@@ -451,7 +881,11 @@ class StreamRuntime:
             "n_sensors": len(self.sensors),
             "policy": self.cfg.policy,
             "deadline_s": self.cfg.deadline_s,
+            "step_chunk_budget": self.cfg.step_chunk_budget,
+            "capacity_eps": self.cfg.capacity_eps,
             "drop_rate": c["dropped"] / c["offered"] if c["offered"] else 0.0,
+            "tiers": self.tier_counters(),
+            "tier_latencies_us": self.tier_latencies_us(),
             "latency_p50_us": float(np.percentile(lat, 50) * 1e6) if lat.size else None,
             "latency_p95_us": float(np.percentile(lat, 95) * 1e6) if lat.size else None,
             "latency_p99_us": float(np.percentile(lat, 99) * 1e6) if lat.size else None,

@@ -708,17 +708,20 @@ class TimeSurfaceEngine:
         return self._plan.mesh if self._plan else None
 
     # -- sessions ------------------------------------------------------------
-    def attach(self) -> SensorSession:
+    def attach(self, qos=None) -> SensorSession:
         """Claim a free slot (resetting its surface) and return the
         ``SensorSession`` owning it; raises ``RuntimeError`` when the
-        pool is full."""
+        pool is full.  ``qos`` optionally tags the session with a
+        ``serve.stream.QoSClass`` — the engine itself is QoS-agnostic
+        (scheduling lives in ``StreamRuntime``), the tag just rides the
+        session for introspection and the streaming action log."""
         if not self._free:
             raise RuntimeError(
                 f"no free sensor slots (pool size {self.cfg.n_slots})"
             )
         slot = self._free.pop(0)
         self.state = self._reset(slot, bump_generation=True)
-        session = SensorSession(self, slot)
+        session = SensorSession(self, slot, qos=qos)
         self._sessions[slot] = session
         return session
 
@@ -934,6 +937,30 @@ class TimeSurfaceEngine:
                 statics=statics,
             )
         return dict(out)
+
+    def read_many(
+        self,
+        specs: Sequence[spec_mod.ReadoutSpec],
+        t_now: float = 0.0,
+    ) -> Dict[spec_mod.ReadoutSpec, Dict[str, jax.Array]]:
+        """Serve several ``ReadoutSpec``s against the *same* pool state
+        at ``t_now`` — the multi-spec step primitive behind QoS
+        streaming, where sensors in one deadline step may carry
+        different per-tier specs.
+
+        Duplicate specs are deduped (order-preserving) so N sensors
+        sharing a spec cost exactly one fused dispatch; each unique
+        spec then runs the identical compiled program a plain ``read``
+        of that spec runs, so per-spec products are bit-identical to
+        reading the specs one at a time.  Dispatches stay async — the
+        caller syncs all specs' products with one
+        ``jax.block_until_ready`` (the streaming pipeline's single
+        host sync per deadline).
+        """
+        out: Dict[spec_mod.ReadoutSpec, Dict[str, jax.Array]] = {}
+        for spec in dict.fromkeys(specs):
+            out[spec] = self.read(spec, t_now)
+        return out
 
     def serve_step(
         self,

@@ -34,7 +34,7 @@ from repro.core import time_surface as ts
 from repro.events import synthetic as syn
 from repro.kernels import ops
 from repro.serve import spec as rs
-from repro.serve.stream import StreamConfig, StreamRuntime
+from repro.serve.stream import QoSClass, StreamConfig, StreamRuntime
 from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
 
 try:
@@ -50,6 +50,17 @@ H, W = 24, 32
 CAP = 64          # small capacity so streams routinely split host-side
 T_READS = (0.03, 0.05, 0.08)   # includes reads older than newest writes
 SQ_CAP = 100      # stream ingress queue: < 2*CAP so offers routinely drop
+SD = 0.01         # stream runtime default deadline/period
+_EPS = 1e-9       # the runtime's deadline-compare epsilon (mirrored)
+
+#: QoS palette for the stream_set_tier action — different periods so
+#: migration actually changes the deadline stream, different priorities
+#: so tier accounting crosses buckets
+QOS_PALETTE = (
+    QoSClass(tier="gesture", priority=0, period_s=SD),
+    QoSClass(tier="telemetry", priority=2, period_s=2 * SD),
+    QoSClass(),   # back to default (inherits the runtime deadline)
+)
 
 #: the composed spec the walk reads alongside the classic surface —
 #: exercises the one-dispatch multi-product path against the oracle
@@ -79,11 +90,13 @@ class EngineModel:
         self.runtime = StreamRuntime(
             self.eng,
             StreamConfig(policy="drop_oldest", queue_capacity=SQ_CAP,
-                         deadline_s=0.01),
+                         deadline_s=SD),
         )
         self.stream_sensors = {}   # slot -> StreamSensor
         self.squeue = {}           # slot -> mirror of queued events
         self.sdropped = {}         # slot -> mirror drop counter
+        self.snext = {}            # slot -> mirror of next_deadline
+        self.speriod = {}          # slot -> mirror of readout period
 
     # -- actions ------------------------------------------------------------
     def acquire(self):
@@ -104,6 +117,8 @@ class EngineModel:
             sensor = self.stream_sensors.pop(slot)
             queued = sum(len(e[0]) for e in self.squeue.pop(slot))
             self.sdropped.pop(slot)
+            self.snext.pop(slot)
+            self.speriod.pop(slot)
             before = sensor.discarded
             self.runtime.disconnect(sensor)
             assert sensor.discarded - before == queued
@@ -199,7 +214,30 @@ class EngineModel:
         self.stream_sensors[slot] = sensor
         self.squeue[slot] = []
         self.sdropped[slot] = 0
+        self.snext[slot] = -np.inf   # ready at the first step
+        self.speriod[slot] = SD
         return slot
+
+    def stream_set_tier(self, slot_pick, qos_pick):
+        """Migrate a random stream sensor across the QoS palette and
+        check the runtime's per-tier conservation identity survives the
+        migration (queued events re-attribute to the new tier)."""
+        if not self.stream_sensors:
+            return
+        slot = sorted(self.stream_sensors)[slot_pick % len(self.stream_sensors)]
+        qos = QOS_PALETTE[qos_pick % len(QOS_PALETTE)]
+        self.runtime.set_tier(self.stream_sensors[slot], qos)
+        # the deadline stream re-periods at the next schedule: the
+        # pending next_deadline is unchanged, only the period mirror moves
+        self.speriod[slot] = qos.period_s if qos.period_s is not None else SD
+        self._check_tier_conservation()
+
+    def _check_tier_conservation(self):
+        for tier, row in self.runtime.tier_counters().items():
+            assert row["offered"] == (
+                row["ingested"] + row["dropped"] + row["refused"]
+                + row["discarded"] + row["deferred"]
+            ), (tier, row)
 
     def stream_offer(self, rng, n_events):
         """Offer events to a random stream sensor's bounded queue and
@@ -232,14 +270,18 @@ class EngineModel:
         assert sensor.queued == sum(len(e[0]) for e in q), slot
 
     def stream_step(self, t):
-        """One deadline: every stream queue drains (coalesced into
-        capacity chunks) and the pool is read at ``t``.  The oracle
-        ingests exactly the mirror queues' surviving events — so a drop
-        the runtime failed to take, or a coalescing boundary that lost
-        or duplicated an event, shows up as a bitwise surface diff."""
+        """One deadline: every *ready* stream queue (its mirrored
+        next-deadline has arrived) drains, coalesced into capacity
+        chunks, and the pool is read at ``t``.  The oracle ingests
+        exactly the ready mirror queues' surviving events — so a drop
+        the runtime failed to take, a coalescing boundary that lost or
+        duplicated an event, or an EDF schedule that served a
+        not-yet-due sensor shows up as a bitwise surface diff."""
         self.runtime.step(t)
         products = self.runtime.flush()
         for slot, q in self.squeue.items():
+            if self.snext[slot] > t + _EPS:
+                continue   # not due: the runtime must not have drained it
             for x, y, tt, p in q:
                 stream = syn.EventStream(
                     x=x, y=y, t=tt, p=p,
@@ -247,8 +289,11 @@ class EngineModel:
                 )
                 self._oracle_ingest(slot, stream)
             q.clear()
+            period = self.speriod[slot]
+            self.snext[slot] = (np.floor((t + _EPS) / period) + 1) * period
         self._t = t
         self._check_surface(products["surface"])
+        self._check_tier_conservation()
 
     # -- checks -------------------------------------------------------------
     def _check_surface(self, got):
@@ -325,7 +370,7 @@ class EngineModel:
 def _walk(model, rng, n_steps):
     slots = range(model.cfg.n_slots)
     for _ in range(n_steps):
-        action = rng.integers(0, 11)
+        action = rng.integers(0, 12)
         if action == 0:
             model.acquire()
         elif action == 1:
@@ -350,6 +395,9 @@ def _walk(model, rng, n_steps):
             model.stream_offer(rng, int(rng.integers(0, 2 * CAP)))
         elif action == 9:
             model.stream_step(float(rng.choice(T_READS)))
+        elif action == 10:
+            model.stream_set_tier(int(rng.integers(0, 8)),
+                                  int(rng.integers(0, 8)))
         else:
             model.check_counts()
     model.check_counts()
@@ -454,6 +502,10 @@ if hyp is not None:
         @rule(t=T_NOW)
         def stream_step(self, t):
             self.model.stream_step(t)
+
+        @rule(slot_pick=st.integers(0, 7), qos_pick=st.integers(0, 7))
+        def stream_set_tier(self, slot_pick, qos_pick):
+            self.model.stream_set_tier(slot_pick, qos_pick)
 
         @precondition(lambda self: hasattr(self, "model"))
         @invariant()
