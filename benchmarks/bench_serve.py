@@ -6,7 +6,11 @@ devices (subprocess, so the main process stays single-device), plus the
 fused-vs-unfused ingest+read loop (below), plus the composed-ReadoutSpec
 row: ``surface + stcf + count`` served from one fused dispatch vs three
 sequential single-product reads (``serve_spec_*``), gated bitwise so the
-fusion win is measured, never bought with drift.
+fusion win is measured, never bought with drift, plus the stage-1 model
+rows (``serve_model_*``): a head-bearing spec — CNN class logits and
+STCF denoise labels fused into the same dispatch as the surfaces —
+bitwise-gated against the standalone frontend + ``cnn_apply`` before the
+clock starts.
 
 Also asserts the serving invariants: engine readout is bit-identical to
 the offline ``events/pipeline`` + ``core/time_surface`` path on each
@@ -351,6 +355,64 @@ def spec_rows(n_sensors=4):
     ]
 
 
+def model_rows(n_sensors=4):
+    """Stage-1 model serving: the full event -> surface -> CNN-logits
+    pipeline (plus STCF denoise labels) as one fused ``serve_step``
+    dispatch per frame deadline.
+
+    The bitwise gate runs before the clock: the fused logits must equal
+    the standalone frontend + ``cnn_apply`` over the same dispatch's
+    stage-0 surfaces, and the labels must equal the thresholded support
+    map — the barrier contract, so the fusion row can never buy its
+    throughput with drift.  ``derived`` is Meps through the model path.
+    """
+    from repro.models import cnn
+    from repro.models.frontends import ts_stack_frontend
+    from repro.serve import heads as heads_mod
+
+    head = rs.classify(n_classes=10, width=16)
+    model = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                           logits=head, labels=rs.denoise())
+    streams = [
+        datasets.dnd21_like("driving" if i % 2 else "hotel_bar",
+                            h=H, w=W, duration=DURATION, seed=20 + i)
+        for i in range(n_sensors)
+    ]
+    cfg = TSEngineConfig(h=H, w=W, n_slots=n_sensors,
+                         chunk_capacity=1 << 14, mode="edram",
+                         specs=(model,))
+    eng = TimeSurfaceEngine(cfg)
+    cams = [eng.attach() for _ in range(n_sensors)]
+    items = [(c, aer.pack(s)) for c, s in zip(cams, streams)]
+    n_events = sum(s.n for s in streams)
+
+    # bitwise gate (also warms the fused and stage-0 jit entries)
+    out = eng.serve_step(items, model, DURATION)
+    base = eng.read(model.stage0(), DURATION)
+    params = heads_mod.resolve_head_params(head, cfg)
+    want = jax.jit(lambda p, s: cnn.cnn_apply(p, ts_stack_frontend([s])))(
+        params, base["surface"])
+    assert (np.asarray(out["logits"]) == np.asarray(want)).all(), (
+        "fused model logits != standalone frontend+cnn_apply"
+    )
+    assert (np.asarray(out["labels"])
+            == (np.asarray(base["stcf"]) >= cfg.stcf_threshold)).all(), (
+        "fused denoise labels != thresholded support"
+    )
+
+    n_iter = 5
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        got = eng.serve_step(items, model, DURATION)
+    jax.block_until_ready(got)
+    dt_model = (time.perf_counter() - t0) / n_iter
+
+    return [
+        ("serve_model_events_per_sec", dt_model * 1e6,
+         n_events / dt_model / 1e6),                             # Meps
+    ]
+
+
 def rows():
     out = []
     streams = [
@@ -404,6 +466,7 @@ def rows():
                     n_sensors * H * W / dt_read / 1e6))  # Mpix/s
 
     out.extend(spec_rows())     # composed-spec vs sequential reads gate
+    out.extend(model_rows())    # stage-1 head serving (bitwise-gated)
     out.extend(fused_rows())    # fused-vs-unfused ingest+read loop
     out.extend(sharded_rows())  # 1/2/4/8-device sweep (Meps / Mpix/s)
     return out

@@ -18,6 +18,13 @@ noisy on shared runners to gate individually):
     gate per priority tier, keyed ``name[tier]``, so a regression that
     only hurts the gesture tier cannot hide behind a healthy telemetry
     aggregate (or vice versa).
+  * model-serving events/sec      (``serve_model_events_per_sec``.derived,
+    higher) — the full event → surface → CNN-logits path as one fused
+    dispatch, bitwise-gated before timing.
+  * model-tier p99 readout latency under streaming QoS
+    (``stream_model_p99_latency_us``.us_per_call, lower, keyed
+    ``[gesture]``) — the head-bearing per-tier spec served every
+    deadline with preemption in the loop.
 
 Rows are keyed by ``(name, tier)`` — ``tier`` is null for global rows —
 and a metric regresses when it is more than ``--threshold`` (default
@@ -70,6 +77,10 @@ GATES: List[Tuple[str, str, str, str]] = [
     ("BENCH_stream.json", r"^stream_p99_latency_us$", "us_per_call",
      "lower"),
     ("BENCH_stream.json", r"^stream_tier_p99_latency_us$", "us_per_call",
+     "lower"),
+    ("BENCH_serve.json", r"^serve_model_events_per_sec$", "derived",
+     "higher"),
+    ("BENCH_stream.json", r"^stream_model_p99_latency_us$", "us_per_call",
      "lower"),
 ]
 

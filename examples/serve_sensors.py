@@ -8,10 +8,13 @@ through the fused ``serve_step`` path: events reach the engine in two
 half-window bursts, the first read is a dense fill, and the second
 re-reads only the dirty tiles the late burst touched.  Mid-run, sensor 1
 disconnects (``detach``) and a new camera reuses its slot (fresh surface
-and counter plane, no retrace, cache stays coherent).  A final section
-replays the same scene mix as *continuous* traffic through the
-``StreamRuntime`` (bounded queues, deadline coalescing, pipelined
-dispatch) and gates it bitwise against a synchronous oracle.
+and counter plane, no retrace, cache stays coherent).  A model section
+then serves stage-1 heads — CNN class logits and STCF denoise labels —
+fused into the same dispatch as the surfaces, bitwise equal to the
+standalone head.  A final section replays the same scene mix as
+*continuous* traffic through the ``StreamRuntime`` (bounded queues,
+deadline coalescing, pipelined dispatch, a logits-bearing gesture tier)
+and gates it bitwise against a synchronous oracle.
 
     PYTHONPATH=src python examples/serve_sensors.py
     PYTHONPATH=src python examples/serve_sensors.py --mesh 2   # sharded pool
@@ -99,6 +102,36 @@ def main() -> None:
     print("final events per slot:",
           [stats["n_events"][c.slot] for c in cams])
 
+    # -- stage-1 model heads: logits out of the same fused dispatch ----------
+    # a head-bearing spec serves model outputs end to end: the CNN
+    # classifier consumes the surface product (through an optimization
+    # barrier, so fusing it cannot perturb the surface bits) and the
+    # denoise head thresholds the STCF support map — same dispatch, same
+    # jit cache key, weights resolved once from the spec's static key
+    import jax
+
+    from repro.models import cnn
+    from repro.models.frontends import ts_stack_frontend
+    from repro.serve import heads as heads_mod
+
+    head = rs.classify(n_classes=4, width=16)
+    MODEL = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                           logits=head, labels=rs.denoise())
+    out = eng.read(MODEL, DURATION)
+    lg = np.asarray(out["logits"])
+    print("\nmodel products (classify + denoise fused with the surface):")
+    for c in cams:
+        keep = float(np.asarray(out["labels"])[c.slot].mean())
+        print(f"  slot {c.slot}: class {int(lg[c.slot].argmax())}, "
+              f"logits {np.array2string(lg[c.slot], precision=2)}, "
+              f"denoise keep {keep:.3f}")
+    params = heads_mod.resolve_head_params(head, cfg)
+    want = jax.jit(lambda p, s: cnn.cnn_apply(p, ts_stack_frontend([s])))(
+        params, out["surface"])
+    same = bool((lg == np.asarray(want)).all())
+    print(f"  fused logits bitwise equal standalone cnn_apply: {same}")
+    assert same
+
     # -- the same traffic as *continuous* streaming ---------------------------
     # the request/response loop above hand-windows the streams; the
     # StreamRuntime does it as sustained traffic: bounded ingress queues,
@@ -127,8 +160,17 @@ def main() -> None:
     # telemetry's queues absorb the deferrals and drops, and the
     # per-tier counters conserve exactly.  Scheduling is still pure
     # virtual time: the run replays bitwise as before.
+    # the gesture tier additionally carries a head-bearing per-tier
+    # spec: its sensors stream CNN logits every deadline, digest-chained
+    # into the same bitwise oracle gate as the surfaces
     print("\nQoS tiers (gesture preempts telemetry, step budget 8):")
+    import dataclasses
+
     feeds = rp.mixed_scene_feeds(H, W, DURATION, 4, seed=5, tiered=True)
+    gesture_spec = rs.ReadoutSpec(surface=rs.surface(), logits=head)
+    for f in feeds:
+        if f.qos.tier == "gesture":
+            f.qos = dataclasses.replace(f.qos, spec=gesture_spec)
     scfg = StreamConfig(policy="drop_oldest", queue_capacity=1 << 15,
                         deadline_s=WINDOW_S, step_chunk_budget=8)
     # warmup on a throwaway engine: jit-compiles the QoS section's

@@ -19,6 +19,9 @@ the exact coalesced chunks each step dispatched.  ``oracle_digests``
 replays that log through a fresh engine with plain synchronous
 ``push`` + ``read`` + block per step; ``check_oracle`` asserts the
 pipelined runtime produced bitwise-identical products at every deadline.
+The digests cover every product of every spec a step served — stage-1
+head outputs (classifier logits, denoise labels) included, so a
+model-serving tier is gated bitwise end to end, not just its surfaces.
 Pipelining and coalescing may only move *when* work happens — never what
 it computes.
 """

@@ -78,6 +78,30 @@ def ts_wrapped_read_ref(stored, t_read, tau, n_bits=16, tick=1e-3):
     return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
 
 
+def classify_ref(params, surfaces):
+    """Oracle for the ``classify`` head product: plain-XLA stack ->
+    ``cnn_apply`` logits, with no barrier and no fusion into a spec
+    program.
+
+    ``surfaces``: K pool reads, each (S, P, H, W) — the head's inputs in
+    spec order.  The channel stacking is restated inline (k-th input's
+    polarities at channels [k*P, (k+1)*P)) rather than imported from the
+    frontend, so this checks the served layout too; the conv/pool/GAP
+    math *is* ``models.cnn.cnn_apply`` — "plain XLA" is the contract,
+    not an independent convolution.
+    """
+    from repro.models.cnn import cnn_apply   # deferred: keep ref leaf-light
+
+    x = jnp.concatenate([jnp.asarray(s) for s in surfaces], axis=1)
+    return cnn_apply(params, jnp.moveaxis(x, 1, -1))
+
+
+def denoise_ref(support, threshold):
+    """Oracle for the ``denoise`` head product: per-pixel label map from
+    an STCF support read (True = signal, the paper's denoise verdict)."""
+    return jnp.asarray(support) >= threshold
+
+
 def decay_scan_ref(a, x, s0=None):
     """Oracle for kernels.decay_scan: s_t = a_t*s_{t-1} + x_t via lax.scan.
 

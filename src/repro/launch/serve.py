@@ -21,6 +21,12 @@ Three modes behind one entrypoint:
         --policy drop_oldest --queue 4096 --churn     # overload + churn
     PYTHONPATH=src python -m repro.launch.serve stream --speed 1.0 \
         # paced at real time (0 = as fast as possible)
+    PYTHONPATH=src python -m repro.launch.serve sensors --classify 10 \
+        # stage-1 model heads (CNN logits + denoise labels) fused into
+        # the same dispatch as the surface products
+    PYTHONPATH=src python -m repro.launch.serve stream --tiers --classify 4 \
+        # per-tier model serving: the gesture tier streams logits,
+        # digest-chained and gated by the bitwise replay oracle
 """
 from __future__ import annotations
 
@@ -79,10 +85,16 @@ def run_sensors(args) -> None:
         mesh = mesh_mod.make_host_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} over "
               f"{[d.platform for d in mesh.devices.ravel()][0]} devices")
-    # one declarative spec, four products in one fused dispatch: decayed
-    # surface, comparator mask, STCF support map, saturating event count
-    spec = rs.ReadoutSpec(surface=rs.surface(), mask=rs.mask(),
-                          stcf=rs.stcf(), count=rs.count(4))
+    # one declarative spec in one fused dispatch: decayed surface,
+    # comparator mask, STCF support map, saturating event count — and,
+    # with --classify, the stage-1 model heads (CNN logits over the
+    # surface, STCF-thresholded denoise labels) in the same program
+    products = dict(surface=rs.surface(), mask=rs.mask(),
+                    stcf=rs.stcf(), count=rs.count(4))
+    if args.classify:
+        products["logits"] = rs.classify(n_classes=args.classify, width=16)
+        products["labels"] = rs.denoise()
+    spec = rs.ReadoutSpec(**products)
     cfg = TSEngineConfig(
         h=h, w=w, n_slots=args.slots, chunk_capacity=args.chunk,
         mode=args.mode, backend=args.backend, specs=(spec,),
@@ -154,6 +166,12 @@ def run_sensors(args) -> None:
               f"{unit}, window occupancy {occ:.4f}, "
               f"active pixels {int(np.asarray(view['count'] > 0).sum())}, "
               f"events ingested {stats['n_events'][cam.slot]}")
+        if "logits" in spec:
+            lg = np.asarray(view["logits"])
+            kept = float(np.asarray(view["labels"]).mean())
+            print(f"          logits argmax {int(lg.argmax())} "
+                  f"({np.array2string(lg, precision=3)}), "
+                  f"denoise keep rate {kept:.4f}")
 
 
 def run_stream(args) -> None:
@@ -184,6 +202,22 @@ def run_stream(args) -> None:
     feeds = rp.mixed_scene_feeds(h, w, args.duration, args.sensors,
                                  seed=args.seed, churn=args.churn,
                                  tiered=args.tiers)
+    spec = rs.SURFACE_SPEC
+    if args.classify:
+        head_spec = rs.ReadoutSpec(
+            surface=rs.surface(),
+            logits=rs.classify(n_classes=args.classify, width=16),
+        )
+        if args.tiers:
+            # per-tier model serving: the gesture tier carries the
+            # head-bearing spec; telemetry keeps the plain surface
+            import dataclasses
+
+            for f in feeds:
+                if f.qos.tier == "gesture":
+                    f.qos = dataclasses.replace(f.qos, spec=head_spec)
+        else:
+            spec = head_spec
     for i, f in enumerate(feeds):
         detach = f"{f.detach_t * 1e3:.0f}ms" if f.detach_t else "end"
         tier = f" [{f.qos.tier} p{f.qos.priority}]" if args.tiers else ""
@@ -198,11 +232,18 @@ def run_stream(args) -> None:
         # first-deadline compiles (paced runs skip it: they want the
         # honest cold-start timeline)
         rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), feeds, scfg,
-                  rs.SURFACE_SPEC, arrival_substeps=args.substeps)
-    report = rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), feeds, scfg,
-                       rs.SURFACE_SPEC, speed=args.speed,
+                  spec, arrival_substeps=args.substeps)
+    eng = TimeSurfaceEngine(cfg, mesh=mesh)
+    report = rp.replay(eng, feeds, scfg, spec, speed=args.speed,
                        arrival_substeps=args.substeps)
     print(report.summary())
+    if args.classify:
+        # the engine retains the final deadline's state: sample the
+        # served logits (per-tier spec under --tiers, default otherwise)
+        out = eng.read(head_spec, report.n_steps * scfg.deadline_s)
+        lg = np.asarray(out["logits"])
+        print("classify logits argmax per slot: "
+              f"{lg.argmax(axis=-1).tolist()}")
     if args.tiers:
         # the QoS table README quotes: one row per tier, SLO verdict last
         print(f"{'tier':>10s} {'offered':>9s} {'ingested':>9s} "
@@ -220,10 +261,11 @@ def run_stream(args) -> None:
                   f"{p99s:>10s} {slos:>8s}  {verdict}")
     if not args.no_oracle:
         n = rp.check_oracle(
-            report, lambda: TimeSurfaceEngine(cfg, mesh=mesh),
-            rs.SURFACE_SPEC,
+            report, lambda: TimeSurfaceEngine(cfg, mesh=mesh), spec,
         )
-        print(f"bitwise oracle gate: OK over {n} deadlines")
+        print(f"bitwise oracle gate: OK over {n} deadlines "
+              "(head logits digest-chained)" if args.classify else
+              f"bitwise oracle gate: OK over {n} deadlines")
 
 
 def main() -> None:
@@ -249,6 +291,10 @@ def main() -> None:
     sp.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="shard the slot pool over an N-device mesh "
                          "(CPU: emulated host devices via XLA_FLAGS)")
+    sp.add_argument("--classify", type=int, default=0, metavar="C",
+                    help="serve stage-1 model heads in the same fused "
+                         "dispatch: C-class CNN logits over the surface "
+                         "plus STCF denoise labels (0 disables)")
     sp.add_argument("--bursts", type=int, default=4, metavar="B",
                     help="fused-path demo: stream each sensor in B bursts "
                          "through the fused serve_step at one frame deadline "
@@ -288,6 +334,11 @@ def main() -> None:
                     default=None)
     st.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="shard the slot pool over an N-device mesh")
+    st.add_argument("--classify", type=int, default=0, metavar="C",
+                    help="stream C-class CNN logits: with --tiers the "
+                         "gesture tier carries the head-bearing spec, "
+                         "otherwise every deadline serves it "
+                         "(0 disables)")
     st.add_argument("--seed", type=int, default=0)
     st.add_argument("--no-oracle", action="store_true",
                     help="skip the synchronous bitwise oracle gate")

@@ -9,7 +9,7 @@ examples/train_event_classifier.py.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +63,22 @@ def event_ts_frontend(
     emb = jnp.einsum("bne,ed->bnd", x.astype(params["proj"].dtype), params["proj"])
     n = min(emb.shape[1], params["pos"].shape[0])
     return (emb[:, :n] + params["pos"][None, :n]).astype(cfg.activation_dtype)
+
+
+def ts_stack_frontend(surfaces: Sequence[jax.Array]) -> jax.Array:
+    """K decayed surfaces -> one NHWC stack for a conv head.
+
+    The vision-head sibling of ``event_ts_frontend``: where the LM
+    frontend patches one surface into token embeddings, this one stacks
+    K surface reads (K decay profiles off the same SAE — the
+    multi-timescale representation the ROADMAP names) into the channel
+    axis a ``models.cnn.cnn_apply`` head consumes.
+
+    Each surface is a (S, P, H, W) pool read; output is (S, H, W, K*P)
+    float32 with the k-th surface's polarities at channels
+    ``[k*P, (k+1)*P)``.  Pure layout — no arithmetic — so the stacked
+    channels hold exactly the bits the surface products were read with.
+    """
+    x = jnp.stack(list(surfaces), axis=1)          # (S, K, P, H, W)
+    s, k, p, h, w = x.shape
+    return jnp.moveaxis(x.reshape(s, k * p, h, w), 1, -1)

@@ -14,7 +14,10 @@ verbs plus the declarative spec from ``serve.spec``:
 Reads are per-sensor views of the engine's pool-wide dispatch: one
 compiled program per unique spec serves *every* session, so a thousand
 sensors reading the same spec share one jit cache entry (the spec is the
-cache key, like ``backend``).  Sessions are also context managers::
+cache key, like ``backend``).  Head products index like any other:
+``session.read(spec, t)["logits"]`` is this sensor's logits row of the
+pool-wide ``(S, n_classes)`` head output, served by the same fused
+program as its surfaces.  Sessions are also context managers::
 
     with engine.attach() as cam:
         cam.push(events)

@@ -1,0 +1,98 @@
+"""Stage-1 head weights: how a ``Classify`` product finds its params.
+
+A head descriptor in a ``ReadoutSpec`` is *static* — part of the jit
+cache key — so it cannot carry arrays.  It carries a ``weights`` key
+instead, and this module resolves the key to a concrete param pytree
+once per engine (the engine caches the resolution next to the spec's
+decay params; the arrays are then **traced arguments** of the fused
+read, never baked into the program, same bit-identity rule the decay
+params follow).
+
+Resolution order for ``Classify(weights=key)``:
+
+  1. the in-process registry (``register_head_params``) — tests, demos,
+     and freshly trained weights publish here;
+  2. a ``checkpoint.Checkpointer`` directory: if ``key`` is a path with
+     saved steps, the latest step restores against the head's abstract
+     param template (shape/dtype checked leaf by leaf);
+  3. the ``"default"`` key self-initializes deterministically (seeded by
+     the head's geometry), so every consumer — engine, sharded plan,
+     replay oracle, ref-backend oracle — resolves bitwise-identical
+     arrays and head outputs stay bitwise reproducible.
+
+Any other unresolvable key raises ``KeyError`` at resolution time (the
+first read), never silently serving random logits.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Dict
+
+import jax
+
+from repro.models import cnn
+from repro.models.module import abstract_params, init_params
+
+#: process-wide weights registry: key -> param pytree
+_REGISTRY: Dict[str, object] = {}
+
+
+def register_head_params(key: str, params) -> None:
+    """Publish a param pytree under ``key`` for ``Classify(weights=key)``
+    specs to resolve against (overwrites an earlier registration)."""
+    _REGISTRY[key] = params
+
+
+def clear_registry() -> None:
+    """Drop every registered key (test isolation helper)."""
+    _REGISTRY.clear()
+
+
+def head_param_defs(head, cfg) -> dict:
+    """ParamDef tree for one ``Classify`` head under engine config
+    ``cfg``: the CNN's input channels are the head's K stacked surface
+    inputs times the engine's polarity planes (the
+    ``ts_stack_frontend`` layout)."""
+    return cnn.cnn_defs(len(head.inputs) * cfg.polarities,
+                        head.n_classes, width=head.width)
+
+
+def _checkpoint_params(head, cfg, directory: str):
+    from repro.checkpoint.ckpt import Checkpointer
+
+    ckpt = Checkpointer(directory)
+    if ckpt.latest_step() is None:
+        return None
+    template = abstract_params(head_param_defs(head, cfg))
+    params, _ = ckpt.restore(template)
+    return params
+
+
+def resolve_head_params(head, cfg):
+    """Resolve one ``Classify`` head's weights key to a param pytree
+    (see the module docstring for the resolution order)."""
+    params = _REGISTRY.get(head.weights)
+    if params is not None:
+        return params
+    if os.path.isdir(head.weights):
+        params = _checkpoint_params(head, cfg, head.weights)
+        if params is not None:
+            _REGISTRY[head.weights] = params
+            return params
+    if head.weights == "default":
+        # deterministic self-init, seeded by the head geometry so two
+        # heads with different shapes never share a key stream; NOT
+        # cached under the bare "default" key (several geometries may
+        # share it) — re-resolving re-derives bitwise-identical arrays
+        seed = zlib.crc32(
+            f"{len(head.inputs)}:{cfg.polarities}:"
+            f"{head.n_classes}:{head.width}".encode()
+        )
+        return init_params(head_param_defs(head, cfg),
+                           jax.random.PRNGKey(seed))
+    raise KeyError(
+        f"Classify weights key {head.weights!r} is neither registered "
+        "(serve.heads.register_head_params) nor a checkpoint directory "
+        "with saved steps"
+    )

@@ -11,7 +11,9 @@ the spec is part of the jit cache key, so reading the same spec twice
 never retraces, and every product in a composed spec comes out of the
 same compiled program over the same slot-pool state snapshot.
 
-Products (each a frozen, hashable descriptor; construct via the helpers)::
+Specs form a **two-stage product graph**.  Stage-0 *surface products*
+read off the pool state (each a frozen, hashable descriptor; construct
+via the helpers)::
 
     surface(...)       decayed time surface (the classic TS readout)
     mask(...)          comparator mask V > V_tw (denoiser front end)
@@ -21,22 +23,49 @@ Products (each a frozen, hashable descriptor; construct via the helpers)::
     sae_raw()          raw last-timestamp surface (-inf = never) [21, 36]
     ts_quantized(...)  TS from n_T-bit wrapping timestamps  [ref 26]
 
-Compose them by name — one call, one dispatch, several products::
+Stage-1 *head products* consume stage-0 products **by name** inside the
+same fused dispatch — the spec serves answers, not just arrays::
 
-    spec = ReadoutSpec(surface=surface(), stcf=stcf(), count=count(4))
-    out = session.read(spec, t_now)      # {"surface": ..., "stcf": ...}
+    classify(inputs, weights, ...)   CNN class logits over a stack of
+                                     surface products (the paper's
+                                     GoogLeNet-on-TS task, Sec. IV-D)
+    denoise(input, threshold)        STCF-thresholded event-label map
+                                     (the paper's denoise verdicts)
+
+Compose them by name — one call, one dispatch, surfaces and answers::
+
+    spec = ReadoutSpec(surface=surface(), stcf=stcf(),
+                       logits=classify(inputs=("surface",)),
+                       labels=denoise(input="stcf"))
+    out = session.read(spec, t_now)   # {"surface":..., "logits":...}
+
+A head's inputs must name stage-0 products *of the right family* in the
+same spec (``classify`` eats ``surface()`` products, ``denoise`` eats a
+``stcf()``); the constructor validates the wiring, so a malformed graph
+never reaches tracing.  ``compile_spec`` plans a spec into its staged
+form (stage-0 sub-spec + head list + static thresholds); the engine
+compiles **one fused batched dispatch per unique spec** with the heads
+inlined behind an ``optimization_barrier`` over their inputs.
 
 ``count`` is the only product needing extra device state (a per-slot
 counter plane); the engine materializes it only when its config declares
 a spec that asks for it (``TSEngineConfig.specs``).  Everything else
-reads off the SAE the pool already carries.
+reads off the SAE the pool already carries.  ``classify`` weights are
+resolved by *static key* (``serve.heads``: registry / checkpoint
+directory / deterministic default) and enter the fused program as traced
+arguments, never baked constants.
 
 Bit-identity contract: the ``surface()`` product of *any* spec is
 bit-identical to a standalone ``kernels.ops.ts_decay`` dispatch on the
 same state — products are independent subgraphs sharing only the SAE
 input, so composing them cannot re-contract the decay math (gated by
 ``tests/test_kernel_equivalence.py::check_spec_read_bitwise`` and the
-engine differential suite).
+engine differential suite).  Heads extend the contract: every head
+input passes through an ``optimization_barrier`` before the head
+consumes it, so (a) adding a head to a spec cannot re-contract the
+stage-0 math it reads, and (b) the fused in-dispatch head output is
+bitwise the standalone head applied to the served stage-0 products
+(gated by ``check_spec_head_bitwise`` and the stream-oracle tests).
 """
 from __future__ import annotations
 
@@ -47,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import edram
 from repro.core import representations as representations_mod
 from repro.core import stcf as stcf_mod
@@ -54,8 +84,10 @@ from repro.kernels import ops
 
 __all__ = [
     "ReadoutSpec", "Surface", "Mask", "Stcf", "Count", "Ebbi", "SaeRaw",
-    "TsQuantized", "surface", "mask", "stcf", "count", "ebbi", "sae_raw",
-    "ts_quantized", "SURFACE_SPEC", "needs_counts",
+    "TsQuantized", "Classify", "Denoise", "surface", "mask", "stcf",
+    "count", "ebbi", "sae_raw", "ts_quantized", "classify", "denoise",
+    "SURFACE_SPEC", "needs_counts", "CompiledSpec", "compile_spec",
+    "read_compiled", "read_stage0", "apply_heads", "read_products",
 ]
 
 
@@ -135,7 +167,59 @@ class TsQuantized:
     tau: Optional[float] = None
 
 
-_PRODUCT_TYPES = (Surface, Mask, Stcf, Count, Ebbi, SaeRaw, TsQuantized)
+_STAGE0_TYPES = (Surface, Mask, Stcf, Count, Ebbi, SaeRaw, TsQuantized)
+
+
+# ----------------------------------------------------------------------------
+# stage-1 head products: consume stage-0 products by name, serve answers
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Classify:
+    """CNN class logits over a stack of surface products (stage-1 head).
+
+    ``inputs`` names ``Surface`` products of the same spec, stacked into
+    the channel axis (``models.frontends.ts_stack_frontend``) and fed to
+    ``models.cnn.cnn_apply`` — K inputs with different decay profiles
+    form the multi-timescale representation.  ``weights`` is a *static*
+    key resolved to a param pytree by ``serve.heads`` (registry /
+    checkpoint directory / deterministic ``"default"``); the params ride
+    the fused dispatch as traced arguments.
+    """
+
+    inputs: Tuple[str, ...] = ("surface",)
+    weights: str = "default"
+    n_classes: int = 10
+    width: int = 32
+
+    def __post_init__(self):
+        if isinstance(self.inputs, str):
+            raise TypeError(
+                f"Classify inputs must be a tuple of product names, got "
+                f"the bare string {self.inputs!r} (write "
+                f"inputs=({self.inputs!r},))"
+            )
+        object.__setattr__(self, "inputs", tuple(self.inputs))
+        if not self.inputs:
+            raise ValueError("Classify needs at least one input product")
+
+
+@dataclasses.dataclass(frozen=True)
+class Denoise:
+    """STCF-thresholded event-label map (stage-1 head): True where the
+    named ``Stcf`` product's patch support reaches ``threshold``
+    (``None`` = the engine's ``stcf_threshold``) — the paper's denoise
+    verdict as a servable per-pixel bool plane."""
+
+    input: str = "stcf"
+    threshold: Optional[int] = None
+
+
+_HEAD_TYPES = (Classify, Denoise)
+_PRODUCT_TYPES = _STAGE0_TYPES + _HEAD_TYPES
+
+#: which stage-0 family each head's inputs must come from
+_HEAD_INPUT_TYPES = {Classify: Surface, Denoise: Stcf}
 
 # lowercase helpers: the constructor surface users actually type
 surface = Surface
@@ -145,6 +229,8 @@ count = Count
 ebbi = Ebbi
 sae_raw = SaeRaw
 ts_quantized = TsQuantized
+classify = Classify
+denoise = Denoise
 
 
 # ----------------------------------------------------------------------------
@@ -177,6 +263,25 @@ class ReadoutSpec:
                     f"product {name!r} must be one of "
                     f"{[t.__name__ for t in _PRODUCT_TYPES]}, got {p!r}"
                 )
+        for name, p in products.items():   # head wiring: validated here,
+            if not isinstance(p, _HEAD_TYPES):   # before any tracing
+                continue
+            want = _HEAD_INPUT_TYPES[type(p)]
+            inputs = p.inputs if isinstance(p, Classify) else (p.input,)
+            for inp in inputs:
+                got = products.get(inp)
+                if got is None:
+                    raise ValueError(
+                        f"head {name!r} consumes product {inp!r}, which "
+                        f"this spec does not define"
+                    )
+                if not isinstance(got, want):
+                    raise ValueError(
+                        f"head {name!r} needs a {want.__name__} product "
+                        f"for input {inp!r}, got "
+                        f"{type(got).__name__} (heads cannot consume "
+                        "other heads)"
+                    )
         object.__setattr__(self, "products",
                            tuple(sorted(products.items())))
         object.__setattr__(self, "_hash", hash(self.products))
@@ -211,6 +316,23 @@ class ReadoutSpec:
     def surface_products(self) -> Tuple[Tuple[str, Surface], ...]:
         return tuple((n, p) for n, p in self.products
                      if isinstance(p, Surface))
+
+    def head_products(self) -> Tuple[Tuple[str, object], ...]:
+        """The (name, head) pairs of this spec's stage-1 products."""
+        return tuple((n, p) for n, p in self.products
+                     if isinstance(p, _HEAD_TYPES))
+
+    @property
+    def has_heads(self) -> bool:
+        return any(isinstance(p, _HEAD_TYPES) for _, p in self.products)
+
+    def stage0(self) -> "ReadoutSpec":
+        """The stage-0 sub-spec: this spec minus its heads.  Equal specs
+        share equal stage-0 sub-specs, which is what lets ``read_many``
+        batch head-bearing tiers onto one surface dispatch."""
+        s0 = {n: p for n, p in self.products
+              if not isinstance(p, _HEAD_TYPES)}
+        return self if len(s0) == len(self.products) else ReadoutSpec(**s0)
 
 
 #: the spec behind the classic ``readout``: one decayed surface, engine decay
@@ -298,17 +420,60 @@ def resolve_dynamic(spec: ReadoutSpec, cfg) -> Dict[str, edram.DecayParams]:
     return dyn
 
 
-def read_products(
+# ----------------------------------------------------------------------------
+# compile pass: one spec -> its staged plan
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSpec:
+    """The staged plan of one spec under one engine config (hashable —
+    every field is static — so it can travel inside jit cache keys).
+
+    ``stage0`` is the spec minus its heads (``spec`` itself when there
+    are none — heads-free specs plan to themselves, value-identically to
+    the flat system this replaced); ``heads`` lists the stage-1 products
+    in canonical (sorted-name) order; ``statics`` carries the host-
+    resolved comparator thresholds of the stage-0 window products.
+    """
+
+    spec: ReadoutSpec
+    stage0: ReadoutSpec
+    heads: Tuple[Tuple[str, object], ...]
+    statics: Tuple[Tuple[str, float], ...]
+
+    @property
+    def has_heads(self) -> bool:
+        return bool(self.heads)
+
+
+def compile_spec(spec: ReadoutSpec, cfg) -> CompiledSpec:
+    """Plan ``spec`` as a two-stage product graph under engine config
+    ``cfg``: split stage-0 products from heads and resolve the static
+    thresholds.  Head input wiring was validated at spec construction;
+    this pass is where per-config resolution (thresholds; later,
+    anything shape-dependent) happens.  Equal (spec, cfg) pairs compile
+    to equal plans, preserving the spec-is-the-jit-cache-key property.
+    """
+    return CompiledSpec(
+        spec=spec,
+        stage0=spec.stage0(),
+        heads=spec.head_products(),
+        statics=resolve_static(spec, cfg),
+    )
+
+
+def read_stage0(
     sae: jax.Array,                        # (S, P, H, W) slot-pool SAE
     counts,                                # (S, H, W) int32 or None
     t_now,
     dynamic: Dict[str, edram.DecayParams],  # traced, from resolve_dynamic
-    spec: ReadoutSpec,                     # static
+    spec: ReadoutSpec,                     # static — stage-0 products only
     cfg,                                   # static (TSEngineConfig)
     backend: str,                          # static, pre-resolved
     statics: Tuple[Tuple[str, float], ...] = (),  # from resolve_static
 ) -> Dict[str, jax.Array]:
-    """Trace-time body of one spec read: every product from one program.
+    """Trace-time body of the stage-0 pass: every surface product from
+    one program.
 
     Called under jit (single-device) or shard_map (device-parallel) with
     ``spec``/``cfg``/``backend``/``statics`` static.  Each product
@@ -354,3 +519,105 @@ def read_products(
         else:  # pragma: no cover — closed by the constructor type check
             raise TypeError(p)
     return out
+
+
+def apply_heads(
+    stage0_out: Dict[str, jax.Array],      # the served stage-0 products
+    head_params,                           # {head name: params} or None
+    compiled: CompiledSpec,                # static plan
+    cfg,                                   # static (TSEngineConfig)
+) -> Dict[str, jax.Array]:
+    """Trace-time body of the stage-1 pass: every head off the served
+    stage-0 products.
+
+    Each head input crosses an ``optimization_barrier`` first, which is
+    what makes the staged contract hold *by construction*: XLA cannot
+    fuse a head into the stage-0 subgraph it reads (so stage-0 bits
+    match a heads-free read of the same products), and the head subgraph
+    consumes exactly the barriered values (so the fused in-dispatch
+    output is bitwise the standalone head applied to the read arrays —
+    the same program, traced from the same jaxpr).  Shard-safe: logits
+    and label maps lead with the slot axis and every op is per-slot, so
+    the sharded plan runs this body shard-locally with zero collectives.
+    """
+    head_params = head_params or {}
+    out: Dict[str, jax.Array] = {}
+    for name, h in compiled.heads:
+        if isinstance(h, Classify):
+            from repro.models import cnn
+            from repro.models.frontends import ts_stack_frontend
+
+            stack = ts_stack_frontend(
+                [compat.optimization_barrier(stage0_out[n])
+                 for n in h.inputs]
+            )
+            out[name] = cnn.cnn_apply(head_params[name], stack)
+        elif isinstance(h, Denoise):
+            thr = (h.threshold if h.threshold is not None
+                   else cfg.stcf_threshold)
+            sup = compat.optimization_barrier(stage0_out[h.input])
+            out[name] = sup >= thr
+        else:  # pragma: no cover — closed by the constructor type check
+            raise TypeError(h)
+    return out
+
+
+def read_compiled(
+    sae: jax.Array,
+    counts,
+    t_now,
+    dynamic: Dict[str, edram.DecayParams],
+    compiled: CompiledSpec,                # static plan from compile_spec
+    cfg,
+    backend: str,
+    head_params=None,                      # {head name: params}, traced
+) -> Dict[str, jax.Array]:
+    """Trace-time body of one staged spec read: stage-0 products, then
+    heads over them, all in one program, returned in the spec's
+    canonical name order."""
+    out = read_stage0(sae, counts, t_now, dynamic, compiled.stage0, cfg,
+                      backend, compiled.statics)
+    if compiled.heads:
+        out.update(apply_heads(out, head_params, compiled, cfg))
+    return {name: out[name] for name in compiled.spec.names}
+
+
+_read_products_warned = False
+
+
+def read_products(
+    sae: jax.Array,
+    counts,
+    t_now,
+    dynamic: Dict[str, edram.DecayParams],
+    spec: ReadoutSpec,
+    cfg,
+    backend: str,
+    statics: Tuple[Tuple[str, float], ...] = (),
+    head_params=None,
+) -> Dict[str, jax.Array]:
+    """Deprecated flat-spec entry (one release of grace): use
+    ``compile_spec`` + ``read_compiled``.
+
+    Value-identical to the staged path — it *is* the staged path, called
+    through a plan compiled on the spot (``statics`` is accepted for the
+    old signature's sake and must match ``resolve_static``'s output when
+    given).  Warns once per process.
+    """
+    global _read_products_warned
+    if not _read_products_warned:
+        _read_products_warned = True
+        import warnings
+
+        warnings.warn(
+            "serve.spec.read_products() is deprecated; plan the spec "
+            "with compile_spec(spec, cfg) and call read_compiled()",
+            DeprecationWarning, stacklevel=2,
+        )
+    # plan built from the given statics (not compile_spec) so the shim
+    # stays traceable exactly where the old flat body was
+    compiled = CompiledSpec(spec=spec, stage0=spec.stage0(),
+                            heads=spec.head_products(),
+                            statics=tuple(statics))
+    return read_compiled(sae, counts, t_now, dynamic, compiled, cfg,
+                         backend, head_params)

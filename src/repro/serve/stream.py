@@ -23,7 +23,12 @@ Three layers, all deterministic given the event timestamps::
 *period* (``period_s``; ``None`` inherits the runtime deadline), a p99
 readout-latency SLO budget (``slo_p99_s``), a declared event rate for
 admission control (``rate_hint``), and optionally its own
-``ReadoutSpec``.  The runtime keeps one *deadline stream* per sensor:
+``ReadoutSpec`` — including head-bearing specs, so a tier can stream
+stage-1 model outputs (CNN logits, denoise labels) every deadline; head
+products digest-chain exactly like surfaces, the engine's ``read_many``
+shares one stage-0 dispatch across tiers whose specs differ only in
+heads, and the replay oracle gates the logits bitwise.  The runtime
+keeps one *deadline stream* per sensor:
 deadlines at multiples of its period.  ``step(t)`` schedules the
 sensors whose next deadline has arrived in **EDF order** (earliest
 deadline first; ties break by priority, then slot) and coalesces

@@ -373,19 +373,49 @@ def read_spec_products(
     cfg: TSEngineConfig,
     backend: str,
     statics: Tuple[Tuple[str, float], ...] = (),
+    head_params=None,                  # {head name: params}, traced
 ) -> Dict[str, jax.Array]:
-    """One fused batched dispatch serving every product of ``spec``.
+    """One fused batched dispatch serving every product of ``spec`` —
+    stage-0 surface products and the stage-1 heads that consume them,
+    all in one program.
 
     ``spec`` (with ``cfg``/``backend``) is the jit cache key: the first
     read of a new spec traces once, every later read of an equal spec —
-    from any session — reuses the compiled entry.  Products are
+    from any session — reuses the compiled entry.  Stage-0 products are
     independent subgraphs over the shared pool state, each dispatching
     the same ``kernels.ops`` math its standalone predecessor ran, so the
-    ``surface`` product stays bit-identical to a standalone ``ts_decay``
-    (gated by the kernel-equivalence and engine-differential suites).
+    ``surface`` product stays bit-identical to a standalone ``ts_decay``;
+    heads read their inputs through an ``optimization_barrier``, so
+    inlining them cannot re-contract the stage-0 math and the fused
+    logits equal a standalone head over the read surfaces (gated by the
+    kernel-equivalence and engine-differential suites).  Head weights
+    (``head_params``) are traced arguments resolved from the spec's
+    static weights key by the engine — never baked constants.
     """
-    return spec_mod.read_products(sae, counts, t_now, dynamic, spec, cfg,
-                                  backend, statics)
+    # the plan is rebuilt from the static args rather than via
+    # compile_spec: resolving comparator thresholds is host math, and
+    # this body runs under trace — ``statics`` already carries them
+    compiled = spec_mod.CompiledSpec(
+        spec=spec, stage0=spec.stage0(), heads=spec.head_products(),
+        statics=tuple(statics),
+    )
+    return spec_mod.read_compiled(sae, counts, t_now, dynamic, compiled,
+                                  cfg, backend, head_params)
+
+
+@functools.partial(jax.jit, static_argnames=("compiled", "cfg"))
+def read_head_products(
+    stage0_out: Dict[str, jax.Array],  # the shared stage-0 pool read
+    head_params,                       # {head name: params}, traced
+    compiled: spec_mod.CompiledSpec,
+    cfg: TSEngineConfig,
+) -> Dict[str, jax.Array]:
+    """Stage-1-only dispatch: ``compiled``'s heads over an already-read
+    stage-0 product dict — the second half of ``read_many``'s shared-
+    stage-0 path.  Bitwise the fused in-dispatch heads: both trace the
+    same ``apply_heads`` body, whose ``optimization_barrier`` pins the
+    head subgraph to consume exactly the served stage-0 arrays."""
+    return spec_mod.apply_heads(stage0_out, head_params, compiled, cfg)
 
 
 def _read_refresh(
@@ -514,6 +544,7 @@ class _ShardPlan:
         self._spec_p, self._rep_p = spec, rep
         self._backend = backend
         self._spec_readers: Dict[spec_mod.ReadoutSpec, object] = {}
+        self._head_readers: Dict[spec_mod.ReadoutSpec, object] = {}
 
         # fused ingest->readout: scatter + dirty-tile refresh, all local.
         # The gather cap applies per shard (each shard counts only its own
@@ -562,11 +593,14 @@ class _ShardPlan:
     def spec_reader(self, rspec: spec_mod.ReadoutSpec):
         """The compiled pool-wide reader for one ReadoutSpec (cached).
 
-        Each product array leads with the slot axis, so the whole output
-        dict shards exactly like the pool; the spec body runs shard-local
-        (zero collectives), same as every other hot-path op here.  Two
-        layouts per spec never coexist: whether the counter plane is
-        materialized is fixed at engine construction.
+        Each product array leads with the slot axis — head logits
+        ``(S, n_classes)`` exactly like surface planes ``(S, P, H, W)``
+        — so the whole output dict shards like the pool; the staged spec
+        body (stage-0 products, then heads behind the barrier) runs
+        shard-local with zero collectives, same as every other hot-path
+        op here.  Head weights replicate (they are per-model, not
+        per-slot).  Two layouts per spec never coexist: whether the
+        counter plane is materialized is fixed at engine construction.
         """
         fn = self._spec_readers.get(rspec)
         if fn is not None:
@@ -576,24 +610,53 @@ class _ShardPlan:
         cfg, backend = self._cfg, self._backend
         p, rep = self._spec_p, self._rep_p
         out_specs = shd.slot_pool_out_specs(self.mesh, rspec.names)
-        statics = spec_mod.resolve_static(rspec, cfg)
+        compiled = spec_mod.compile_spec(rspec, cfg)
 
-        def local_with_counts(sae, counts, t_now, dynamic):
-            return spec_mod.read_products(sae, counts, t_now, dynamic,
-                                          rspec, cfg, backend, statics)
+        def local_with_counts(sae, counts, t_now, dynamic, head_params):
+            return spec_mod.read_compiled(sae, counts, t_now, dynamic,
+                                          compiled, cfg, backend,
+                                          head_params)
 
-        def local_no_counts(sae, t_now, dynamic):
-            return spec_mod.read_products(sae, None, t_now, dynamic,
-                                          rspec, cfg, backend, statics)
+        def local_no_counts(sae, t_now, dynamic, head_params):
+            return spec_mod.read_compiled(sae, None, t_now, dynamic,
+                                          compiled, cfg, backend,
+                                          head_params)
 
         if spec_mod.needs_counts(rspec):
             fn = jax.jit(self._smap(local_with_counts,
-                                    (p, p, rep, rep), out_specs))
+                                    (p, p, rep, rep, rep), out_specs))
         else:
             base = jax.jit(self._smap(local_no_counts,
-                                      (p, rep, rep), out_specs))
-            fn = lambda sae, counts, t_now, dynamic: base(sae, t_now, dynamic)
+                                      (p, rep, rep, rep), out_specs))
+            fn = (lambda sae, counts, t_now, dynamic, head_params:
+                  base(sae, t_now, dynamic, head_params))
         self._spec_readers[rspec] = fn
+        return fn
+
+    def head_reader(self, compiled: spec_mod.CompiledSpec):
+        """The compiled stage-1-only reader for one head-bearing spec
+        (cached): ``apply_heads`` under ``shard_map`` over an
+        already-read stage-0 product dict.  Inputs and head outputs all
+        lead with the slot axis and every head op is per-slot, so the
+        heads run shard-local; weights replicate.  The sharded leg of
+        ``read_many``'s shared-stage-0 path."""
+        fn = self._head_readers.get(compiled.spec)
+        if fn is not None:
+            return fn
+        from repro.distributed import sharding as shd
+
+        cfg = self._cfg
+        in_specs = shd.slot_pool_out_specs(self.mesh, compiled.stage0.names)
+        out_specs = shd.slot_pool_out_specs(
+            self.mesh, tuple(n for n, _ in compiled.heads)
+        )
+
+        def local(stage0_out, head_params):
+            return spec_mod.apply_heads(stage0_out, head_params,
+                                        compiled, cfg)
+
+        fn = jax.jit(self._smap(local, (in_specs, self._rep_p), out_specs))
+        self._head_readers[compiled.spec] = fn
         return fn
 
     def place(self, tree):
@@ -691,7 +754,9 @@ class TimeSurfaceEngine:
         # cache over.
         self._cache_t: Optional[float] = None
         self._cache_surface: Optional[Tuple[str, spec_mod.Surface]] = None
-        self._dynamic_cache: Dict[spec_mod.ReadoutSpec, dict] = {}
+        self._dynamic_cache: Dict[spec_mod.ReadoutSpec, tuple] = {}
+        self._compiled_cache: Dict[spec_mod.ReadoutSpec,
+                                   spec_mod.CompiledSpec] = {}
         # serve_step's spec minus its cached surface product, precomputed
         # per spec (the fused path is the per-burst hot loop)
         self._rest_cache: Dict[spec_mod.ReadoutSpec,
@@ -898,13 +963,38 @@ class TimeSurfaceEngine:
                 "TSEngineConfig.specs so init_state materializes it"
             )
 
+    def _compiled(self, spec: spec_mod.ReadoutSpec) -> spec_mod.CompiledSpec:
+        """The spec's staged plan under this engine's config (cached)."""
+        plan = self._compiled_cache.get(spec)
+        if plan is None:
+            plan = spec_mod.compile_spec(spec, self.cfg)
+            self._compiled_cache[spec] = plan
+        return plan
+
     def _resolved(self, spec: spec_mod.ReadoutSpec):
-        """Per-spec (traced decay params, static thresholds), host-
-        resolved once per engine and cached."""
+        """Per-spec (traced decay params, static thresholds, traced head
+        weights), host-resolved once per engine and cached.  Head
+        weights resolve from each ``classify`` head's static key through
+        ``serve.heads`` (registry / checkpoint / deterministic default)
+        — the resolution is host work; the arrays enter every dispatch
+        traced."""
         entry = self._dynamic_cache.get(spec)
         if entry is None:
+            head_params = None
+            classify_heads = [
+                (name, h) for name, h in self._compiled(spec).heads
+                if isinstance(h, spec_mod.Classify)
+            ]
+            if classify_heads:
+                from repro.serve import heads as heads_mod
+
+                head_params = {
+                    name: heads_mod.resolve_head_params(h, self.cfg)
+                    for name, h in classify_heads
+                }
             entry = (spec_mod.resolve_dynamic(spec, self.cfg),
-                     spec_mod.resolve_static(spec, self.cfg))
+                     spec_mod.resolve_static(spec, self.cfg),
+                     head_params)
             self._dynamic_cache[spec] = entry
         return entry
 
@@ -915,26 +1005,31 @@ class TimeSurfaceEngine:
     ) -> Dict[str, jax.Array]:
         """Read every product of ``spec`` over the whole pool at ``t_now``
         in **one fused batched dispatch** (the spec is the jit cache key;
-        an equal spec never retraces).  Product arrays lead with the slot
-        axis — ``n_slots_padded`` rows on a sharded engine; dead/free
-        slots read as never-written (zero surfaces, zero counts).
+        an equal spec never retraces) — stage-0 surface products and the
+        stage-1 heads consuming them come out of the same program.
+        Product arrays lead with the slot axis — ``n_slots_padded`` rows
+        on a sharded engine; dead/free slots read as never-written (zero
+        surfaces, zero counts, and whatever the heads make of zeros).
 
         The ``surface()`` product runs the same ``ts_decay`` math the
         offline ``time_surface.surface_read_kernel`` dispatches, so
         engine and offline readouts of equal SAE state stay bit-identical,
-        composed or not, sharded or not.
+        composed or not, sharded or not; head products are bitwise the
+        standalone head over the served stage-0 arrays (the
+        ``optimization_barrier`` contract in ``serve.spec``).
         """
         self._check_spec(spec)
-        dynamic, statics = self._resolved(spec)
+        dynamic, statics, head_params = self._resolved(spec)
         t = jnp.float32(t_now)
         if self._plan:
             fn = self._plan.spec_reader(spec)
-            out = fn(self.state.surfaces.sae, self.state.counts, t, dynamic)
+            out = fn(self.state.surfaces.sae, self.state.counts, t, dynamic,
+                     head_params)
         else:
             out = read_spec_products(
                 self.state.surfaces.sae, self.state.counts, t, dynamic,
                 spec=spec, cfg=self.cfg, backend=self._backend,
-                statics=statics,
+                statics=statics, head_params=head_params,
             )
         return dict(out)
 
@@ -949,18 +1044,50 @@ class TimeSurfaceEngine:
         different per-tier specs.
 
         Duplicate specs are deduped (order-preserving) so N sensors
-        sharing a spec cost exactly one fused dispatch; each unique
-        spec then runs the identical compiled program a plain ``read``
-        of that spec runs, so per-spec products are bit-identical to
-        reading the specs one at a time.  Dispatches stay async — the
-        caller syncs all specs' products with one
-        ``jax.block_until_ready`` (the streaming pipeline's single
-        host sync per deadline).
+        sharing a spec cost exactly one fused dispatch.  Specs that
+        share a **stage-0 sub-spec** (tiers differing only in heads, or
+        a head-bearing tier next to its plain-surface tier) share one
+        stage-0 surface dispatch: the group's stage-0 plan is read once,
+        and each member's heads dispatch over those arrays
+        (``read_head_products`` single-device, ``_ShardPlan.head_reader``
+        sharded).  Head outputs are bitwise the member's own fused
+        ``read`` — both trace the same barriered ``apply_heads`` body
+        over the same stage-0 bits — so sharing never shows in the
+        digests.  Singleton groups run the identical compiled program a
+        plain ``read`` runs.  Dispatches stay async — the caller syncs
+        all specs' products with one ``jax.block_until_ready`` (the
+        streaming pipeline's single host sync per deadline).
         """
+        uniq = list(dict.fromkeys(specs))
+        groups: Dict[spec_mod.ReadoutSpec,
+                     List[spec_mod.ReadoutSpec]] = {}
+        for sp in uniq:
+            self._check_spec(sp)
+            groups.setdefault(self._compiled(sp).stage0, []).append(sp)
         out: Dict[spec_mod.ReadoutSpec, Dict[str, jax.Array]] = {}
-        for spec in dict.fromkeys(specs):
-            out[spec] = self.read(spec, t_now)
-        return out
+        for stage0, members in groups.items():
+            if len(members) == 1:
+                out[members[0]] = self.read(members[0], t_now)
+                continue
+            base = self.read(stage0, t_now)   # one shared stage-0 dispatch
+            for sp in members:
+                compiled = self._compiled(sp)
+                if not compiled.has_heads:    # sp IS the stage-0 spec
+                    out[sp] = dict(base)
+                    continue
+                head_params = self._resolved(sp)[2]
+                inputs = {n: base[n] for n in compiled.stage0.names}
+                if self._plan:
+                    heads_out = self._plan.head_reader(compiled)(
+                        inputs, head_params
+                    )
+                else:
+                    heads_out = read_head_products(
+                        inputs, head_params, compiled=compiled, cfg=self.cfg
+                    )
+                merged = {**base, **heads_out}
+                out[sp] = {n: merged[n] for n in sp.names}
+        return {sp: out[sp] for sp in uniq}
 
     def serve_step(
         self,
@@ -992,10 +1119,13 @@ class TimeSurfaceEngine:
         no host sync).
         """
         self._check_spec(spec)
-        dynamic, _ = self._resolved(spec)
+        dynamic, _, _ = self._resolved(spec)
         surface_products = spec.surface_products()
-        if not surface_products:
-            # nothing cacheable: plain scatter, then one dense spec read
+        if not surface_products or self._compiled(spec).has_heads:
+            # nothing cacheable (no surface product), or a head-bearing
+            # spec (heads need every input dense and current, so the
+            # single-surface tile cache buys nothing): plain scatter,
+            # then the same fused staged read a plain ``read`` runs
             self._ingest_items(items)
             return self.read(spec, t_now)
 

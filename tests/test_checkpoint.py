@@ -1,0 +1,118 @@
+"""Unit tests for ``checkpoint.ckpt.Checkpointer``.
+
+The checkpointer now sits on the serving path (``serve.heads`` restores
+``Classify`` weights from a checkpoint directory), so its contracts get
+pinned directly: exact round-trips (including bf16-as-bits), step
+enumeration and retention, async writes, and loud failure on missing or
+damaged checkpoints — never silently serving wrong weights.
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "conv": {
+            "w": jnp.asarray(rng.standard_normal((3, 3, 2, 4)),
+                             jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(4), jnp.bfloat16),
+        },
+        "step_count": jnp.asarray(rng.integers(0, 99, (2,)), jnp.int32),
+    }
+
+
+def _template(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def _assert_tree_equal(got, want):
+    gl = jax.tree_util.tree_leaves(got)
+    wl = jax.tree_util.tree_leaves(want)
+    assert len(gl) == len(wl)
+    for g, w in zip(gl, wl):
+        assert g.dtype == w.dtype and g.shape == w.shape
+        # bf16 has no native numpy compare path: go through float32
+        np.testing.assert_array_equal(np.asarray(g, np.float32),
+                                      np.asarray(w, np.float32))
+
+
+def test_round_trip_exact(tmp_path):
+    tree = _tree()
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(5, tree, extra={"cursor": 123, "note": "x"})
+    got, extra = ckpt.restore(_template(tree))
+    _assert_tree_equal(got, tree)
+    assert extra == {"cursor": 123, "note": "x"}
+
+
+def test_step_selection_and_enumeration(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=10)
+    for step in (3, 1, 7):
+        ckpt.save(step, _tree(seed=step))
+    assert ckpt.all_steps() == [1, 3, 7]
+    assert ckpt.latest_step() == 7
+    got, _ = ckpt.restore(_template(_tree()), step=3)
+    _assert_tree_equal(got, _tree(seed=3))
+    got, _ = ckpt.restore(_template(_tree()))          # latest wins
+    _assert_tree_equal(got, _tree(seed=7))
+
+
+def test_retention_gc_keeps_newest(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+    for step in range(5):
+        ckpt.save(step, _tree(seed=step))
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_async_save_then_wait(tmp_path):
+    tree = _tree(seed=9)
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, tree, block=False)
+    ckpt.wait()
+    got, _ = ckpt.restore(_template(tree))
+    _assert_tree_equal(got, tree)
+
+
+def test_missing_checkpoint_is_loud(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    assert ckpt.latest_step() is None
+    with pytest.raises(AssertionError, match="no checkpoint found"):
+        ckpt.restore(_template(_tree()))
+
+
+def test_interrupted_write_is_invisible(tmp_path):
+    """A leftover step_N.tmp (crash mid-write) is never listed or
+    restored; the last complete checkpoint stays the latest."""
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, _tree(seed=1))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert ckpt.all_steps() == [1]
+    got, _ = ckpt.restore(_template(_tree()))
+    _assert_tree_equal(got, _tree(seed=1))
+
+
+def test_corrupt_leaf_and_shape_mismatch_raise(tmp_path):
+    tree = _tree(seed=2)
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, tree)
+    # template whose leaf shape disagrees with the stored array
+    bad = dict(tree, step_count=jnp.zeros((3,), jnp.int32))
+    with pytest.raises(AssertionError):
+        ckpt.restore(_template(bad))
+    # a deleted leaf file fails the restore instead of serving partial
+    step_dir = os.path.join(str(tmp_path), "step_00000001")
+    os.remove(os.path.join(step_dir, "conv__w.npy"))
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(_template(tree))
+    shutil.rmtree(step_dir)
+    with pytest.raises(AssertionError, match="no checkpoint found"):
+        ckpt.restore(_template(tree))

@@ -37,6 +37,7 @@ derandomized ``ci`` profile from ``conftest.py``).
 """
 import zlib
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -424,6 +425,53 @@ def check_spec_read_bitwise(rng):
                  ctx + " ebbi")
 
 
+def check_spec_head_bitwise(rng):
+    """The staged-product-graph acceptance gate at the ops level: a
+    spec-with-head fused dispatch serves logits / labels bit-identical
+    to the standalone ref oracles (``classify_ref`` / ``denoise_ref``)
+    applied to the *same dispatch's* stage-0 reads — per backend, on the
+    serving domain.  The ``optimization_barrier`` at the stage boundary
+    is what makes this a bitwise claim rather than a ULP one: fusing the
+    heads into the spec program cannot re-contract the surface math they
+    consume."""
+    from repro.serve import heads as heads_mod
+    from repro.serve import spec as rs
+    from repro.serve.ts_engine import TSEngineConfig, read_spec_products
+
+    h, w, block, _ = _rand_geometry(rng, SERVING_BLOCKS, max_h=48,
+                                    max_w=150)
+    t_now = float(rng.uniform(0.0, 0.1))
+    s = int(rng.integers(1, 4))
+    mode = "edram" if rng.random() < 0.5 else "ideal"
+    cfg = TSEngineConfig(h=h, w=w, n_slots=s, mode=mode,
+                         tau=float(rng.uniform(0.01, 0.1)), block=block)
+    head = rs.classify(inputs=("surface", "slow"),
+                       n_classes=int(rng.integers(2, 8)), width=8)
+    spec = rs.ReadoutSpec(
+        surface=rs.surface(),
+        slow=rs.surface(mode="ideal", tau=float(rng.uniform(0.1, 0.3))),
+        stcf=rs.stcf(),
+        logits=head,
+        labels=rs.denoise(),
+    )
+    sae = _rand_sae(rng, (s, 1, h, w))
+    dynamic = rs.resolve_dynamic(spec, cfg)
+    statics = rs.resolve_static(spec, cfg)
+    head_params = {"logits": heads_mod.resolve_head_params(head, cfg)}
+    for backend in ("interpret", "ref"):
+        out = read_spec_products(sae, None, jnp.float32(t_now), dynamic,
+                                 spec=spec, cfg=cfg, backend=backend,
+                                 statics=statics, head_params=head_params)
+        ctx = f"spec head h={h} w={w} block={block} mode={mode} ({backend})"
+        _bitwise(out["logits"],
+                 jax.jit(ref.classify_ref)(head_params["logits"],
+                                           [out["surface"], out["slow"]]),
+                 ctx + " logits vs classify_ref on served surfaces")
+        _bitwise(out["labels"],
+                 ref.denoise_ref(out["stcf"], cfg.stcf_threshold),
+                 ctx + " labels vs denoise_ref on served support")
+
+
 def check_decay_scan(rng):
     """Blocked scan vs lax.scan: allclose, not bitwise — the kernel
     reassociates the f32 recurrence at block boundaries (same contract
@@ -445,7 +493,8 @@ def check_decay_scan(rng):
 CHECKS = [check_serving_bitwise, check_ts_decay, check_ts_decay_with_mask,
           check_stcf_support, check_stcf_support_fused, check_ts_fused,
           check_ts_fused_dirty, check_ts_wrapped_read,
-          check_spec_read_bitwise, check_decay_scan]
+          check_spec_read_bitwise, check_spec_head_bitwise,
+          check_decay_scan]
 
 
 # ---------------------------------------------------------------------------

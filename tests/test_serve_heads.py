@@ -1,0 +1,296 @@
+"""Stage-1 head products: wiring validation, weight resolution, the
+fused surface→head dispatch, stage-0 sharing in ``read_many``, and the
+deprecated flat-spec shim.
+
+The recurring claim is *bitwise*: a head fused into a spec program
+serves exactly the bits the standalone head produces over the same
+stage-0 reads (the ``optimization_barrier`` contract in ``serve.spec``),
+so none of these assertions carry tolerances.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.events import datasets
+from repro.models import cnn
+from repro.models.frontends import ts_stack_frontend
+from repro.models.module import init_params
+from repro.serve import heads as heads_mod
+from repro.serve import spec as rs
+from repro.serve.api import pool_items
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 24, 32
+
+
+def _cfg(**kw):
+    base = dict(h=H, w=W, n_slots=3, chunk_capacity=256, mode="edram",
+                backend="interpret", block=(8, 16))
+    base.update(kw)
+    return TSEngineConfig(**base)
+
+
+def _stream(seed=0, duration=0.05):
+    return datasets.dnd21_like("hotel_bar", h=H, w=W, duration=duration,
+                               seed=seed)
+
+
+def _loaded_engine(seed=0, mesh=None, **kw):
+    """An engine with two busy slots and one never-written slot."""
+    eng = TimeSurfaceEngine(_cfg(**kw), mesh=mesh)
+    for k in range(2):
+        eng.attach().push(_stream(seed=seed + k))
+    return eng
+
+
+def _standalone_logits(params, surfaces):
+    """The standalone head: frontend stack + ``cnn_apply``, jitted as
+    its own program (what a user would run outside the engine)."""
+    fn = jax.jit(lambda p, ss: cnn.cnn_apply(p, ts_stack_frontend(ss)))
+    return np.asarray(fn(params, list(surfaces)))
+
+
+# ----------------------------------------------------------------------------
+# wiring validation: bad graphs die at spec construction, not at trace
+# ----------------------------------------------------------------------------
+
+def test_head_wiring_validated_at_construction():
+    with pytest.raises(ValueError, match="does not define"):
+        rs.ReadoutSpec(logits=rs.classify())          # no 'surface' product
+    with pytest.raises(ValueError, match="needs a Surface"):
+        rs.ReadoutSpec(surface=rs.stcf(), logits=rs.classify())
+    with pytest.raises(ValueError, match="needs a Stcf"):
+        rs.ReadoutSpec(stcf=rs.surface(), labels=rs.denoise())
+    with pytest.raises(ValueError, match="cannot consume"):
+        rs.ReadoutSpec(stcf=rs.stcf(), surface=rs.denoise(),
+                       logits=rs.classify())          # head eats a head
+    with pytest.raises(TypeError, match="bare string"):
+        rs.classify(inputs="surface")
+    with pytest.raises(ValueError, match="at least one input"):
+        rs.classify(inputs=())
+
+
+def test_stage0_subspec_and_head_introspection():
+    head_spec = rs.ReadoutSpec(surface=rs.surface(),
+                               logits=rs.classify(n_classes=3, width=8))
+    plain = rs.ReadoutSpec(surface=rs.surface())
+    assert head_spec.has_heads and not plain.has_heads
+    assert head_spec.stage0() == plain
+    assert plain.stage0() is plain                    # no-head fast path
+    assert [n for n, _ in head_spec.head_products()] == ["logits"]
+    # two specs differing only in heads share one stage-0 sub-spec: the
+    # key read_many groups on
+    other = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                           labels=rs.denoise())
+    assert other.stage0() == rs.ReadoutSpec(surface=rs.surface(),
+                                            stcf=rs.stcf())
+
+
+def test_compile_spec_plan():
+    cfg = _cfg()
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          logits=rs.classify(n_classes=3, width=8),
+                          labels=rs.denoise())
+    plan = rs.compile_spec(spec, cfg)
+    assert plan.spec == spec and plan.has_heads
+    assert plan.stage0 == rs.ReadoutSpec(surface=rs.surface(),
+                                         stcf=rs.stcf())
+    assert [n for n, _ in plan.heads] == ["labels", "logits"]
+    assert plan.statics == tuple(rs.resolve_static(spec, cfg))
+    assert hash(plan) == hash(rs.compile_spec(spec, cfg))  # jit-key safe
+
+
+# ----------------------------------------------------------------------------
+# the fused dispatch vs the standalone head
+# ----------------------------------------------------------------------------
+
+def test_fused_head_read_matches_standalone():
+    eng = _loaded_engine(seed=1)
+    head = rs.classify(n_classes=4, width=8)
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          logits=head, labels=rs.denoise())
+    out = eng.read(spec, 0.05)
+    assert out["logits"].shape == (3, 4)
+    assert np.asarray(out["labels"]).dtype == np.bool_
+    # fusing the heads did not perturb the stage-0 bits
+    base = eng.read(spec.stage0(), 0.05)
+    for name in ("surface", "stcf"):
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(base[name]), err_msg=name)
+    params = heads_mod.resolve_head_params(head, eng.cfg)
+    want = _standalone_logits(params, [base["surface"]])
+    assert (np.asarray(out["logits"]) == want).all()
+    assert (np.asarray(out["labels"])
+            == (np.asarray(base["stcf"]) >= eng.cfg.stcf_threshold)).all()
+
+
+def test_multi_timescale_classify_inputs():
+    """K surface inputs stack in spec-declared order into the channels."""
+    eng = _loaded_engine(seed=2)
+    head = rs.classify(inputs=("fast", "slow"), n_classes=3, width=8)
+    spec = rs.ReadoutSpec(fast=rs.surface(),
+                          slow=rs.surface(mode="ideal", tau=0.2),
+                          logits=head)
+    out = eng.read(spec, 0.05)
+    params = heads_mod.resolve_head_params(head, eng.cfg)
+    want = _standalone_logits(params, [out["fast"], out["slow"]])
+    assert (np.asarray(out["logits"]) == want).all()
+
+
+def test_denoise_threshold_override():
+    eng = _loaded_engine(seed=3)
+    spec = rs.ReadoutSpec(stcf=rs.stcf(), labels=rs.denoise(threshold=5))
+    out = eng.read(spec, 0.05)
+    sup = np.asarray(out["stcf"])
+    assert (np.asarray(out["labels"]) == (sup >= 5)).all()
+    assert sup.max() < 5 or np.asarray(out["labels"]).any()
+
+
+# ----------------------------------------------------------------------------
+# weight resolution: registry / checkpoint / deterministic default
+# ----------------------------------------------------------------------------
+
+def test_default_weights_deterministic_and_unknown_key_raises():
+    cfg = _cfg()
+    head = rs.classify(n_classes=3, width=8)
+    a = jax.tree_util.tree_leaves(heads_mod.resolve_head_params(head, cfg))
+    b = jax.tree_util.tree_leaves(heads_mod.resolve_head_params(head, cfg))
+    assert all((np.asarray(x) == np.asarray(y)).all()
+               for x, y in zip(a, b))
+    with pytest.raises(KeyError, match="neither registered"):
+        heads_mod.resolve_head_params(rs.classify(weights="no-such-key"),
+                                      cfg)
+
+
+def test_registered_weights_are_served():
+    cfg = _cfg()
+    head = rs.classify(weights="trained-v1", n_classes=2, width=8)
+    params = init_params(heads_mod.head_param_defs(head, cfg),
+                         jax.random.PRNGKey(0))
+    heads_mod.register_head_params("trained-v1", params)
+    try:
+        eng = _loaded_engine(seed=4)
+        out = eng.read(rs.ReadoutSpec(surface=rs.surface(), logits=head),
+                       0.05)
+        base = eng.read(rs.SURFACE_SPEC, 0.05)
+        want = _standalone_logits(params, [base["surface"]])
+        assert (np.asarray(out["logits"]) == want).all()
+    finally:
+        heads_mod.clear_registry()
+
+
+def test_checkpoint_weights_resolve(tmp_path):
+    cfg = _cfg()
+    head = rs.classify(weights=str(tmp_path), n_classes=3, width=8)
+    params = init_params(heads_mod.head_param_defs(head, cfg),
+                         jax.random.PRNGKey(7))
+    Checkpointer(str(tmp_path)).save(11, params)
+    try:
+        eng = _loaded_engine(seed=5)
+        out = eng.read(rs.ReadoutSpec(surface=rs.surface(), logits=head),
+                       0.05)
+        base = eng.read(rs.SURFACE_SPEC, 0.05)
+        want = _standalone_logits(params, [base["surface"]])
+        assert (np.asarray(out["logits"]) == want).all()
+    finally:
+        heads_mod.clear_registry()      # the directory key got cached
+
+
+def test_empty_checkpoint_dir_falls_through_to_error(tmp_path):
+    """A directory with no saved steps is not silently 'default'."""
+    cfg = _cfg()
+    head = rs.classify(weights=str(tmp_path), n_classes=2, width=8)
+    with pytest.raises(KeyError, match="neither registered"):
+        heads_mod.resolve_head_params(head, cfg)
+
+
+# ----------------------------------------------------------------------------
+# read_many stage-0 sharing + serve_step
+# ----------------------------------------------------------------------------
+
+def test_read_many_shares_stage0_bitwise():
+    eng = _loaded_engine(seed=6)
+    s0 = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf())
+    a = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                       logits=rs.classify(n_classes=3, width=8))
+    b = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                       labels=rs.denoise())
+    got = eng.read_many([a, s0, b, a], 0.05)
+    assert list(got) == [a, s0, b]                    # deduped, ordered
+    for sp in (a, s0, b):
+        want = eng.read(sp, 0.05)                     # member's own fused read
+        assert tuple(got[sp]) == sp.names
+        for name in want:
+            np.testing.assert_array_equal(
+                np.asarray(got[sp][name]), np.asarray(want[name]),
+                err_msg=f"{name} of {sp!r}")
+
+
+def test_serve_step_with_heads_matches_read():
+    eng = TimeSurfaceEngine(_cfg())
+    cam = eng.attach()
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          logits=rs.classify(n_classes=3, width=8),
+                          labels=rs.denoise())
+    for i, t_now in enumerate((0.05, 0.05, 0.07)):
+        got = eng.serve_step(pool_items([(cam, _stream(seed=10 + i))]),
+                             spec, t_now)
+        want = eng.read(spec, t_now)
+        for name in spec.names:
+            np.testing.assert_array_equal(
+                np.asarray(got[name]), np.asarray(want[name]),
+                err_msg=f"step {i} product {name}")
+
+
+# ----------------------------------------------------------------------------
+# 1-device mesh: sharded plan serves the same bits
+# ----------------------------------------------------------------------------
+
+def test_head_spec_mesh_single_device_bitwise():
+    from repro.launch.mesh import make_host_mesh
+
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf(),
+                          logits=rs.classify(n_classes=3, width=8),
+                          labels=rs.denoise())
+    plain = _loaded_engine(seed=7)
+    sharded = _loaded_engine(seed=7, mesh=make_host_mesh(1))
+    want = plain.read(spec, 0.05)
+    got = sharded.read(spec, 0.05)
+    for name in spec.names:
+        np.testing.assert_array_equal(
+            np.asarray(got[name])[:3], np.asarray(want[name]),
+            err_msg=name)
+    # the sharded shared-stage-0 path (head_reader) matches its own reads
+    many = sharded.read_many([spec, spec.stage0()], 0.05)
+    for name in spec.names:
+        np.testing.assert_array_equal(np.asarray(many[spec][name]),
+                                      np.asarray(got[name]), err_msg=name)
+
+
+# ----------------------------------------------------------------------------
+# the deprecated flat entry point
+# ----------------------------------------------------------------------------
+
+def test_read_products_shim_warns_once_and_is_value_identical():
+    eng = _loaded_engine(seed=8)
+    spec = rs.ReadoutSpec(surface=rs.surface(), stcf=rs.stcf())
+    dynamic = rs.resolve_dynamic(spec, eng.cfg)
+    statics = rs.resolve_static(spec, eng.cfg)
+    args = (eng.state.surfaces.sae, None, jnp.float32(0.05), dynamic,
+            spec, eng.cfg, "interpret", statics)
+    rs._read_products_warned = False
+    with pytest.warns(DeprecationWarning, match="read_products"):
+        out = rs.read_products(*args)
+    with warnings.catch_warnings():                   # second call: silent
+        warnings.simplefilter("error")
+        out2 = rs.read_products(*args)
+    want = eng.read(spec, 0.05)
+    for name in spec.names:
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(want[name]), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(out2[name]),
+                                      np.asarray(want[name]))

@@ -368,6 +368,58 @@ def test_composed_spec_stream():
     rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg), spec)
 
 
+def test_stream_classify_tier_end_to_end():
+    """The PR-7 acceptance gate: a gesture tier carrying a
+    Classify-bearing spec streams model logits through the runtime —
+    digest-chained and bitwise-reproduced by the replay oracle, and
+    bitwise equal to the standalone frontend + ``cnn_apply`` over the
+    same step's served surfaces — single-device and on a 1-device
+    mesh."""
+    import dataclasses
+
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import cnn
+    from repro.models.frontends import ts_stack_frontend
+    from repro.serve import heads as heads_mod
+
+    head = rs.classify(n_classes=4, width=8)
+    head_spec = rs.ReadoutSpec(surface=rs.surface(), logits=head)
+
+    def tiered_feeds():
+        feeds = rp.mixed_scene_feeds(H, W, 0.04, 3, seed=21, tiered=True)
+        for f in feeds:
+            if f.qos.tier == "gesture":
+                f.qos = dataclasses.replace(f.qos, spec=head_spec)
+        return feeds
+
+    assert any(f.qos.spec == head_spec for f in tiered_feeds())
+    cfg = make_cfg()
+    scfg = StreamConfig(policy="drop_oldest", queue_capacity=256,
+                        deadline_s=0.01)
+    eng = TimeSurfaceEngine(cfg)
+    report = rp.replay(eng, tiered_feeds(), scfg)
+    # (a) logits are digest-chained per deadline and replay bitwise
+    n = rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg))
+    assert n == report.n_steps > 0
+    # (b) the streamed logits equal the standalone head over the same
+    # final-state surfaces (the engine retains the last step's state)
+    t_last = report.n_steps * scfg.deadline_s
+    out = eng.read(head_spec, t_last)
+    params = heads_mod.resolve_head_params(head, cfg)
+    want = jax.jit(
+        lambda p, s: cnn.cnn_apply(p, ts_stack_frontend([s]))
+    )(params, out["surface"])
+    assert (np.asarray(out["logits"]) == np.asarray(want)).all()
+    # same bits over a 1-device mesh, per-deadline
+    mesh = make_host_mesh(1)
+    sharded = rp.replay(TimeSurfaceEngine(cfg, mesh=mesh), tiered_feeds(),
+                        scfg)
+    assert sharded.digests == report.digests
+    rp.check_oracle(sharded, lambda: TimeSurfaceEngine(cfg, mesh=mesh))
+
+
 def test_stream_mesh_single_device():
     """The runtime over a 1-device mesh engine: same bits as unsharded."""
     from repro.launch.mesh import make_host_mesh
