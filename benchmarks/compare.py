@@ -25,6 +25,14 @@ noisy on shared runners to gate individually):
     (``stream_model_p99_latency_us``.us_per_call, lower, keyed
     ``[gesture]``) — the head-bearing per-tier spec served every
     deadline with preemption in the loop.
+  * device-ring ingest events/sec at 8 sensors
+    (``stream_ring_ingest_8sensors_us``.derived, higher) and its
+    speedup over the host-staged synchronous path
+    (``stream_ring_overlap_speedup``.derived, higher; the harness
+    already asserts the >= 1.2x acceptance floor before emitting it) —
+    the double-buffered device-resident ingress path vs per-part
+    ``to_event_batch`` staging with no overlap, bitwise-gated before
+    timing.
 
 Rows are keyed by ``(name, tier)`` — ``tier`` is null for global rows —
 and a metric regresses when it is more than ``--threshold`` (default
@@ -82,6 +90,10 @@ GATES: List[Tuple[str, str, str, str]] = [
      "higher"),
     ("BENCH_stream.json", r"^stream_model_p99_latency_us$", "us_per_call",
      "lower"),
+    ("BENCH_stream.json", r"^stream_ring_ingest_8sensors_us$", "derived",
+     "higher"),
+    ("BENCH_stream.json", r"^stream_ring_overlap_speedup$", "derived",
+     "higher"),
 ]
 
 #: how many trailing trend runs the median reference uses

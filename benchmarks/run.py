@@ -17,6 +17,14 @@ gate regresses them per tier):
 
 Run everything:    PYTHONPATH=src python -m benchmarks.run
 Run a subset:      PYTHONPATH=src python -m benchmarks.run --only hw,edram
+On a GPU box:      PYTHONPATH=src python -m benchmarks.run --platform gpu
+
+``--platform`` routes through ``repro.platform`` (the one module that
+owns pre-backend-init process configuration): selecting ``gpu`` also
+installs the latency-oriented ``XLA_FLAGS`` serving profile, and the
+resolved platform summary (``repro.platform.describe()``) is printed to
+stderr with every run so an artifact can always be traced to the
+backend and kernel path that produced it.
 
 ``--json DIR`` additionally writes one machine-readable
 ``BENCH_<module>.json`` artifact per module (rows + wall time + git sha)
@@ -98,6 +106,11 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="DIR",
                     help="also write one BENCH_<module>.json per module "
                          "into DIR (the CI regression-gate artifact)")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="jax platform to benchmark on (default: jax "
+                         "auto-detect; 'gpu' also applies the serving "
+                         "XLA_FLAGS profile via repro.platform)")
     # strict parsing: parse_known_args silently ignored typo'd flags
     # (`--onIy serve` ran the full suite and CI stayed green)
     args = ap.parse_args()
@@ -108,6 +121,11 @@ def main() -> None:
             f"unknown benchmark module(s): {', '.join(unknown)} "
             f"(choose from: {', '.join(MODULES)})"
         )
+
+    from repro import platform as pf
+
+    pf.set_platform(args.platform)
+    print(f"# platform: {pf.describe()}", file=sys.stderr)
 
     sha = git_sha()
     print("name,us_per_call,derived,tier")

@@ -15,10 +15,28 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import edram
 
 NEVER = -jnp.inf
+
+
+def rebase_times(t, epoch) -> np.ndarray:
+    """Rebase absolute timestamps against ``epoch`` (host-side, exact
+    float64 subtraction) and cast the *small* result to float32.
+
+    float32 carries ~24 mantissa bits: at t = 3600 s one ulp is ~0.4 ms
+    — coarser than event-camera microsecond stamps — so casting absolute
+    wall-clock seconds collapses distinct events onto one stamp and
+    quantizes every decay readout.  Subtracting a per-runtime epoch
+    first keeps full resolution for any realistic session length, and
+    because every surface quantity depends only on time *differences*
+    (``t_now - sae``), a stream rebased to its first event reads out
+    bit-identically to the same stream offered at t = 0.
+    """
+    t64 = np.asarray(t, np.float64)
+    return (t64 - np.float64(epoch)).astype(np.float32)
 
 
 class EventBatch(NamedTuple):

@@ -3,11 +3,14 @@
 Every op takes an explicit ``backend`` selector instead of per-call
 ``use_ref``/``interpret`` flags:
 
-  * ``backend="pallas"``    compiled Pallas kernel (TPU)
+  * ``backend="pallas"``    compiled Pallas kernel (TPU Mosaic or GPU
+                            Triton lowering)
   * ``backend="interpret"`` the same kernel through the Pallas interpreter
                             (bit-accurate CPU path used by tests and CI)
   * ``backend="ref"``       the pure-jnp oracle in ``kernels.ref``
-  * ``backend=None``        auto: "pallas" on TPU, "interpret" elsewhere
+  * ``backend=None``        auto: "pallas" on TPU and on GPU (when the
+                            Triton lowering is importable; otherwise one
+                            warning, then "interpret"), "interpret" on CPU
 
 The selector is static (part of the jit cache key): each backend value
 compiles its own entry, and switching between them adds a trace without
@@ -15,11 +18,22 @@ invalidating the others.  ``resolve_backend`` is the single place the
 ``None`` -> platform-default rule lives; callers that hold a backend for
 their lifetime (e.g. the serving engine) resolve once up front and pass
 the canonical name through.
+
+Tile shapes are platform-tuned: every kernel-backed op takes its block
+shape explicitly, and a ``None`` block resolves through
+``default_block`` — (8, 128) rows on TPU/CPU (the VREG lane layout the
+kernels were written against), taller row-blocks on GPU where the
+Triton lowering maps each grid cell onto a threadblock and wants enough
+coalesced 128-lane rows per CTA to keep occupancy up.  The CI
+"gpu-lowering" lane runs the GPU block configurations through the
+interpreter on CPU (``tests/test_gpu_lowering.py``), so the GPU grids
+stay compile-clean and bit-accurate even on runners without a GPU.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import warnings
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,16 +48,98 @@ from repro.kernels import ts_fused as _tsf
 
 BACKENDS = ("pallas", "interpret", "ref")
 
+#: probe result cache: whether this jaxlib ships the Pallas GPU (Triton)
+#: lowering (None = not probed yet)
+_gpu_lowering: Optional[bool] = None
+
+#: one warning per process when auto-resolve must fall back on GPU
+_gpu_fallback_warned = False
+
+
+def gpu_lowering_available() -> bool:
+    """Whether this jaxlib can lower ``pallas_call`` for GPU (Triton).
+
+    Probed once per process by importing the lowering registration —
+    cheap, side-effect free, and exactly what ``pallas_call`` needs at
+    trace time on a GPU backend.
+    """
+    global _gpu_lowering
+    if _gpu_lowering is None:
+        try:
+            import jax._src.pallas.triton  # noqa: F401
+
+            _gpu_lowering = True
+        except Exception:  # pragma: no cover - depends on jaxlib build
+            _gpu_lowering = False
+    return _gpu_lowering
+
 
 def resolve_backend(backend: Optional[str]) -> str:
-    """Canonicalize a backend name; ``None`` -> platform default."""
+    """Canonicalize a backend name; ``None`` -> platform default.
+
+    The default is the *compiled* kernel wherever one exists: "pallas"
+    on TPU (Mosaic) and on GPU (Triton).  A GPU process whose jaxlib
+    lacks the Triton lowering falls back to "interpret" with one
+    warning — never silently, the interpreter is orders of magnitude
+    slower than the compiled path.
+    """
+    global _gpu_fallback_warned
     if backend is None:
-        return "pallas" if jax.default_backend() == "tpu" else "interpret"
+        platform = jax.default_backend()
+        if platform == "tpu":
+            return "pallas"
+        if platform == "gpu":
+            if gpu_lowering_available():
+                return "pallas"
+            if not _gpu_fallback_warned:
+                _gpu_fallback_warned = True
+                warnings.warn(
+                    "jax reports a GPU backend but this jaxlib has no "
+                    "Pallas GPU (Triton) lowering; kernels fall back to "
+                    "the Pallas interpreter (orders of magnitude slower). "
+                    "Install a gpu-enabled jaxlib or pass "
+                    "backend='ref'/'interpret' explicitly to silence this.",
+                    RuntimeWarning, stacklevel=2,
+                )
+            return "interpret"
+        return "interpret"
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS} or None"
         )
     return backend
+
+
+#: platform-tuned kernel tile shapes, keyed (op, jax platform).  TPU and
+#: the CPU interpreter keep the (8, 128) VREG-lane layout; GPU blocks
+#: are taller so each Triton CTA covers enough coalesced 128-wide rows
+#: to keep occupancy up (the row count, not the lane count, is the free
+#: axis on GPU).  ``stcf_support`` is a row-block kernel — its entry is
+#: the block height.
+DEFAULT_BLOCKS = {
+    ("ts_decay", "tpu"): (8, 128),
+    ("ts_decay", "gpu"): (32, 128),
+    ("ts_decay", "cpu"): (8, 128),
+    ("chunk_scatter", "tpu"): (8, 128),
+    ("chunk_scatter", "gpu"): (64, 128),
+    ("chunk_scatter", "cpu"): (8, 128),
+    ("stcf_support", "tpu"): 8,
+    ("stcf_support", "gpu"): 16,
+    ("stcf_support", "cpu"): 8,
+}
+
+
+def default_block(
+    op: str, platform: Optional[str] = None,
+) -> Union[Tuple[int, int], int]:
+    """The platform-tuned default tile shape for ``op`` (``platform``
+    ``None`` = this process's jax backend; unknown platforms take the
+    CPU shape).  The single place the GPU block table is consulted, so
+    the CI gpu-lowering lane and a real GPU process resolve identical
+    grids."""
+    platform = platform or jax.default_backend()
+    entry = DEFAULT_BLOCKS.get((op, platform))
+    return entry if entry is not None else DEFAULT_BLOCKS[(op, "cpu")]
 
 
 def _vmap_leading(fn, arr):
@@ -58,11 +154,15 @@ def ts_decay(
     sae: jax.Array,
     t_now,
     params,
-    block: Tuple[int, int] = (8, 128),
+    block: Optional[Tuple[int, int]] = None,
     backend: Optional[str] = None,
 ):
-    """Time-surface readout over a (..., H, W) SAE (leading dims vmapped)."""
+    """Time-surface readout over a (..., H, W) SAE (leading dims vmapped).
+
+    ``block=None`` resolves the platform-tuned tile via ``default_block``.
+    """
     backend = resolve_backend(backend)
+    block = block if block is not None else default_block("ts_decay")
     if backend == "ref":
         fn = lambda s: _ref.ts_decay_ref(s, t_now, params)
     else:
@@ -78,11 +178,12 @@ def ts_decay_with_mask(
     t_now,
     params,
     v_tw_static: float,
-    block: Tuple[int, int] = (8, 128),
+    block: Optional[Tuple[int, int]] = None,
     backend: Optional[str] = None,
 ):
     """Readout plus the fused comparator mask (V > v_tw), one surface pass."""
     backend = resolve_backend(backend)
+    block = block if block is not None else default_block("ts_decay")
     if backend == "ref":
         fn = lambda s: _ref.ts_decay_ref(s, t_now, params, v_tw=v_tw_static)
     else:
@@ -102,11 +203,12 @@ def stcf_support(
     mask: jax.Array,
     radius: int = 3,
     include_self: bool = False,
-    block_h: int = 8,
+    block_h: Optional[int] = None,
     backend: Optional[str] = None,
 ):
     """Patch support count of a (..., H, W) boolean/float mask."""
     backend = resolve_backend(backend)
+    block_h = block_h if block_h is not None else default_block("stcf_support")
     if backend == "ref":
         fn = lambda m: _ref.stcf_support_ref(m, radius, include_self)
     else:
@@ -128,11 +230,12 @@ def stcf_support_fused(
     t_now,
     radius: int = 3,
     include_self: bool = False,
-    block_h: int = 8,
+    block_h: Optional[int] = None,
     backend: Optional[str] = None,
 ):
     """Fused SAE -> decay -> comparator -> support (uniform cell params)."""
     backend = resolve_backend(backend)
+    block_h = block_h if block_h is not None else default_block("stcf_support")
     if backend == "ref":
         fn = lambda s: _ref.stcf_support_fused_ref(
             s, radius, params, v_tw, t_now, include_self
@@ -150,7 +253,7 @@ def stcf_support_fused(
 def chunk_scatter(
     sae: jax.Array,
     ev,
-    block: Tuple[int, int] = (8, 128),
+    block: Optional[Tuple[int, int]] = None,
     backend: Optional[str] = None,
 ):
     """Max-combine one padded event chunk into a (..., P, H, W) SAE.
@@ -165,6 +268,7 @@ def chunk_scatter(
     ``jnp``'s ``.at[].max`` in any surrounding program.
     """
     backend = resolve_backend(backend)
+    block = block if block is not None else default_block("chunk_scatter")
     p, h, w = sae.shape[-3:]
     flat = sae.reshape((-1, p, h, w))
     fev = jax.tree_util.tree_map(lambda f: f.reshape((-1, f.shape[-1])), ev)
@@ -190,7 +294,7 @@ def ts_fused(
     t_now,
     params,
     v_tw_static: Optional[float] = None,
-    block: Tuple[int, int] = (8, 128),
+    block: Optional[Tuple[int, int]] = None,
     backend: Optional[str] = None,
 ):
     """Fused chunk-scatter + decay readout over a (..., P, H, W) SAE.

@@ -12,11 +12,11 @@ axes while the pin keeps working.
 """
 from __future__ import annotations
 
-import os
-import re
 from typing import Optional, Sequence
 
 import jax
+
+from repro import platform as _platform
 
 
 def _axis_types_kwargs(n_axes: int) -> dict:
@@ -42,7 +42,7 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
 # host-device emulation (CPU "devices" via --xla_force_host_platform_device_count)
 # ----------------------------------------------------------------------------
 
-_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+_HOST_COUNT_FLAG = _platform.HOST_DEVICE_COUNT_FLAG
 
 
 def ensure_host_device_count(n: int) -> None:
@@ -50,24 +50,10 @@ def ensure_host_device_count(n: int) -> None:
 
     Must run before the jax backend initializes (XLA reads ``XLA_FLAGS``
     once, at first device use).  Raises if the backend is already up with
-    fewer devices — the caller started jax too early to honor the request.
+    fewer devices.  Thin alias over ``repro.platform`` — the env handling
+    lives there now — kept so mesh-building callers need one import.
     """
-    flags = os.environ.get("XLA_FLAGS", "")
-    present = re.search(rf"{_HOST_COUNT_FLAG}=(\d+)", flags)
-    if present is None:
-        os.environ["XLA_FLAGS"] = f"{flags} {_HOST_COUNT_FLAG}={n}".strip()
-    elif int(present.group(1)) < n:
-        # raise an existing smaller count; only effective if the backend
-        # has not initialized yet — the check below catches the other case
-        os.environ["XLA_FLAGS"] = flags.replace(
-            present.group(0), f"{_HOST_COUNT_FLAG}={n}"
-        )
-    if len(jax.devices()) < n:
-        raise RuntimeError(
-            f"asked for {n} host devices but the jax backend already "
-            f"initialized with {len(jax.devices())}; set "
-            f"XLA_FLAGS={_HOST_COUNT_FLAG}={n} before any jax device use"
-        )
+    _platform.ensure_host_device_count(n)
 
 
 def make_host_mesh(

@@ -36,6 +36,7 @@ import time
 import jax
 import numpy as np
 
+from repro import platform as pf
 from repro.configs import get_config
 from repro.models import module as M
 from repro.models import transformer as T
@@ -81,7 +82,7 @@ def run_sensors(args) -> None:
     if args.mesh:
         # must precede any jax device use (TSEngineConfig resolves the
         # backend) so XLA still honors the host-device-count flag on CPU
-        mesh_mod.ensure_host_device_count(args.mesh)
+        pf.ensure_host_device_count(args.mesh)
         mesh = mesh_mod.make_host_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)} over "
               f"{[d.platform for d in mesh.devices.ravel()][0]} devices")
@@ -189,7 +190,7 @@ def run_stream(args) -> None:
         ) from None
     mesh = None
     if args.mesh:
-        mesh_mod.ensure_host_device_count(args.mesh)
+        pf.ensure_host_device_count(args.mesh)
         mesh = mesh_mod.make_host_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)}")
 
@@ -270,6 +271,13 @@ def run_stream(args) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--platform", choices=pf.PLATFORMS, default=None,
+                    help="pin the jax platform for this process (gpu also "
+                         "applies the serving XLA perf flags; default: "
+                         "jax auto-detection)")
+    ap.add_argument("--x64", action="store_true",
+                    help="enable 64-bit jax arithmetic (offline analysis; "
+                         "the serving path is float32 end to end)")
     sub = ap.add_subparsers(dest="engine", required=True)
 
     tp = sub.add_parser("tokens", help="LM prefill+decode serving")
@@ -344,6 +352,11 @@ def main() -> None:
                     help="skip the synchronous bitwise oracle gate")
 
     args = ap.parse_args()
+    # platform config must precede the first jax device use (every
+    # subcommand resolves a backend or touches devices early)
+    pf.set_platform(args.platform)
+    if args.x64:
+        pf.enable_x64(True)
     if args.engine == "tokens":
         run_tokens(args)
     elif args.engine == "sensors":

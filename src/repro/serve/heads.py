@@ -14,7 +14,11 @@ Resolution order for ``Classify(weights=key)``:
      and freshly trained weights publish here;
   2. a ``checkpoint.Checkpointer`` directory: if ``key`` is a path with
      saved steps, the latest step restores against the head's abstract
-     param template (shape/dtype checked leaf by leaf);
+     param template (shape/dtype checked leaf by leaf).  Restores are
+     cached by **(absolute path, head geometry, step)** — never by the
+     raw key string, which would poison the cache across CWD changes,
+     across heads of different geometry sharing one directory, and
+     across newly-saved steps;
   3. the ``"default"`` key self-initializes deterministically (seeded by
      the head's geometry), so every consumer — engine, sharded plan,
      replay oracle, ref-backend oracle — resolves bitwise-identical
@@ -27,7 +31,7 @@ from __future__ import annotations
 
 import os
 import zlib
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 
@@ -37,6 +41,13 @@ from repro.models.module import abstract_params, init_params
 #: process-wide weights registry: key -> param pytree
 _REGISTRY: Dict[str, object] = {}
 
+#: checkpoint restore cache: (abspath, geometry, step) -> param pytree.
+#: Separate from the registry on purpose — a raw-path registry entry
+#: would shadow every later step saved to the same directory, serve one
+#: head's arrays to a different-geometry head, and break the moment the
+#: process CWD changes (``os.path.isdir`` on a relative key).
+_CKPT_CACHE: Dict[Tuple[str, Tuple[int, int, int, int], int], object] = {}
+
 
 def register_head_params(key: str, params) -> None:
     """Publish a param pytree under ``key`` for ``Classify(weights=key)``
@@ -45,8 +56,15 @@ def register_head_params(key: str, params) -> None:
 
 
 def clear_registry() -> None:
-    """Drop every registered key (test isolation helper)."""
+    """Drop every registered key and cached checkpoint restore (test
+    isolation helper)."""
     _REGISTRY.clear()
+    _CKPT_CACHE.clear()
+
+
+def _head_geometry(head, cfg) -> Tuple[int, int, int, int]:
+    """The tuple that determines a head's param template shapes."""
+    return (len(head.inputs), cfg.polarities, head.n_classes, head.width)
 
 
 def head_param_defs(head, cfg) -> dict:
@@ -59,13 +77,29 @@ def head_param_defs(head, cfg) -> dict:
 
 
 def _checkpoint_params(head, cfg, directory: str):
+    """Latest-step restore from ``directory``, cached by
+    (abspath, geometry, step).
+
+    ``directory`` must already exist (``Checkpointer`` mkdirs in its
+    constructor, so probing through it would *create* bogus directories
+    for registry-style keys).  A new step saved after an earlier resolve
+    gets its own cache entry — stale weights are never served — and two
+    heads of different geometry restoring from one directory never share
+    an entry: the mismatched one fails the restore's shape check instead
+    of silently reusing the other head's arrays.
+    """
     from repro.checkpoint.ckpt import Checkpointer
 
     ckpt = Checkpointer(directory)
-    if ckpt.latest_step() is None:
+    step = ckpt.latest_step()
+    if step is None:
         return None
-    template = abstract_params(head_param_defs(head, cfg))
-    params, _ = ckpt.restore(template)
+    key = (directory, _head_geometry(head, cfg), step)
+    params = _CKPT_CACHE.get(key)
+    if params is None:
+        template = abstract_params(head_param_defs(head, cfg))
+        params, _ = ckpt.restore(template, step=step)
+        _CKPT_CACHE[key] = params
     return params
 
 
@@ -75,10 +109,13 @@ def resolve_head_params(head, cfg):
     params = _REGISTRY.get(head.weights)
     if params is not None:
         return params
-    if os.path.isdir(head.weights):
-        params = _checkpoint_params(head, cfg, head.weights)
+    # resolve the key against the filesystem by absolute path: a
+    # relative checkpoint key must keep resolving to the same directory
+    # (and the same cache entries) after a process chdir
+    path = os.path.abspath(head.weights)
+    if os.path.isdir(path):
+        params = _checkpoint_params(head, cfg, path)
         if params is not None:
-            _REGISTRY[head.weights] = params
             return params
     if head.weights == "default":
         # deterministic self-init, seeded by the head geometry so two

@@ -101,6 +101,19 @@ host sync.  ``flush()`` syncs the last in-flight read.  With
 ``pipeline=False`` every step syncs its own read — the synchronous
 comparator ``benchmarks/bench_stream.py`` measures against.
 
+**Long-horizon timestamp precision** — offered stamps are absolute
+float64 session times; the runtime pins ``t_epoch`` to the whole-second
+floor of the first stamp it ever sees (so sessions starting near t = 0
+keep epoch 0 — bitwise the pre-epoch behavior) and rebases every
+engine-facing time (queued event stamps
+and deadline read times) against it *before* the float32 cast
+(``core.time_surface.rebase_times``).  Surfaces depend only on time
+differences, so a stream starting at t = 3600 s reads out bit-identical
+to the same stream at t = 0 — without rebasing, float32's ~0.4 ms ulp
+at an hour would have collapsed microsecond stamps.  Scheduling (the
+deadline grids) stays in absolute time; the action log records rebased
+times, so the replay oracle consumes it verbatim.
+
 Determinism contract: which events are accepted, dropped, scheduled,
 deferred, and coalesced into which chunk of which step is a pure
 function of the offered event sequence, the per-sensor deadline
@@ -120,6 +133,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
+from repro.core import time_surface as ts_core
 from repro.events import aer
 from repro.events import pipeline
 from repro.events import synthetic as syn
@@ -218,6 +232,12 @@ class StreamConfig:
     drain capacity in events per virtual second that admission control
     protects (``None`` disables admission); ``pipeline=False`` degrades
     to sync-per-step (the benchmark comparator);
+    ``device_ring=True`` (the default) routes ingest through the
+    engine's pre-allocated double-buffered staging ring
+    (``TimeSurfaceEngine.push_staged``): each deadline's event upload
+    overlaps the previous deadline's in-flight scatter+read, bitwise
+    identical to the host-staged ``push`` path (``device_ring=False``,
+    the overlap benchmark's comparator);
     ``record_chunks=False`` drops the host-side chunk copies from the
     action log (timing-only runs — the oracle replay then has nothing
     to consume).
@@ -229,6 +249,7 @@ class StreamConfig:
     step_chunk_budget: Optional[int] = None
     capacity_eps: Optional[float] = None
     pipeline: bool = True
+    device_ring: bool = True
     record_chunks: bool = True
     max_record_steps: Optional[int] = 10_000
     # retention bound on the action log: beyond this many recorded
@@ -263,15 +284,21 @@ _EWMA_ALPHA = 0.3
 
 def _as_arrays(events, h: int, w: int) -> _Segment:
     """Normalize an offer payload (``EventStream``, packed uint64 AER
-    words, or an (x, y, t, p) tuple of arrays) to host numpy arrays."""
+    words, or an (x, y, t, p) tuple of arrays) to host numpy arrays.
+
+    Timestamps stay **float64** here: they are absolute session times,
+    and the float32 cast only happens *after* epoch rebasing (see
+    ``StreamRuntime._rebase``) — casting absolute times directly would
+    quantize microsecond stamps to ~0.4 ms once a session is an hour
+    old (float32 ulp at 3600 s)."""
     if isinstance(events, np.ndarray) and events.dtype == np.uint64:
         events = aer.unpack(events, h, w)
     if isinstance(events, syn.EventStream):
         return (events.x.astype(np.int32), events.y.astype(np.int32),
-                events.t.astype(np.float32), events.p.astype(np.int32))
+                events.t.astype(np.float64), events.p.astype(np.int32))
     x, y, t, p = events
     return (np.asarray(x, np.int32), np.asarray(y, np.int32),
-            np.asarray(t, np.float32), np.asarray(p, np.int32))
+            np.asarray(t, np.float64), np.asarray(p, np.int32))
 
 
 class StreamSensor:
@@ -349,6 +376,12 @@ class StreamSensor:
                                 self._runtime.engine.cfg.w)
         n = len(x)
         self.offered += n
+        if n:
+            # rebase absolute float64 stamps to the runtime epoch and
+            # only then go float32 (long-horizon precision; the epoch
+            # pins off the first stamp this runtime ever sees, accepted
+            # or not, so it is a pure function of the offered sequence)
+            t = self._runtime._rebase(t)
         if n == 0:
             return OfferResult(0, retry_after=self._retry_after(
                 self._queued - cfg.queue_capacity))
@@ -572,6 +605,9 @@ class StreamRuntime:
         self.cfg = cfg
         self.spec = spec
         self.sensors: Dict[int, StreamSensor] = {}   # slot -> sensor
+        # ring ingest needs the engine's staged entry point; anything
+        # else (a bare test double) falls back to host-staged push
+        self._use_ring = cfg.device_ring and hasattr(engine, "push_staged")
         self.log: List[LogEntry] = []
         self.latencies_s: List[float] = []
         self.latencies_by_tier: Dict[str, List[float]] = {}
@@ -585,6 +621,24 @@ class StreamRuntime:
         self._tier_slo: Dict[str, float] = {}
         self.n_steps = 0
         self.log_trimmed_steps = 0
+        #: per-runtime timestamp epoch (absolute seconds, float64): the
+        #: whole-second floor of the first stamp ever offered.  Every
+        #: engine-facing time — event
+        #: stamps and deadline read times — is rebased against it before
+        #: the float32 cast (see ``core.time_surface.rebase_times``);
+        #: scheduling stays in absolute time.
+        self.t_epoch: Optional[float] = None
+
+    def _rebase(self, t: np.ndarray) -> np.ndarray:
+        """Pin the epoch to the whole second **floor** of the first stamp
+        seen, then rebase ``t``.  The floor (rather than the stamp
+        itself) keeps a session that starts inside its first second at
+        epoch 0 — bitwise the pre-epoch behavior — while still bounding
+        the rebased magnitude to span + 1 s (float32 ulp ~60 ns at 1 s,
+        ample for microsecond stamps)."""
+        if self.t_epoch is None:
+            self.t_epoch = float(np.floor(np.float64(t[0])))
+        return ts_core.rebase_times(t, self.t_epoch)
 
     # -- lifecycle ------------------------------------------------------------
     def _admit(self, qos: QoSClass) -> None:
@@ -700,11 +754,13 @@ class StreamRuntime:
         engine dispatch (the fused scatter stays batched).
 
         Returns (groups, chunk_copies, n_events, order): ``groups`` is
-        a list of (tier, items) with ``items`` the (slot, EventBatch)
-        pairs for one ``engine.push``; ``chunk_copies`` are the
-        host-side numpy twins for the action log, flat in dispatch
-        order; ``order`` records the EDF schedule (slot, tier, deadline
-        the sensor was served under)."""
+        a list of (tier, items) with ``items`` the pairs for one engine
+        dispatch — raw (slot, part) tuples on the device-ring path
+        (``engine.push_staged`` stages them directly), (slot,
+        EventBatch) pairs for host-staged ``engine.push`` otherwise;
+        ``chunk_copies`` are the host-side numpy twins for the action
+        log, flat in dispatch order; ``order`` records the EDF schedule
+        (slot, tier, deadline the sensor was served under)."""
         cap = self.engine.cfg.chunk_capacity
         h, w = self.engine.cfg.h, self.engine.cfg.w
         groups: List[Tuple[str, list]] = []
@@ -727,12 +783,15 @@ class StreamRuntime:
             n_events += drained
             for lo in range(0, drained, cap):
                 part = tuple(a[lo:lo + cap] for a in (x, y, tt, p))
-                stream = syn.EventStream(
-                    x=part[0], y=part[1], t=part[2], p=part[3],
-                    is_signal=np.ones(len(part[0]), bool), h=h, w=w,
-                )
-                items.append(
-                    (sensor.slot, pipeline.to_event_batch(stream, cap)))
+                if self._use_ring:
+                    items.append((sensor.slot, part))
+                else:
+                    stream = syn.EventStream(
+                        x=part[0], y=part[1], t=part[2], p=part[3],
+                        is_signal=np.ones(len(part[0]), bool), h=h, w=w,
+                    )
+                    items.append(
+                        (sensor.slot, pipeline.to_event_batch(stream, cap)))
                 copies.append((sensor.slot, part))
         return groups, copies, n_events, order
 
@@ -761,13 +820,21 @@ class StreamRuntime:
         groups, copies, n_events, order = self._coalesce(
             scheduled, t_deadline)
         specs = self._step_specs(scheduled)
+        # the engine reads in epoch-rebased time, same basis the queued
+        # stamps were rebased to at offer time (scheduling above stays
+        # absolute); recorded as-rebased so the replay oracle consumes
+        # the log verbatim
+        t_read = t_deadline - (self.t_epoch or 0.0)
         wall0 = time.perf_counter()
         for _tier, items in groups:
-            self.engine.push(items)
-        products_by_spec = self.engine.read_many(specs, t_deadline)
+            if self._use_ring:
+                self.engine.push_staged(items)
+            else:
+                self.engine.push(items)
+        products_by_spec = self.engine.read_many(specs, t_read)
         products_list = [products_by_spec[sp] for sp in specs]
         record = StepRecord(
-            t_read=float(t_deadline), n_events=n_events,
+            t_read=float(t_read), n_events=n_events,
             n_chunks=len(copies),
             chunks=copies if self.cfg.record_chunks else None,
             wall_dispatch=wall0,
@@ -882,6 +949,7 @@ class StreamRuntime:
         return {
             **c,
             "n_steps": self.n_steps,
+            "t_epoch": self.t_epoch,
             "log_trimmed_steps": self.log_trimmed_steps,
             "n_sensors": len(self.sensors),
             "policy": self.cfg.policy,

@@ -1,0 +1,168 @@
+"""GPU enablement of the kernel layer, runnable on a CPU-only runner.
+
+Two claims, both testable without a GPU:
+
+1. **Backend resolution** — ``resolve_backend(None)`` on a GPU platform
+   picks "pallas" when the jaxlib ships the Triton lowering and falls
+   back to "interpret" with exactly one ``RuntimeWarning`` when it does
+   not; it never silently degrades (the CI lane that guards the
+   regression this PR fixes).
+
+2. **GPU grids are bit-accurate** — the GPU entries of
+   ``DEFAULT_BLOCKS`` run through the Pallas interpreter on CPU and
+   reproduce the TPU/CPU-shaped results bit for bit.  Block shape is a
+   tiling decision, never a numerics decision; this lane keeps the GPU
+   configurations compile-clean and bitwise-pinned on runners without a
+   GPU.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edram
+from repro.kernels import ops
+
+H, W = 48, 256
+
+
+@pytest.fixture
+def fresh_probe(monkeypatch):
+    """Reset the probe + warn-once state around a test."""
+    monkeypatch.setattr(ops, "_gpu_lowering", None)
+    monkeypatch.setattr(ops, "_gpu_fallback_warned", False)
+    return monkeypatch
+
+
+def _sae(seed=0):
+    rng = np.random.default_rng(seed)
+    sae = np.full((H, W), -np.inf, np.float32)
+    hits = rng.random((H, W)) < 0.3
+    sae[hits] = rng.random(hits.sum()).astype(np.float32) * 0.05
+    return jnp.asarray(sae)
+
+
+# ---------------------------------------------------------------------------
+# backend auto-resolution on a GPU platform
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_gpu_picks_pallas_when_lowering_present(
+        fresh_probe):
+    fresh_probe.setattr(jax, "default_backend", lambda: "gpu")
+    fresh_probe.setattr(ops, "_gpu_lowering", True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # no warning on the good path
+        assert ops.resolve_backend(None) == "pallas"
+
+
+def test_resolve_backend_gpu_fallback_warns_exactly_once(fresh_probe):
+    """A GPU process whose jaxlib lacks the Triton lowering degrades to
+    the interpreter — loudly, once, and keeps resolving 'interpret'."""
+    fresh_probe.setattr(jax, "default_backend", lambda: "gpu")
+    fresh_probe.setattr(ops, "_gpu_lowering", False)
+    with pytest.warns(RuntimeWarning, match="Triton"):
+        assert ops.resolve_backend(None) == "interpret"
+    with warnings.catch_warnings():             # second resolve: silent
+        warnings.simplefilter("error")
+        assert ops.resolve_backend(None) == "interpret"
+
+
+def test_resolve_backend_explicit_choice_never_warns(fresh_probe):
+    """Explicit selectors bypass the probe entirely."""
+    fresh_probe.setattr(jax, "default_backend", lambda: "gpu")
+    fresh_probe.setattr(ops, "_gpu_lowering", False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        for b in ops.BACKENDS:
+            assert ops.resolve_backend(b) == b
+
+
+def test_gpu_lowering_probe_on_this_container():
+    """This image's jaxlib ships the Triton lowering module — the probe
+    (import of the lowering registration) must find it, so a GPU process
+    of this very build would auto-resolve to 'pallas'."""
+    assert ops.gpu_lowering_available() is True
+
+
+def test_default_block_consults_the_gpu_table():
+    assert ops.default_block("ts_decay", "gpu") == (32, 128)
+    assert ops.default_block("chunk_scatter", "gpu") == (64, 128)
+    assert ops.default_block("stcf_support", "gpu") == 16
+    # unknown platform falls back to the CPU shape, and platform=None
+    # resolves this process's backend
+    assert ops.default_block("ts_decay", "rocm") == (8, 128)
+    assert (ops.default_block("ts_decay")
+            == ops.default_block("ts_decay", jax.default_backend()))
+    with pytest.raises(KeyError):
+        ops.default_block("no_such_op", "gpu")
+
+
+# ---------------------------------------------------------------------------
+# GPU block shapes: interpreted on CPU, bit-equal to the baseline tiles
+# ---------------------------------------------------------------------------
+
+def test_gpu_ts_decay_block_bitwise():
+    sae = _sae(1)
+    params = edram.decay_params_for_cmem()
+    base = ops.ts_decay(sae, 0.06, params, block=(8, 128),
+                        backend="interpret")
+    gpu = ops.ts_decay(sae, 0.06, params,
+                       block=ops.default_block("ts_decay", "gpu"),
+                       backend="interpret")
+    np.testing.assert_array_equal(np.asarray(gpu), np.asarray(base))
+
+
+def test_gpu_ts_decay_with_mask_block_bitwise():
+    sae = _sae(2)
+    params = edram.decay_params_for_cmem()
+    base = ops.ts_decay_with_mask(sae, 0.06, params, 0.5, block=(8, 128),
+                                  backend="interpret")
+    gpu = ops.ts_decay_with_mask(
+        sae, 0.06, params, 0.5,
+        block=ops.default_block("ts_decay", "gpu"), backend="interpret")
+    for b, g in zip(base, gpu):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(b))
+
+
+def test_gpu_stcf_support_block_bitwise():
+    rng = np.random.default_rng(3)
+    mask = jnp.asarray(rng.random((H, W)) < 0.2)
+    base = ops.stcf_support(mask, block_h=8, backend="interpret")
+    gpu = ops.stcf_support(
+        mask, block_h=ops.default_block("stcf_support", "gpu"),
+        backend="interpret")
+    np.testing.assert_array_equal(np.asarray(gpu), np.asarray(base))
+
+
+def test_gpu_chunk_scatter_block_bitwise():
+    from repro.core import time_surface as ts
+
+    rng = np.random.default_rng(4)
+    n = 128
+    ev = ts.EventBatch(
+        x=jnp.asarray(rng.integers(0, W, n), jnp.int32),
+        y=jnp.asarray(rng.integers(0, H, n), jnp.int32),
+        t=jnp.asarray(np.sort(rng.random(n)).astype(np.float32) * 0.05),
+        p=jnp.asarray(np.zeros(n, np.int32)),
+        valid=jnp.asarray(rng.random(n) < 0.9),
+    )
+    sae = _sae(5)[None]                 # (P=1, H, W)
+    base = ops.chunk_scatter(sae, ev, block=(8, 128), backend="interpret")
+    gpu = ops.chunk_scatter(
+        sae, ev, block=ops.default_block("chunk_scatter", "gpu"),
+        backend="interpret")
+    np.testing.assert_array_equal(np.asarray(gpu), np.asarray(base))
+
+
+def test_gpu_blocks_resolve_inside_none_default():
+    """``block=None`` routes through ``default_block`` — same bits as
+    naming this process's platform shape explicitly."""
+    sae = _sae(6)
+    params = edram.decay_params_for_cmem()
+    auto = ops.ts_decay(sae, 0.06, params, backend="interpret")
+    explicit = ops.ts_decay(
+        sae, 0.06, params,
+        block=ops.default_block("ts_decay"), backend="interpret")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))

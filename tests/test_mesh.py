@@ -8,6 +8,7 @@ recorder so no real >1-device mesh is needed in the fast gate (the real
 8/512-device builds run in the slow subprocess tests).
 """
 import enum
+import os
 
 import jax
 import pytest
@@ -95,8 +96,10 @@ def test_ensure_host_device_count(monkeypatch):
     monkeypatch.setenv("XLA_FLAGS", "")
     n = len(jax.devices())
     mesh_mod.ensure_host_device_count(n)   # satisfiable: no raise
+    # env handling lives in repro.platform now; the flag still lands in
+    # the process XLA_FLAGS through the mesh-facing alias
     assert f"--xla_force_host_platform_device_count={n}" in \
-        mesh_mod.os.environ["XLA_FLAGS"]
+        os.environ["XLA_FLAGS"]
     monkeypatch.setenv("XLA_FLAGS", "")
     with pytest.raises(RuntimeError, match="already initialized"):
         mesh_mod.ensure_host_device_count(n + 1)

@@ -208,6 +208,70 @@ def test_empty_checkpoint_dir_falls_through_to_error(tmp_path):
         heads_mod.resolve_head_params(head, cfg)
 
 
+def test_checkpoint_cache_not_poisoned_across_geometries(tmp_path):
+    """Regression: two heads naming the same checkpoint directory but
+    differing in geometry must not share cached params.  The old
+    resolver cached the restore under the bare ``weights`` string in the
+    weight *registry*, so the second head was silently served the first
+    head's (wrong-shaped) arrays; now the restore is keyed by geometry
+    and a mismatched directory fails the template shape check loudly."""
+    cfg = _cfg()
+    head3 = rs.classify(weights=str(tmp_path), n_classes=3, width=8)
+    params3 = init_params(heads_mod.head_param_defs(head3, cfg),
+                          jax.random.PRNGKey(1))
+    Checkpointer(str(tmp_path)).save(1, params3)
+    try:
+        got = heads_mod.resolve_head_params(head3, cfg)
+        leaves = jax.tree_util.tree_leaves(got)
+        want = jax.tree_util.tree_leaves(params3)
+        assert all((np.asarray(a) == np.asarray(b)).all()
+                   for a, b in zip(leaves, want))
+        # a different geometry over the same directory: loud shape
+        # failure, never the cached 3-class arrays
+        head5 = rs.classify(weights=str(tmp_path), n_classes=5, width=8)
+        with pytest.raises(AssertionError):
+            heads_mod.resolve_head_params(head5, cfg)
+        # ...and the poisoning cannot come back: the matching head still
+        # resolves its own params afterwards
+        again = jax.tree_util.tree_leaves(
+            heads_mod.resolve_head_params(head3, cfg))
+        assert all((np.asarray(a) == np.asarray(b)).all()
+                   for a, b in zip(again, want))
+    finally:
+        heads_mod.clear_registry()
+
+
+def test_checkpoint_cache_tracks_new_steps(tmp_path):
+    """Regression: a newly saved training step must be served on the
+    next resolve.  The old resolver pinned the first restore forever
+    (string-keyed registry entry); the cache key now includes
+    ``latest_step()``, so saving step 2 invalidates step 1's entry."""
+    cfg = _cfg()
+    head = rs.classify(weights=str(tmp_path), n_classes=3, width=8)
+    defs = heads_mod.head_param_defs(head, cfg)
+    p1 = init_params(defs, jax.random.PRNGKey(10))
+    p2 = init_params(defs, jax.random.PRNGKey(11))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, p1)
+    try:
+        first = jax.tree_util.tree_leaves(
+            heads_mod.resolve_head_params(head, cfg))
+        ck.save(2, p2)
+        second = jax.tree_util.tree_leaves(
+            heads_mod.resolve_head_params(head, cfg))
+        w1 = jax.tree_util.tree_leaves(p1)
+        w2 = jax.tree_util.tree_leaves(p2)
+        assert all((np.asarray(a) == np.asarray(b)).all()
+                   for a, b in zip(first, w1))
+        assert all((np.asarray(a) == np.asarray(b)).all()
+                   for a, b in zip(second, w2))
+        # same step re-resolves from cache: one restore, same object
+        assert (heads_mod.resolve_head_params(head, cfg)
+                is heads_mod.resolve_head_params(head, cfg))
+    finally:
+        heads_mod.clear_registry()
+
+
 # ----------------------------------------------------------------------------
 # read_many stage-0 sharing + serve_step
 # ----------------------------------------------------------------------------

@@ -754,6 +754,308 @@ def test_qos_churn_migration_replay_oracle():
     assert report.digests == report2.digests
 
 
+# ---------------------------------------------------------------------------
+# long-horizon timestamp precision (epoch rebasing)
+# ---------------------------------------------------------------------------
+
+def test_long_horizon_timestamps_bitwise():
+    """Regression: a session starting at t0 = 3600 s reads out bit for
+    bit what the same events read at t0 = 0.  Offsets are multiples of
+    1/8192 s — exact in float64 at any t0 and exact in float32 near
+    zero, but NOT representable in float32 at 3600 s (ulp there is
+    1/4096 s) — so the pre-epoch code, which cast absolute stamps to
+    float32 on offer, quantized them and diverged."""
+    rng = np.random.default_rng(20)
+    n = 96
+    offs = np.sort(rng.integers(1, 800, n)) / 8192.0          # float64
+    xs = rng.integers(0, W, n).astype(np.int32)
+    ys = rng.integers(0, H, n).astype(np.int32)
+    ps = rng.integers(0, 2, n).astype(np.int32)
+
+    # the premise: some absolute stamps at 3600 s are not float32-exact
+    abs_t = 3600.0 + offs
+    assert (np.float64(np.float32(abs_t)) != abs_t).any()
+
+    def run(t0):
+        rt = StreamRuntime(make_engine(), StreamConfig())
+        cam = rt.connect()
+        cam.offer((xs, ys, t0 + offs, ps))
+        rec = rt.step(t0 + 0.125)                 # dyadic: exact either way
+        out = np.asarray(rt.flush()["surface"])
+        return out, rec.digest, rt.t_epoch
+
+    base, d0, e0 = run(0.0)
+    far, d1, e1 = run(3600.0)
+    assert e0 == 0.0 and e1 == 3600.0             # whole-second floor
+    np.testing.assert_array_equal(far, base)
+    assert d0 == d1 and d0
+
+
+def test_epoch_floor_keeps_subsecond_sessions_at_zero():
+    """A session whose first stamp is inside its first second pins epoch
+    0 — engine-facing times are bitwise the pre-epoch absolute times."""
+    rt = StreamRuntime(make_engine(), StreamConfig())
+    cam = rt.connect()
+    ev = events(np.random.default_rng(21), 40)
+    assert ev.t[0] > 0                            # strictly inside (0, 1)
+    cam.offer(ev)
+    rec = rt.step(0.06)
+    rt.flush()
+    assert rt.t_epoch == 0.0 and rec.t_read == 0.06
+    assert rt.stats()["t_epoch"] == 0.0
+    # the log carries the (here: identical) rebased stamps the oracle eats
+    _, (_, _, lt, _) = rec.chunks[0]
+    np.testing.assert_array_equal(lt, ev.t)
+
+
+def test_long_horizon_replay_oracle():
+    """The action log records rebased times, so the replay oracle gates
+    a 3600-s-old session without knowing about epochs."""
+    rng = np.random.default_rng(22)
+    n = 200
+    offs = np.sort(rng.integers(1, 300, n)) / 8192.0
+    stream_far = syn.EventStream(
+        x=rng.integers(0, W, n).astype(np.int32),
+        y=rng.integers(0, H, n).astype(np.int32),
+        t=(3600.0 + offs).astype(np.float64),
+        p=rng.integers(0, 2, n).astype(np.int32),
+        is_signal=np.ones(n, bool), h=H, w=W,
+    )
+    cfg = make_cfg()
+    rt = StreamRuntime(TimeSurfaceEngine(cfg),
+                       StreamConfig(deadline_s=0.01))
+    cam = rt.connect()
+    cam.offer((stream_far.x, stream_far.y, stream_far.t, stream_far.p))
+    for k in range(1, 5):
+        rt.step(3600.0 + k * 0.01 + 0.0625)
+    rt.flush()
+    digests = [e.digest for kind, e in rt.log if kind == "step"]
+    # rebuild from the log exactly like events.replay's oracle does:
+    # fresh engine, recorded chunks, recorded (rebased) read times
+    oracle = TimeSurfaceEngine(cfg)
+    cam2 = oracle.attach()
+    for kind, e in rt.log:
+        if kind != "step":
+            continue
+        for slot, (x, y, t, p) in e.chunks:
+            assert slot == cam.slot
+            cam2.push(syn.EventStream(
+                x=x, y=y, t=t, p=p, is_signal=np.ones(len(x), bool),
+                h=H, w=W))
+        got = oracle.read(rt.spec, e.t_read)
+        assert stream.digest_products(got) == digests.pop(0)
+
+
+# ---------------------------------------------------------------------------
+# device-resident ingest ring
+# ---------------------------------------------------------------------------
+
+def test_device_ring_bitwise_vs_host_staged():
+    """The ring path (device_ring=True, the default) and the host-staged
+    comparator produce identical per-deadline digests over mixed
+    traffic, and the ring run passes the synchronous replay oracle."""
+    cfg = make_cfg()
+
+    def run(device_ring):
+        return rp.replay(
+            TimeSurfaceEngine(cfg),
+            rp.mixed_scene_feeds(H, W, 0.05, 4, seed=30),
+            StreamConfig(policy="drop_oldest", queue_capacity=256,
+                         deadline_s=0.01, device_ring=device_ring),
+        )
+
+    ring, host = run(True), run(False)
+    assert ring.digests == host.digests
+    assert (ring.ingested, ring.dropped) == (host.ingested, host.dropped)
+    n = rp.check_oracle(ring, lambda: TimeSurfaceEngine(cfg))
+    assert n == ring.n_steps > 0
+
+
+def test_device_ring_mesh_single_device_bitwise():
+    """Same gate over a 1-device mesh: the shard-major staging path
+    (``_stage_sharded`` + pre-sharded upload) matches both the unsharded
+    ring and the host-staged mesh run."""
+    import dataclasses
+
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = make_cfg()
+    scfg = StreamConfig(policy="drop_oldest", queue_capacity=256,
+                        deadline_s=0.01)
+
+    def run(mesh, device_ring):
+        return rp.replay(
+            TimeSurfaceEngine(cfg, mesh=mesh),
+            rp.mixed_scene_feeds(H, W, 0.05, 4, seed=31),
+            dataclasses.replace(scfg, device_ring=device_ring),
+        )
+
+    plain = run(None, True)
+    mesh_ring = run(make_host_mesh(1), True)
+    mesh_host = run(make_host_mesh(1), False)
+    assert mesh_ring.digests == plain.digests == mesh_host.digests
+    rp.check_oracle(mesh_ring,
+                    lambda: TimeSurfaceEngine(cfg, mesh=make_host_mesh(1)))
+
+
+def test_push_staged_equals_push():
+    """Direct engine-level gate: ``push_staged`` raw parts vs ``push``
+    of the same events give the same surface bits, including partial
+    chunks and multiple sensors per dispatch."""
+    rng = np.random.default_rng(32)
+    eng_a, eng_b = make_engine(), make_engine()
+    cams_a = [eng_a.attach() for _ in range(2)]
+    cams_b = [eng_b.attach() for _ in range(2)]
+    evs = [events(rng, CAP + 17), events(rng, 23)]
+    eng_a.push(list(zip(cams_a, evs)))
+    items = []
+    for cam, ev in zip(cams_b, evs):
+        for lo in range(0, ev.n, CAP):
+            part = tuple(a[lo:lo + CAP] for a in (ev.x, ev.y, ev.t, ev.p))
+            items.append((cam.slot, part))
+    eng_b.push_staged(items)
+    for t_read in (0.06, 0.08):
+        a = eng_a.read(rs.SURFACE_SPEC, t_read)
+        b = eng_b.read(rs.SURFACE_SPEC, t_read)
+        np.testing.assert_array_equal(np.asarray(b["surface"]),
+                                      np.asarray(a["surface"]))
+
+
+def test_push_staged_validates_parts():
+    eng = make_engine()
+    cam = eng.attach()
+    ev = events(np.random.default_rng(33), CAP + 1)
+    part = (ev.x, ev.y, ev.t, ev.p)
+    with pytest.raises(AssertionError, match="chunk capacity"):
+        eng.push_staged([(cam.slot, part)])
+    with pytest.raises(ValueError, match="not acquired"):
+        eng.push_staged([(3, tuple(a[:4] for a in part))])
+    eng.push_staged([])                           # explicit no-op
+
+
+def test_ingest_ring_rotation_and_zero_fill():
+    """The ring alternates staging sets per padded batch size and
+    re-zeroes on acquire, so a stale row from two steps ago can never
+    leak into a later, smaller dispatch."""
+    from repro.serve.ts_engine import IngestRing
+
+    ring = IngestRing(capacity=8, depth=2)
+    a = ring.acquire(2)
+    IngestRing.fill_row(a, 1, 3, (np.array([5], np.int32),) * 4)
+    b = ring.acquire(2)
+    assert b is not a                             # double buffered
+    assert ring.acquire(2) is a                   # rotation wraps
+    assert a["sids"][1] == 0 and not a["valid"].any()   # re-zeroed
+    # distinct padded sizes keep distinct sets
+    c = ring.acquire(4)
+    assert c["x"].shape == (4, 8) and a["x"].shape == (2, 8)
+
+
+def test_stream_runtime_ring_off_matches_on():
+    """StreamRuntime honors device_ring=False (host-staged comparator)
+    and both modes drain/account identically."""
+    def run(device_ring):
+        rt = StreamRuntime(
+            make_engine(),
+            StreamConfig(queue_capacity=1 << 12, device_ring=device_ring))
+        cam = rt.connect()
+        cam.offer(events(np.random.default_rng(34), 2 * CAP + 9))
+        rec = rt.step(0.06)
+        out = np.asarray(rt.flush()["surface"])
+        return out, rec.digest, cam.ingested
+
+    on, off = run(True), run(False)
+    np.testing.assert_array_equal(on[0], off[0])
+    assert on[1] == off[1] and on[2] == off[2] == 2 * CAP + 9
+
+
+# ---------------------------------------------------------------------------
+# flow-control edges
+# ---------------------------------------------------------------------------
+
+def test_retry_after_before_any_drain_falls_back_to_period():
+    """drain_eps unset (no deadline has drained yet) vs observed: the
+    hint falls back to the sensor's own period, not the runtime's."""
+    rt = StreamRuntime(
+        make_engine(),
+        StreamConfig(policy="block", queue_capacity=8, deadline_s=0.01))
+    cam = rt.connect(stream.QoSClass(tier="slow", period_s=0.04))
+    assert cam.drain_eps is None
+    r = cam.offer(events(np.random.default_rng(40), 12))
+    assert r == 8 and r.refused == 4
+    assert r.retry_after == pytest.approx(0.04)   # period, drain unknown
+
+
+def test_idle_deadlines_do_not_fabricate_drain_rate():
+    """Steps that drain nothing leave the EWMA unset — an idle sensor
+    must not observe a zero rate (which would blow the hint up)."""
+    rt = StreamRuntime(make_engine(), StreamConfig(deadline_s=0.01))
+    cam = rt.connect()
+    for k in range(1, 4):
+        rt.step(k * 0.01)                         # served, zero drained
+    rt.flush()
+    assert cam.drain_eps is None
+    assert cam.offer((np.array([], np.int32),) * 4).retry_after == 0.0
+
+
+def test_offer_empty_and_result_semantics():
+    """OfferResult int/truthiness: a short block-policy offer is falsy
+    exactly when nothing was consumed; drop_newest consumes (truthily)
+    even when everything drops."""
+    rt = StreamRuntime(
+        make_engine(), StreamConfig(policy="block", queue_capacity=4))
+    cam = rt.connect()
+    empty = (np.array([], np.int32),) * 4
+    r = cam.offer(empty)
+    assert r == 0 and not r and r.retry_after == 0.0
+    ev = events(np.random.default_rng(41), 4)
+    full = cam.offer(ev)
+    assert full and full == 4 and full + 1 == 5   # plain int arithmetic
+    again = cam.offer(ev)
+    assert not again and again.refused == 4       # blocked: falsy
+    assert again.retry_after > 0.0
+
+    rt2 = StreamRuntime(
+        make_engine(), StreamConfig(policy="drop_newest", queue_capacity=4))
+    cam2 = rt2.connect()
+    cam2.offer(ev)
+    r2 = cam2.offer(ev)                           # queue full: all dropped
+    assert r2 == 4 and bool(r2)                   # consumed, hence truthy
+    assert r2.accepted == 0 and r2.dropped == 4
+    assert cam2.offer(empty) == 0
+
+
+def test_ewma_spans_deferred_steps():
+    """A sensor deferred by overload keeps its EWMA window open: when it
+    finally drains, the instantaneous rate is measured over the full
+    interval since its last service, not one period — so deferral slows
+    the observed rate instead of hiding it."""
+    rt = StreamRuntime(
+        make_engine(),
+        StreamConfig(deadline_s=0.01, queue_capacity=1 << 12,
+                     step_chunk_budget=1))
+    tel = rt.connect(stream.TELEMETRY_TIER)
+    ges = rt.connect(stream.GESTURE_TIER)
+    rng = np.random.default_rng(42)
+    rt.step(0.01)                                 # both served empty
+    assert tel.drain_eps is None
+    tel.offer(events(rng, CAP, t_lo=0.01, t_hi=0.02))
+    ges.offer(events(rng, CAP, t_lo=0.01, t_hi=0.02))
+    rec = rt.step(0.02)                           # budget 1: tel defers
+    assert rec.overload and tel.deferrals == CAP
+    assert tel.drain_eps is None                  # no drain, no update
+    rt.step(0.03)                                 # tel finally drains
+    rt.flush()
+    # CAP events over the 0.01 -> 0.03 window, not over one period
+    assert tel.drain_eps == pytest.approx(CAP / 0.02)
+    tel.offer(events(rng, CAP // 2, t_lo=0.03, t_hi=0.04))
+    rt.step(0.04)
+    rt.flush()
+    inst = (CAP // 2) / 0.01
+    want = 0.3 * inst + 0.7 * (CAP / 0.02)        # the EWMA folds in
+    assert tel.drain_eps == pytest.approx(want)
+
+
 def test_qos_multi_spec_step_reads():
     """Sensors carrying their own ReadoutSpec get it served in the same
     step (one fused dispatch per unique spec), bit-identical to plain
