@@ -37,6 +37,12 @@ scenes at their naturally different rates, ~4 Meps offered):
     sensors stream CNN logits every deadline, fused into the stage-0
     dispatch and digest-chained into the oracle gate.  Tier-tagged
     ``[gesture]`` and regression-gated like the plain tier rows.
+  * ``stream_tier_energy_uj`` — the analog-fidelity QoS scenario: the
+    gesture tier serves the analog_3d eDRAM readout (noise key recorded
+    per step, so the oracle replays it bitwise) with a denoise head;
+    the row per tier is the modeled energy total from the
+    ``hw.energy_model`` metering layer, trend-gated per tier.  The
+    harness asserts analog write energy/event >= 10x below digital.
   * ``stream_ring_ingest_8sensors_us`` / ``stream_ring_overlap_speedup``
     — the device-resident ingest ring at 8 sensors of mixed traffic vs
     the host-staged synchronous comparator (see ``ring_rows``); the
@@ -357,6 +363,71 @@ def model_rows():
     ]
 
 
+def energy_rows():
+    """Analog-fidelity streaming under QoS overload, energy-metered.
+
+    The gesture tier's per-tier spec serves the analog_3d eDRAM readout
+    (per-cell leakage-rate spread drawn from the folded noise key) with
+    the STCF denoise head fused in; telemetry keeps the digital surface.
+    Same overloaded chunk budget as ``qos_rows``, and the whole run —
+    noise draws included — replays bitwise through the synchronous
+    oracle via the recorded per-step ``noise_step`` (the acceptance
+    gate).  The emitted rows are the per-tier modeled energy totals
+    (``hw.energy_model`` metering: write x events, leakage x retention
+    window, read x dispatches), trend-gated per tier by ``compare.py``
+    like the p99 rows.  The harness also asserts the headline ordering:
+    the analog gesture tier's energy *per ingested event* is >= 10x
+    below the digital telemetry tier's."""
+    import dataclasses
+
+    from repro.serve import fidelity as fm
+
+    head_spec = rs.ReadoutSpec(
+        surface=rs.surface(fidelity=fm.analog_3d()),
+        stcf=rs.stcf(decay=rs.surface(fidelity=fm.analog_3d())),
+        labels=rs.denoise(input="stcf"),
+    )
+
+    def feeds():
+        fs = _tiered_feeds(seed=19)
+        for f in fs:
+            if f.qos.tier == "gesture":
+                f.qos = dataclasses.replace(f.qos, spec=head_spec,
+                                            slo_p99_s=1.0)
+        return fs
+
+    def scfg():
+        return StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                            deadline_s=DEADLINE, step_chunk_budget=3,
+                            pipeline=True)
+
+    # warm the jit cache (stage-0, analog and fused-head shapes alike)
+    rp.replay(TimeSurfaceEngine(_engine_cfg()), feeds(), scfg(),
+              rs.SURFACE_SPEC, arrival_substeps=SUBSTEPS)
+    report = rp.replay(TimeSurfaceEngine(_engine_cfg()), feeds(), scfg(),
+                       rs.SURFACE_SPEC, arrival_substeps=SUBSTEPS)
+    rp.check_oracle(report, lambda: TimeSurfaceEngine(_engine_cfg()),
+                    rs.SURFACE_SPEC)
+
+    tiers = report.tier_energy_uj
+    assert set(tiers) == {"gesture", "telemetry"}, tiers
+    for tier, row in tiers.items():
+        assert row["total_uj"] > 0, f"no energy metered for {tier}: {row}"
+    g_ing = report.tiers["gesture"]["ingested"]
+    t_ing = report.tiers["telemetry"]["ingested"]
+    assert g_ing > 0 and t_ing > 0
+    g_nj = tiers["gesture"]["write_uj"] * 1e3 / g_ing
+    t_nj = tiers["telemetry"]["write_uj"] * 1e3 / t_ing
+    assert g_nj * 10 <= t_nj, (
+        f"analog write energy/event not >=10x below digital: "
+        f"gesture {g_nj:.4f} vs telemetry {t_nj:.4f} nJ/event"
+    )
+    return [
+        ("stream_tier_energy_uj", None, tiers[tier]["total_uj"], tier)
+        for tier in sorted(tiers)
+    ]
+
+
 def ring_rows():
     """Device-ring ingest overlap at 8 sensors of mixed traffic.
 
@@ -433,5 +504,6 @@ def rows():
     out.extend(churn_rows())
     out.extend(qos_rows())
     out.extend(model_rows())
+    out.extend(energy_rows())
     out.extend(ring_rows())
     return out

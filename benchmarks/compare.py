@@ -33,6 +33,16 @@ noisy on shared runners to gate individually):
     the double-buffered device-resident ingress path vs per-part
     ``to_event_batch`` staging with no overlap, bitwise-gated before
     timing.
+  * analog-fidelity serving events/sec
+    (``serve_analog_events_per_sec``.derived, higher) — the analog_3d
+    eDRAM readout with the per-cell noise draw in the dispatch; the
+    harness asserts the sigma=0 bitwise anchor and the <= 25%-of-digital
+    overhead contract before emitting the row.
+  * **per-tier** modeled energy under the analog-fidelity QoS scenario
+    (``stream_tier_energy_uj``.derived, lower, keyed ``name[tier]``) —
+    the ``hw.energy_model`` metering totals; deterministic traffic makes
+    these near-exact, so a regression means the cost model or the
+    metering hooks changed, not the runner.
 
 Rows are keyed by ``(name, tier)`` — ``tier`` is null for global rows —
 and a metric regresses when it is more than ``--threshold`` (default
@@ -94,6 +104,9 @@ GATES: List[Tuple[str, str, str, str]] = [
      "higher"),
     ("BENCH_stream.json", r"^stream_ring_overlap_speedup$", "derived",
      "higher"),
+    ("BENCH_serve.json", r"^serve_analog_events_per_sec$", "derived",
+     "higher"),
+    ("BENCH_stream.json", r"^stream_tier_energy_uj$", "derived", "lower"),
 ]
 
 #: how many trailing trend runs the median reference uses

@@ -35,6 +35,7 @@ import jax
 import numpy as np
 
 from repro.events import synthetic as syn
+from repro.serve import fidelity as fidelity_mod
 from repro.serve import spec as spec_mod
 from repro.serve.stream import (
     DEFAULT_QOS, GESTURE_TIER, TELEMETRY_TIER, QoSClass, StepRecord,
@@ -96,6 +97,10 @@ class ReplayReport:
     # wall-clock latencies) — see StreamRuntime.tier_counters /
     # tier_latencies_us for the key meanings
     tiers: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    # modeled energy (hw.energy_model metering): totals in uJ plus the
+    # per-tier split — see StreamRuntime.stats()["energy"]
+    energy_uj: Dict[str, float] = dataclasses.field(default_factory=dict)
+    tier_energy_uj: Dict[str, dict] = dataclasses.field(default_factory=dict)
     # the bitwise trail: per-step product digests + the full action log
     digests: List[str] = dataclasses.field(default_factory=list, repr=False)
     log: list = dataclasses.field(default_factory=list, repr=False)
@@ -121,10 +126,22 @@ class ReplayReport:
             p99s = f"{p99 / 1e3:.2f}ms" if p99 is not None else "n/a"
             slo = row.get("slo_p99_us")
             slos = f"/{slo / 1e3:.0f}ms SLO" if slo is not None else ""
+            energy = self.tier_energy_uj.get(tier)
+            ej = (f"  energy {energy['total_uj']:.2f}uJ"
+                  if energy is not None else "")
             lines.append(
                 f"  tier {tier}: offered {row['offered']}"
                 f"  ingested {row['ingested']}  dropped {row['dropped']}"
-                f"  deferred {row['deferred']}  p99 {p99s}{slos}"
+                f"  deferred {row['deferred']}  p99 {p99s}{slos}{ej}"
+            )
+        if self.energy_uj:
+            per_ev = self.energy_uj.get("energy_per_event_nj")
+            pe = f"  ({per_ev:.3f} nJ/event)" if per_ev else ""
+            lines.append(
+                f"  modeled energy: write "
+                f"{self.energy_uj['energy_write_uj']:.2f}uJ  read "
+                f"{self.energy_uj['energy_read_uj']:.2f}uJ  leak "
+                f"{self.energy_uj['energy_leak_uj']:.2f}uJ{pe}"
             )
         return "\n".join(lines)
 
@@ -235,7 +252,10 @@ def replay(
         latency_p50_us=st["latency_p50_us"],
         latency_p95_us=st["latency_p95_us"],
         latency_p99_us=st["latency_p99_us"],
-        tiers=tiers, digests=digests, log=list(runtime.log),
+        tiers=tiers,
+        energy_uj={k: v for k, v in st["energy"].items() if k != "tiers"},
+        tier_energy_uj=dict(st["energy"]["tiers"]),
+        digests=digests, log=list(runtime.log),
     )
 
 
@@ -290,7 +310,16 @@ def oracle_digests(
             # read the specs the step recorded (QoS steps may serve
             # several); pre-QoS logs recorded none -> the caller's spec
             specs = rec.specs or (spec,)
-            products_list = [engine.read(sp, rec.t_read) for sp in specs]
+            # analog-fidelity specs re-fold the recorded noise key (the
+            # step index + the oracle's own attach-replayed slot epochs)
+            # so the replay reproduces every per-cell draw bitwise
+            ns = getattr(rec, "noise_step", 0)
+            products_list = [
+                engine.read(sp, rec.t_read, noise_step=ns)
+                if fidelity_mod.spec_needs_noise(sp)
+                else engine.read(sp, rec.t_read)
+                for sp in specs
+            ]
             jax.block_until_ready(products_list)
             out.append(digest_step(products_list))
     return out

@@ -206,6 +206,116 @@ def isc_array_report(
     )
 
 
+# ----------------------------------------------------------------------------
+# runtime energy metering (the serving stack's per-sensor accountant)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnergyCosts:
+    """The static per-operation cost card of one fidelity mode:
+    J per event written, J per cell per readout dispatch, and W of
+    retention leakage per cell.  Derived once from the same analytic
+    models Fig. 7/8 are derived from, then multiplied by exact runtime
+    counters (events, dispatches, wall-clock retention) host-side."""
+
+    mode: str
+    write_j_per_event: float
+    read_j_per_cell: float
+    leak_w_per_cell: float
+
+
+class EnergyMeter:
+    """Attributes modeled energy to runtime activity, per fidelity mode.
+
+    The serving stack's counters are exact (events ingested, fused
+    dispatches, retention wall-clock); this class turns them into joules
+    using the mode's substrate model:
+
+    ``ideal``      the digital baseline — 16-bit SRAM SAE storage costed
+                   with [53]'s per-bit write energy and leakage (the
+                   paper's Fig. 8 comparison axis)
+    ``analog_3d``  the MOMCAP cell: CV^2 write through the LL switch,
+                   source-follower read, capacitor retention leakage
+    ``analog_2d``  the 3D cell costs plus the 2D integration's per-event
+                   long-wire buffer + AER enc/dec energy (Fig. 7c)
+
+    Reads are costed per *cell per dispatch* (a fused spec read samples
+    the whole per-slot array once); leakage is costed per cell over the
+    retention window actually served (wall-clock between attach and the
+    accounting instant).  All methods are pure host float math — the
+    meter never touches device state, so metering cannot perturb the
+    bitwise replay contract.
+    """
+
+    def __init__(
+        self,
+        h: int = C.QVGA_H,
+        w: int = C.QVGA_W,
+        polarities: int = 2,
+        cmem_f: float = C.ISC_CMEM_F,
+        n_bits: int = C.TIMESTAMP_BITS,
+    ):
+        self.h, self.w, self.polarities = h, w, polarities
+        self.cmem_f, self.n_bits = cmem_f, n_bits
+        self._costs: Dict[str, EnergyCosts] = {}
+
+    @property
+    def cells(self) -> int:
+        """Cells of one sensor's array (polarity planes included)."""
+        return self.h * self.w * self.polarities
+
+    def costs(self, mode: str) -> EnergyCosts:
+        card = self._costs.get(mode)
+        if card is not None:
+            return card
+        if mode == "ideal":
+            e_w = C.SRAM_WRITE_ENERGY_PER_BIT_J * self.n_bits
+            card = EnergyCosts(
+                mode=mode,
+                write_j_per_event=e_w,
+                # SRAM reads cost less than writes (Sec. IV-B's 1.5-6x
+                # band); take the conservative end, same as spice_fit
+                read_j_per_cell=e_w / C.SRAM_WRITE_READ_RATIO,
+                leak_w_per_cell=(C.SRAM_LEAKAGE_PER_CELL_A
+                                 * C.SRAM_VDD_V * self.n_bits),
+            )
+        elif mode in ("analog_3d", "analog_2d"):
+            e_w = cell_write_energy(self.cmem_f)
+            if mode == "analog_2d":
+                # every event also charges one WBL + one WWL through the
+                # tapered drivers, plus the AER enc/dec handshake — the
+                # same per-event energies arch_2d charges (Fig. 7c)
+                wire_um = self.h * 3.9 + self.w * 4.8
+                c_wire = (WIRE_CAP_PER_UM_F * wire_um
+                          * CROSSBAR_AREA_OVERHEAD)
+                e_buf = BUFFER_CHAIN_OVERHEAD * c_wire * C.VDD_V**2
+                e_w = e_w + (1.0 + ENCDEC_TO_BUFFER_RATIO) * e_buf
+            card = EnergyCosts(
+                mode=mode,
+                write_j_per_event=e_w,
+                read_j_per_cell=(READ_WRITE_ENERGY_RATIO
+                                 * cell_write_energy(self.cmem_f)),
+                leak_w_per_cell=cell_leakage_power(self.cmem_f),
+            )
+        else:
+            raise ValueError(f"unknown fidelity mode {mode!r}")
+        self._costs[mode] = card
+        return card
+
+    def write_energy_j(self, mode: str, n_events: int) -> float:
+        """Ingest cost: write energy x events scattered into the array."""
+        return self.costs(mode).write_j_per_event * n_events
+
+    def read_energy_j(self, mode: str, n_dispatches: int = 1) -> float:
+        """Readout cost: per-cell access energy x the whole array, per
+        fused dispatch that sampled this sensor's slot."""
+        return self.costs(mode).read_j_per_cell * self.cells * n_dispatches
+
+    def leakage_energy_j(self, mode: str, window_s: float) -> float:
+        """Retention cost: leakage power x cells x the served window."""
+        return self.costs(mode).leak_w_per_cell * self.cells * window_s
+
+
 def compare_isc_sram(**kw) -> Dict[str, float]:
     """Fig. 8: power and area ratios of SRAM implementations over ISC."""
     isc = isc_array_report(**kw)

@@ -565,6 +565,61 @@ def ts_wrapped_read(
                     backend=backend)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "coupling", "block", "backend")
+)
+def ts_analog_read(
+    sae: jax.Array,          # (..., H, W) raw SAE stamps (NEVER = -inf)
+    t_now,
+    params,                  # DecayParams (uniform; the spice-fit transient)
+    eps: Optional[jax.Array] = None,        # (..., H, W) per-cell rate mult
+    row_hits: Optional[jax.Array] = None,   # (..., H) per-row write counts
+    col_hits: Optional[jax.Array] = None,   # (..., W) per-col write counts
+    alpha: float = 0.05,
+    coupling: float = 0.002,
+    block: Optional[Tuple[int, int]] = None,
+    backend: Optional[str] = None,
+):
+    """Analog eDRAM readout: leakage transient + per-cell Monte-Carlo
+    spread (+ the 2D crossbar's half-select disturbance).
+
+    The per-cell parameter spread scales each cell's leakage *rate* by
+    ``eps`` (``edram.sample_variability`` semantics: ``tau -> tau/eps``),
+    which is exactly a per-cell dilation of the elapsed time — so the
+    spread is folded into a **virtual SAE read at ``t_now = 0``**
+    (``sae' = -(dt * eps)``, the ``ts_wrapped_read`` idiom: the kernel's
+    ``0 - sae'`` reproduces ``dt * eps`` exactly) and dispatched through
+    the same jitted ``ts_decay`` entry every digital surface read uses.
+    With ``eps=None`` and no half-select the call **is** the digital
+    ``ts_decay`` program on ``sae`` — bitwise, by construction: that is
+    the fidelity subsystem's structural anchor
+    (``test_kernel_equivalence.check_ts_analog_read``).
+
+    ``row_hits``/``col_hits`` (both or neither) apply the 2D half-select
+    droop: every write in a row multiplies the whole row's stored charge
+    by ``1 - alpha`` (LL-switch leak during the selected cell's write
+    pulse) and couples ``1 - coupling`` into its column — the Fig. 4
+    model, batched over the leading dims.
+    """
+    backend = resolve_backend(backend)
+    if eps is None and row_hits is None:
+        return ts_decay(sae, t_now, params, block=block, backend=backend)
+    if eps is None:
+        v = ts_decay(sae, t_now, params, block=block, backend=backend)
+    else:
+        dt = jnp.float32(t_now) - sae
+        virtual = jnp.where(jnp.isfinite(sae), -(dt * eps), -jnp.inf)
+        v = ts_decay(virtual, jnp.float32(0.0), params, block=block,
+                     backend=backend)
+    if row_hits is not None:
+        if col_hits is None:
+            raise ValueError("row_hits and col_hits must be given together")
+        rowf = (1.0 - alpha) ** row_hits.astype(jnp.float32)
+        colf = (1.0 - coupling) ** col_hits.astype(jnp.float32)
+        v = v * rowf[..., :, None] * colf[..., None, :]
+    return v
+
+
 @functools.partial(jax.jit, static_argnames=("block", "backend"))
 def decay_scan(
     a: jax.Array,

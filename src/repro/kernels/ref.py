@@ -78,6 +78,31 @@ def ts_wrapped_read_ref(stored, t_read, tau, n_bits=16, tick=1e-3):
     return jnp.where(jnp.isfinite(dt), v, 0.0).astype(jnp.float32)
 
 
+def ts_analog_read_ref(sae, t_read, params, eps=None, row_hits=None,
+                       col_hits=None, alpha=0.05, coupling=0.002):
+    """Oracle for kernels.ops.ts_analog_read: the direct Sec. IV-C cell
+    physics — per-cell rate spread dilates the elapsed time through the
+    double-exp transient, then the 2D half-select droop multiplies per
+    row/column write counts.  Written as the plain per-cell leakage
+    expression (not via the virtual-SAE folding the op uses) so it is an
+    independent check, not a restatement.
+    """
+    dt = jnp.float32(t_read) - sae
+    if eps is not None:
+        dt = dt * eps
+    v = (
+        params.a1 * jnp.exp(-dt / params.tau1)
+        + params.a2 * jnp.exp(-dt / params.tau2)
+        + params.b
+    )
+    v = jnp.where(jnp.isfinite(sae), v, 0.0).astype(jnp.float32)
+    if row_hits is not None:
+        rowf = (1.0 - alpha) ** row_hits.astype(jnp.float32)
+        colf = (1.0 - coupling) ** col_hits.astype(jnp.float32)
+        v = v * rowf[..., :, None] * colf[..., None, :]
+    return v
+
+
 def classify_ref(params, surfaces):
     """Oracle for the ``classify`` head product: plain-XLA stack ->
     ``cnn_apply`` logits, with no barrier and no fusion into a spec

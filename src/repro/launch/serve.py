@@ -10,6 +10,10 @@ Three modes behind one entrypoint:
                   pipelined dispatch; reports throughput, p50/p95/p99
                   readout latency, and drop rate, then gates the whole
                   replay bitwise against a synchronous oracle
+  * ``sweep``   — accuracy-vs-energy: digital vs analog-fidelity serving
+                  (ideal / analog_3d / analog_2d) across a cmem x retention
+                  grid on mixed-scene traffic; emits the frontier as a
+                  JSON + markdown artifact and prints the paper verdicts
 
     PYTHONPATH=src python -m repro.launch.serve tokens --arch gemma2-27b \
         --reduced --requests 4 --new-tokens 16
@@ -27,6 +31,10 @@ Three modes behind one entrypoint:
     PYTHONPATH=src python -m repro.launch.serve stream --tiers --classify 4 \
         # per-tier model serving: the gesture tier streams logits,
         # digest-chained and gated by the bitwise replay oracle
+    PYTHONPATH=src python -m repro.launch.serve sweep --cmem 10,20 \
+        --retention 12,24 --out artifacts
+        # digital-vs-analog denoise accuracy + logit drift vs modeled
+        # energy/event; writes sweep.json + sweep.md
 """
 from __future__ import annotations
 
@@ -269,6 +277,163 @@ def run_stream(args) -> None:
               f"bitwise oracle gate: OK over {n} deadlines")
 
 
+def _sweep_spec(rs, fid, n_classes):
+    """The sweep's serving contract: analog-decayed surface + STCF
+    denoise labels + CNN logits in one fused dispatch."""
+    return rs.ReadoutSpec(
+        surface=rs.surface(fidelity=fid),
+        stcf=rs.stcf(decay=rs.surface(fidelity=fid)),
+        labels=rs.denoise(input="stcf"),
+        logits=rs.classify(n_classes=n_classes, width=16),
+    )
+
+
+def _pareto(rows):
+    """Rows not dominated on (energy/event lower, agreement higher)."""
+    front = []
+    for r in rows:
+        dominated = any(
+            o is not r
+            and o["energy_per_event_nj"] <= r["energy_per_event_nj"]
+            and o["denoise_agreement"] >= r["denoise_agreement"]
+            and (o["energy_per_event_nj"] < r["energy_per_event_nj"]
+                 or o["denoise_agreement"] > r["denoise_agreement"])
+            for o in rows
+        )
+        if not dominated:
+            front.append(r)
+    return sorted(front, key=lambda r: r["energy_per_event_nj"])
+
+
+def run_sweep(args) -> None:
+    import json
+    import pathlib
+
+    from repro.events import replay as rp
+    from repro.serve import fidelity as fm
+    from repro.serve import spec as rs
+    from repro.serve.stream import StreamConfig
+    from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+    try:
+        h, w = (int(v) for v in args.hw.split("x"))
+    except ValueError:
+        raise SystemExit(
+            f"--hw must be HxW (e.g. 240x320), got {args.hw!r}"
+        ) from None
+    cmems = [float(v) * 1e-15 for v in args.cmem.split(",")]
+    windows = [float(v) * 1e-3 for v in args.retention.split(",")]
+    fid_for = {"ideal": None, "analog_3d": fm.analog_3d(),
+               "analog_2d": fm.analog_2d()}
+    scfg = StreamConfig(policy="drop_oldest", queue_capacity=1 << 13,
+                        deadline_s=args.deadline, pipeline=True)
+
+    rows = []
+    for cmem in cmems:
+        for tw in windows:
+            ref = None  # the grid point's digital run
+            for mode, fid in fid_for.items():
+                spec = _sweep_spec(rs, fid, args.classes)
+                cfg = TSEngineConfig(
+                    h=h, w=w, n_slots=args.sensors + 2,
+                    chunk_capacity=args.chunk, mode="edram",
+                    cmem_f=cmem, tau_tw=tw, specs=(spec,),
+                )
+                eng = TimeSurfaceEngine(cfg)
+                # identical traffic per mode: ingest is fidelity-blind, so
+                # the SAE state matches and the readouts are comparable
+                feeds = rp.mixed_scene_feeds(h, w, args.duration,
+                                             args.sensors, seed=args.seed)
+                report = rp.replay(eng, feeds, scfg, spec,
+                                   arrival_substeps=2)
+                out = eng.read(spec, report.n_steps * scfg.deadline_s,
+                               noise_step=report.n_steps)
+                lab = np.asarray(out["labels"])
+                lg = np.asarray(out["logits"])
+                act = np.isfinite(np.asarray(eng.state.surfaces.sae))
+                while act.ndim > lab.ndim:   # fold polarity planes
+                    act = act.any(axis=1)
+                live = act.reshape(act.shape[0], -1).any(axis=1)
+                if ref is None:
+                    ref = (lab, lg)
+                agree = (float((lab[act] == ref[0][act]).mean())
+                         if act.any() else 1.0)
+                drift = float(np.abs(lg - ref[1]).max())
+                am = (float((lg[live].argmax(-1)
+                             == ref[1][live].argmax(-1)).mean())
+                      if live.any() else 1.0)
+                nj = report.energy_uj.get("energy_per_event_nj") or 0.0
+                rows.append(dict(
+                    cmem_ff=cmem * 1e15, retention_ms=tw * 1e3, mode=mode,
+                    denoise_agreement=agree, logit_max_drift=drift,
+                    argmax_agreement=am, energy_per_event_nj=nj,
+                    ingested=report.ingested,
+                ))
+                print(f"cmem {cmem*1e15:5.1f}fF  tw {tw*1e3:5.1f}ms  "
+                      f"{mode:>9s}: denoise agree {agree:.4f}  "
+                      f"logit drift {drift:.4f}  argmax {am:.3f}  "
+                      f"{nj:.4f} nJ/event")
+    # energy ratio vs the same grid point's digital run
+    ideal_nj = {(r["cmem_ff"], r["retention_ms"]): r["energy_per_event_nj"]
+                for r in rows if r["mode"] == "ideal"}
+    for r in rows:
+        base = ideal_nj[(r["cmem_ff"], r["retention_ms"])]
+        r["energy_ratio_vs_ideal"] = (
+            base / r["energy_per_event_nj"] if r["energy_per_event_nj"]
+            else float("inf"))
+
+    a3 = [r for r in rows if r["mode"] == "analog_3d"]
+    a2 = [r for r in rows if r["mode"] == "analog_2d"]
+    mean = lambda xs: sum(xs) / len(xs)  # noqa: E731
+    verdicts = {
+        "analog_3d_within_tol": all(
+            r["denoise_agreement"] >= 1.0 - args.tol for r in a3),
+        "analog_3d_energy_factor": min(
+            r["energy_ratio_vs_ideal"] for r in a3),
+        "analog_3d_energy_ok": all(
+            r["energy_ratio_vs_ideal"] >= args.energy_factor for r in a3),
+        "analog_2d_worse_than_3d": (
+            mean([r["denoise_agreement"] for r in a2])
+            < mean([r["denoise_agreement"] for r in a3])),
+    }
+    front = _pareto(rows)
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "sweep.json").write_text(json.dumps(
+        dict(hw=args.hw, duration=args.duration, sensors=args.sensors,
+             seed=args.seed, rows=rows, verdicts=verdicts,
+             frontier=[dict(r) for r in front]), indent=2) + "\n")
+    hdr = ("| cmem (fF) | retention (ms) | mode | denoise agree | "
+           "logit drift | argmax agree | nJ/event | vs digital |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    fmt = ("| {cmem_ff:.1f} | {retention_ms:.1f} | {mode} | "
+           "{denoise_agreement:.4f} | {logit_max_drift:.4f} | "
+           "{argmax_agreement:.3f} | {energy_per_event_nj:.4f} | "
+           "{energy_ratio_vs_ideal:.0f}x |\n")
+    md = ["# Accuracy-vs-energy sweep\n\n",
+          f"`{args.hw}`, {args.sensors} sensors, {args.duration}s "
+          f"mixed-scene traffic, seed {args.seed}.\n\n", hdr]
+    md += [fmt.format(**r) for r in rows]
+    md += ["\n## Frontier (Pareto: lower energy, higher accuracy)\n\n", hdr]
+    md += [fmt.format(**r) for r in front]
+    md += ["\n## Verdicts\n\n"]
+    md += [f"- analog_3d denoise within {args.tol:.0%} of digital: "
+           f"**{verdicts['analog_3d_within_tol']}**\n",
+           f"- analog_3d energy/event >= {args.energy_factor:.0f}x lower "
+           f"than digital: **{verdicts['analog_3d_energy_ok']}** "
+           f"(min {verdicts['analog_3d_energy_factor']:.0f}x)\n",
+           f"- analog_2d measurably worse (half-select): "
+           f"**{verdicts['analog_2d_worse_than_3d']}**\n"]
+    (out_dir / "sweep.md").write_text("".join(md))
+    print(f"wrote {out_dir / 'sweep.json'} and {out_dir / 'sweep.md'}")
+    print(f"verdicts: analog_3d within {args.tol:.0%}: "
+          f"{verdicts['analog_3d_within_tol']}  |  energy >= "
+          f"{args.energy_factor:.0f}x: {verdicts['analog_3d_energy_ok']} "
+          f"(min {verdicts['analog_3d_energy_factor']:.0f}x)  |  "
+          f"analog_2d worse: {verdicts['analog_2d_worse_than_3d']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--platform", choices=pf.PLATFORMS, default=None,
@@ -351,6 +516,28 @@ def main() -> None:
     st.add_argument("--no-oracle", action="store_true",
                     help="skip the synchronous bitwise oracle gate")
 
+    sw = sub.add_parser("sweep", help="accuracy-vs-energy fidelity sweep")
+    sw.add_argument("--hw", default="48x64", help="HxW, e.g. 120x160")
+    sw.add_argument("--sensors", type=int, default=4)
+    sw.add_argument("--duration", type=float, default=0.06,
+                    help="virtual seconds of traffic per run")
+    sw.add_argument("--deadline", type=float, default=0.005)
+    sw.add_argument("--chunk", type=int, default=2048)
+    sw.add_argument("--cmem", default="10,20", metavar="FF,FF",
+                    help="comma-separated cell capacitances in fF")
+    sw.add_argument("--retention", default="12,24", metavar="MS,MS",
+                    help="comma-separated STCF retention windows in ms")
+    sw.add_argument("--classes", type=int, default=4,
+                    help="CNN head classes for the logit-drift probe")
+    sw.add_argument("--tol", type=float, default=0.02,
+                    help="denoise-agreement tolerance for the analog_3d "
+                         "verdict (paper: within 2%% of digital)")
+    sw.add_argument("--energy-factor", type=float, default=10.0,
+                    help="required digital/analog energy-per-event ratio")
+    sw.add_argument("--out", default="artifacts",
+                    help="directory for sweep.json / sweep.md")
+    sw.add_argument("--seed", type=int, default=0)
+
     args = ap.parse_args()
     # platform config must precede the first jax device use (every
     # subcommand resolves a backend or touches devices early)
@@ -361,6 +548,8 @@ def main() -> None:
         run_tokens(args)
     elif args.engine == "sensors":
         run_sensors(args)
+    elif args.engine == "sweep":
+        run_sweep(args)
     else:
         run_stream(args)
 

@@ -1,5 +1,8 @@
 from repro.serve.api import SensorSession, attach_many, pool_items  # noqa: F401
 from repro.serve.engine import Request, Result, ServeEngine  # noqa: F401
+from repro.serve.fidelity import (  # noqa: F401
+    IDEAL, FidelityModel, analog_2d, analog_3d,
+)
 from repro.serve.spec import (  # noqa: F401
     SURFACE_SPEC, ReadoutSpec, count, ebbi, mask, sae_raw, stcf, surface,
     ts_quantized,

@@ -1,0 +1,217 @@
+"""Analog-fidelity models: serve reads through the eDRAM cell physics.
+
+The paper's claim is a *trade*: the MOMCAP + LL-switch analog SAE
+(Sec. III-A) serves time-surfaces at ~3 orders of magnitude lower power
+than 16-bit SRAM while keeping STCF denoise accuracy "almost
+equivalent".  The digital serving stack only ever exercises the ideal
+side of that trade; a ``FidelityModel`` attaches the analog side to any
+surface-like spec product so the *same* fused dispatch serves what the
+silicon would have read:
+
+    ``ideal``      the digital read (the default — a no-op marker)
+    ``analog_3d``  the 3DS-ISC cell: double-exp leakage transient
+                   (``edram.DecayParams`` from the SPICE fit) plus
+                   per-cell Monte-Carlo leakage-rate spread
+    ``analog_2d``  the 2D-integration strawman: everything above plus
+                   the crossbar's half-select disturbance (every write
+                   droops the victim row/column, Fig. 4)
+
+Attach one to a ``Surface`` (``surface(fidelity=analog_3d())``) — masks
+and STCF products inherit through their ``decay`` field, and QoS tiers
+inherit through ``QoSClass.spec``.  ``compile_spec`` folds the model
+into the same single fused dispatch; the analog read lowers to
+``kernels.ops.ts_analog_read`` (per-cell spread folded into a
+time-dilated virtual SAE, so every backend works and sigma = 0 is
+*bitwise* the digital ``ts_decay`` — the subsystem's structural anchor,
+pinned by ``test_kernel_equivalence.py::check_ts_analog_read``).
+
+Determinism contract: per-cell noise draws derive from a ``jax.random``
+key folded from the model's ``seed``, the runtime's **step index**, and
+each slot's **attach epoch** (``EngineState.generation``)::
+
+    key = fold_in(fold_in(PRNGKey(seed), noise_step), generation[s])
+
+Both fold inputs are recorded in the stream action log (``StepRecord.
+noise_step``; generations are reproduced by replaying the attach
+sequence), so the synchronous replay oracle reproduces every draw and
+the digest chain stays bitwise — noise included.  Draws are per-slot
+and element-wise, hence sharding-invariant: the device-parallel engine
+folds the same per-slot keys shard-locally.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edram
+
+__all__ = [
+    "FidelityModel", "IDEAL", "analog_3d", "analog_2d",
+    "resolved_sigma", "needs_noise", "cell_eps", "crossbar_hits",
+    "product_fidelity", "spec_needs_noise", "spec_needs_hits",
+    "spec_fidelity_mode",
+]
+
+_MODES = ("ideal", "analog_3d", "analog_2d")
+
+
+@dataclasses.dataclass(frozen=True)
+class FidelityModel:
+    """A frozen, hashable read-fidelity descriptor (part of the spec,
+    hence part of the jit cache key — attaching one compiles a new
+    program, it never mutates an existing one).
+
+    ``sigma`` is the relative per-cell leakage-rate spread; ``None``
+    resolves to the SPICE-calibrated ``edram.rate_sigma()`` at trace
+    time, ``0.0`` disables the Monte-Carlo draw entirely (the bitwise
+    digital anchor).  ``seed`` roots the noise key stream.  ``alpha`` /
+    ``coupling`` are the 2D half-select droop fractions (selected-row
+    victims / unselected coupling, Fig. 4) and only apply to
+    ``analog_2d``.
+    """
+
+    mode: str = "ideal"
+    sigma: Optional[float] = None
+    seed: int = 0
+    alpha: float = edram.HALF_SELECT_ALPHA
+    coupling: float = edram.HALF_SELECT_COUPLING
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"FidelityModel mode must be one of {_MODES}, "
+                f"got {self.mode!r}"
+            )
+        if self.sigma is not None and not self.sigma >= 0.0:
+            raise ValueError(
+                f"FidelityModel sigma must be >= 0, got {self.sigma}"
+            )
+        if not (0.0 <= self.alpha < 1.0 and 0.0 <= self.coupling < 1.0):
+            raise ValueError(
+                f"half-select fractions must lie in [0, 1): "
+                f"alpha={self.alpha}, coupling={self.coupling}"
+            )
+
+    @property
+    def is_analog(self) -> bool:
+        return self.mode != "ideal"
+
+
+#: the digital read — attaching it is a no-op by construction
+IDEAL = FidelityModel("ideal")
+
+
+def analog_3d(sigma: Optional[float] = None, seed: int = 0) -> FidelityModel:
+    """The 3DS-ISC analog cell: leakage transient + per-cell spread."""
+    return FidelityModel("analog_3d", sigma=sigma, seed=seed)
+
+
+def analog_2d(
+    sigma: Optional[float] = None,
+    seed: int = 0,
+    alpha: float = edram.HALF_SELECT_ALPHA,
+    coupling: float = edram.HALF_SELECT_COUPLING,
+) -> FidelityModel:
+    """The 2D-integration strawman: analog cell + half-select droop."""
+    return FidelityModel("analog_2d", sigma=sigma, seed=seed,
+                         alpha=alpha, coupling=coupling)
+
+
+@functools.lru_cache(maxsize=1)
+def _calibrated_sigma() -> float:
+    return float(edram.rate_sigma())
+
+
+def resolved_sigma(fid: FidelityModel) -> float:
+    """The host-float spread this model traces with (static: sigma = 0
+    must skip the noise path entirely so the anchor stays structural)."""
+    if not fid.is_analog:
+        return 0.0
+    return fid.sigma if fid.sigma is not None else _calibrated_sigma()
+
+
+def needs_noise(fid: Optional[FidelityModel]) -> bool:
+    """Whether serving this model draws per-cell noise (and therefore
+    needs the (noise_step, generation) key inputs threaded in)."""
+    return fid is not None and fid.is_analog and resolved_sigma(fid) > 0.0
+
+
+def cell_eps(
+    fid: FidelityModel,
+    noise_step,                    # traced int — the runtime step index
+    generation: jax.Array,         # (S,) int32 — per-slot attach epoch
+    pol_shape,                     # (P, H, W) static per-slot plane shape
+) -> jax.Array:
+    """Per-cell leakage-rate multipliers, (S,) + pol_shape float32.
+
+    eps[s] = 1 + sigma * N(0, 1) drawn from
+    ``fold_in(fold_in(PRNGKey(seed), noise_step), generation[s])`` — the
+    exact key contract the replay oracle reproduces.  Element-wise per
+    slot, so the sharded engine computes identical draws shard-locally.
+    """
+    sigma = resolved_sigma(fid)
+    base = jax.random.fold_in(
+        jax.random.PRNGKey(fid.seed), jnp.asarray(noise_step, jnp.int32)
+    )
+    keys = jax.vmap(lambda g: jax.random.fold_in(base, g))(generation)
+    draw = lambda k: 1.0 + jnp.float32(sigma) * jax.random.normal(
+        k, tuple(pol_shape), jnp.float32
+    )
+    return jax.vmap(draw)(keys)
+
+
+def crossbar_hits(counts: jax.Array):
+    """Per-row / per-column write counts for the half-select model, from
+    the engine's (S, H, W) counter plane: every write to (y, x)
+    half-selects all of row y and couples into all of column x.
+    Returned shaped (S, 1, H) / (S, 1, W) to broadcast over polarity."""
+    row_hits = jnp.sum(counts, axis=-1)[:, None, :]
+    col_hits = jnp.sum(counts, axis=-2)[:, None, :]
+    return row_hits, col_hits
+
+
+# ----------------------------------------------------------------------------
+# spec-level queries (used by serve.spec / the engine / the stream meter)
+# ----------------------------------------------------------------------------
+
+def product_fidelity(p) -> Optional[FidelityModel]:
+    """The fidelity model of one stage-0 product, or None.  Surface
+    carries it directly; Mask/Stcf inherit through their ``decay``."""
+    fid = getattr(p, "fidelity", None)
+    if fid is None:
+        fid = getattr(getattr(p, "decay", None), "fidelity", None)
+    return fid
+
+
+@functools.lru_cache(maxsize=256)
+def spec_needs_noise(spec) -> bool:
+    """Whether any product of ``spec`` draws per-cell noise.  Cached:
+    specs are frozen/hashable and the stream runtime asks per step."""
+    return any(needs_noise(product_fidelity(p)) for _, p in spec.products)
+
+
+@functools.lru_cache(maxsize=256)
+def spec_needs_hits(spec) -> bool:
+    """Whether any product of ``spec`` is analog_2d (and therefore needs
+    the counter plane for its half-select row/column hit counts)."""
+    return any(
+        (fid := product_fidelity(p)) is not None and fid.mode == "analog_2d"
+        for _, p in spec.products
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def spec_fidelity_mode(spec) -> str:
+    """The dominant fidelity mode of a spec, for energy attribution:
+    analog_2d > analog_3d > ideal (a spec mixing modes is metered at
+    its most analog — the substrate that must physically exist)."""
+    best = 0
+    for _, p in spec.products:
+        fid = product_fidelity(p)
+        if fid is not None:
+            best = max(best, _MODES.index(fid.mode))
+    return _MODES[best]

@@ -81,6 +81,8 @@ from repro.core import edram
 from repro.core import representations as representations_mod
 from repro.core import stcf as stcf_mod
 from repro.kernels import ops
+from repro.serve import fidelity as fidelity_mod
+from repro.serve.fidelity import FidelityModel
 
 __all__ = [
     "ReadoutSpec", "Surface", "Mask", "Stcf", "Count", "Ebbi", "SaeRaw",
@@ -100,14 +102,28 @@ class Surface:
     """Decayed time surface.  ``mode``/``tau``/``cmem_f`` default to the
     engine config's decay (None = inherit), so ``surface()`` is exactly
     the pre-spec ``readout``; overriding them serves a second decay
-    profile off the same SAE without touching the engine config."""
+    profile off the same SAE without touching the engine config.
+
+    ``fidelity`` attaches an analog read model (``serve.fidelity``):
+    the same fused dispatch then serves what the eDRAM silicon would
+    have read — leakage transient + per-cell spread (+ half-select for
+    ``analog_2d``).  ``None``/``IDEAL`` is the digital read; analog
+    modes require the product to resolve to ``mode="edram"``."""
 
     mode: Optional[str] = None       # "edram" | "ideal" | None (engine's)
     tau: Optional[float] = None      # ideal-TS decay constant override
     cmem_f: Optional[float] = None   # eDRAM storage-cap override
+    fidelity: Optional[FidelityModel] = None
 
     def __post_init__(self):
         assert self.mode in (None, "edram", "ideal"), self.mode
+        if self.fidelity is not None and not isinstance(
+            self.fidelity, FidelityModel
+        ):
+            raise TypeError(
+                f"Surface fidelity must be a FidelityModel, "
+                f"got {self.fidelity!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,6 +249,30 @@ classify = Classify
 denoise = Denoise
 
 
+def _validate_ranges(name: str, p) -> None:
+    """Range-check the static knobs of one product at spec construction
+    (named ``ValueError`` here instead of an opaque trace error deep in
+    ``read_stage0``).  Bounds: counter reads and quantized stamps pass
+    through exact float32 integer arithmetic, which holds up to 2^24."""
+    if isinstance(p, Count):
+        if not isinstance(p.n_bits, int) or not 1 <= p.n_bits <= 24:
+            raise ValueError(
+                f"product {name!r}: Count.n_bits must be an int in "
+                f"[1, 24], got {p.n_bits!r}"
+            )
+    elif isinstance(p, TsQuantized):
+        if not isinstance(p.n_bits, int) or not 1 <= p.n_bits <= 24:
+            raise ValueError(
+                f"product {name!r}: TsQuantized.n_bits must be an int "
+                f"in [1, 24], got {p.n_bits!r}"
+            )
+        if not (np.isfinite(p.tick) and p.tick > 0.0):
+            raise ValueError(
+                f"product {name!r}: TsQuantized.tick must be a finite "
+                f"positive duration in seconds, got {p.tick!r}"
+            )
+
+
 # ----------------------------------------------------------------------------
 # the spec
 # ----------------------------------------------------------------------------
@@ -263,6 +303,8 @@ class ReadoutSpec:
                     f"product {name!r} must be one of "
                     f"{[t.__name__ for t in _PRODUCT_TYPES]}, got {p!r}"
                 )
+        for name, p in products.items():   # range checks: fail here, with
+            _validate_ranges(name, p)      # the product name, not in jit
         for name, p in products.items():   # head wiring: validated here,
             if not isinstance(p, _HEAD_TYPES):   # before any tracing
                 continue
@@ -340,8 +382,11 @@ SURFACE_SPEC = ReadoutSpec(surface=Surface())
 
 
 def needs_counts(spec: ReadoutSpec) -> bool:
-    """Whether serving ``spec`` requires the pool's counter plane."""
-    return any(isinstance(p, Count) for _, p in spec.products)
+    """Whether serving ``spec`` requires the pool's counter plane:
+    ``count`` products read it directly, and ``analog_2d``-fidelity
+    products need it for their half-select row/column hit counts."""
+    return (any(isinstance(p, Count) for _, p in spec.products)
+            or fidelity_mod.spec_needs_hits(spec))
 
 
 # ----------------------------------------------------------------------------
@@ -358,6 +403,13 @@ def _decay_params(p: Surface, cfg) -> edram.DecayParams:
     """
     mode = p.mode or cfg.mode
     if mode == "ideal":
+        if p.fidelity is not None and p.fidelity.is_analog:
+            raise ValueError(
+                f"surface product resolves to mode='ideal' but carries "
+                f"analog fidelity {p.fidelity.mode!r}; the analog models "
+                "emulate the eDRAM cell (pass mode='edram' or drop the "
+                "fidelity)"
+            )
         if p.cmem_f is not None:
             raise ValueError(
                 f"surface product resolves to mode='ideal' but sets "
@@ -462,6 +514,42 @@ def compile_spec(spec: ReadoutSpec, cfg) -> CompiledSpec:
     )
 
 
+def _analog_read(
+    sae, counts, t_now, params, fid, noise_step, generation, name, cfg,
+    backend,
+):
+    """One analog surface read inside the fused stage-0 program: draw
+    the per-cell spread from the (seed, step, slot-epoch) key contract,
+    pull half-select hit counts off the counter plane for ``analog_2d``,
+    and dispatch ``ops.ts_analog_read``.  sigma = 0 skips the draw, so
+    that path IS the digital ``ts_decay`` program (the bitwise anchor).
+    """
+    eps = None
+    if fidelity_mod.needs_noise(fid):
+        if noise_step is None or generation is None:
+            raise ValueError(
+                f"spec product {name!r} draws per-cell noise; the read "
+                "must thread noise_step and the slot generations "
+                "(engine.read(..., noise_step=...))"
+            )
+        eps = fidelity_mod.cell_eps(fid, noise_step, generation,
+                                    sae.shape[1:])
+    row_hits = col_hits = None
+    if fid.mode == "analog_2d":
+        if counts is None:
+            raise ValueError(
+                f"spec product {name!r} has analog_2d fidelity and "
+                "needs the counter plane for its half-select hit "
+                "counts; declare the spec in TSEngineConfig.specs"
+            )
+        row_hits, col_hits = fidelity_mod.crossbar_hits(counts)
+    return ops.ts_analog_read(
+        sae, t_now, params, eps=eps, row_hits=row_hits, col_hits=col_hits,
+        alpha=fid.alpha, coupling=fid.coupling, block=cfg.block,
+        backend=backend,
+    )
+
+
 def read_stage0(
     sae: jax.Array,                        # (S, P, H, W) slot-pool SAE
     counts,                                # (S, H, W) int32 or None
@@ -471,6 +559,8 @@ def read_stage0(
     cfg,                                   # static (TSEngineConfig)
     backend: str,                          # static, pre-resolved
     statics: Tuple[Tuple[str, float], ...] = (),  # from resolve_static
+    noise_step=None,                       # traced int — runtime step index
+    generation=None,                       # (S,) int32 — slot attach epochs
 ) -> Dict[str, jax.Array]:
     """Trace-time body of the stage-0 pass: every surface product from
     one program.
@@ -479,26 +569,56 @@ def read_stage0(
     ``spec``/``cfg``/``backend``/``statics`` static.  Each product
     dispatches the same ``kernels.ops`` entry its standalone method used
     — independent subgraphs over the shared SAE input, so within-product
-    math (and bits) match the unfused dispatches.
+    math (and bits) match the unfused dispatches.  ``noise_step`` /
+    ``generation`` feed the analog-fidelity noise keys and are only
+    required when a product actually draws noise (a spec either needs
+    them or not — statically — so the pytree structure per spec is
+    stable and existing call sites pass nothing).
     """
     v_tws = dict(statics)
     out: Dict[str, jax.Array] = {}
     for name, p in spec.products:
+        fid = fidelity_mod.product_fidelity(p)
+        analog = fid is not None and fid.is_analog
         if isinstance(p, Surface):
-            out[name] = ops.ts_decay(sae, t_now, dynamic[name],
-                                     block=cfg.block, backend=backend)
+            if analog:
+                out[name] = _analog_read(
+                    sae, counts, t_now, dynamic[name], fid, noise_step,
+                    generation, name, cfg, backend,
+                )
+            else:
+                out[name] = ops.ts_decay(sae, t_now, dynamic[name],
+                                         block=cfg.block, backend=backend)
         elif isinstance(p, Mask):
-            _, m = ops.ts_decay_with_mask(
-                sae, t_now, dynamic[name], v_tw_static=v_tws[name],
-                block=cfg.block, backend=backend,
-            )
-            out[name] = m
+            if analog:
+                v = _analog_read(
+                    sae, counts, t_now, dynamic[name], fid, noise_step,
+                    generation, name, cfg, backend,
+                )
+                out[name] = v > v_tws[name]
+            else:
+                _, m = ops.ts_decay_with_mask(
+                    sae, t_now, dynamic[name], v_tw_static=v_tws[name],
+                    block=cfg.block, backend=backend,
+                )
+                out[name] = m
         elif isinstance(p, Stcf):
             radius = p.radius if p.radius is not None else cfg.stcf_radius
-            out[name] = ops.stcf_support_fused(
-                sae, dynamic[name], v_tws[name], t_now,
-                radius=radius, include_self=p.include_self, backend=backend,
-            )
+            if analog:
+                v = _analog_read(
+                    sae, counts, t_now, dynamic[name], fid, noise_step,
+                    generation, name, cfg, backend,
+                )
+                out[name] = ops.stcf_support(
+                    v > v_tws[name], radius=radius,
+                    include_self=p.include_self, backend=backend,
+                )
+            else:
+                out[name] = ops.stcf_support_fused(
+                    sae, dynamic[name], v_tws[name], t_now,
+                    radius=radius, include_self=p.include_self,
+                    backend=backend,
+                )
         elif isinstance(p, Count):
             if counts is None:
                 raise ValueError(
@@ -571,12 +691,15 @@ def read_compiled(
     cfg,
     backend: str,
     head_params=None,                      # {head name: params}, traced
+    noise_step=None,                       # traced int (analog fidelity)
+    generation=None,                       # (S,) int32 slot epochs
 ) -> Dict[str, jax.Array]:
     """Trace-time body of one staged spec read: stage-0 products, then
     heads over them, all in one program, returned in the spec's
     canonical name order."""
     out = read_stage0(sae, counts, t_now, dynamic, compiled.stage0, cfg,
-                      backend, compiled.statics)
+                      backend, compiled.statics, noise_step=noise_step,
+                      generation=generation)
     if compiled.heads:
         out.update(apply_heads(out, head_params, compiled, cfg))
     return {name: out[name] for name in compiled.spec.names}

@@ -137,6 +137,8 @@ from repro.core import time_surface as ts_core
 from repro.events import aer
 from repro.events import pipeline
 from repro.events import synthetic as syn
+from repro.hw import energy_model
+from repro.serve import fidelity as fidelity_mod
 from repro.serve import spec as spec_mod
 
 __all__ = [
@@ -150,6 +152,10 @@ POLICIES = ("block", "drop_oldest", "drop_newest")
 #: the per-sensor counters that aggregate by tier (exact, deterministic)
 TIER_KEYS = ("offered", "accepted", "dropped", "refused", "ingested",
              "discarded", "deferrals")
+
+#: the per-sensor modeled-energy accumulators (joules; aggregate by tier
+#: like TIER_KEYS but float-valued — the metering layer's currency)
+ENERGY_KEYS = ("energy_write_j", "energy_read_j", "energy_leak_j")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -329,9 +335,15 @@ class StreamSensor:
         self.ingested = 0    # events drained into engine chunks
         self.discarded = 0   # queued events thrown away by disconnect()
         self.deferrals = 0   # events postponed by overload scheduling
+        # -- modeled energy (joules; hw.energy_model.EnergyMeter) ---------
+        self.energy_write_j = 0.0   # ingest: write energy x events
+        self.energy_read_j = 0.0    # readout: array access x dispatches
+        self.energy_leak_j = 0.0    # retention: leakage power x window
+        self._last_energy_t: Optional[float] = None
         # tier-attribution snapshot: counter values at the last tier
         # change (tier aggregation reads the delta since)
         self._snap = {k: 0 for k in TIER_KEYS}
+        self._energy_snap = {k: 0.0 for k in ENERGY_KEYS}
 
     # -- producer side --------------------------------------------------------
     @property
@@ -496,6 +508,21 @@ class StreamSensor:
             self._snap["offered"] -= self._queued
             self._snap["accepted"] -= self._queued
 
+    def _energy_delta(self) -> Dict[str, float]:
+        """Modeled-energy movement since the last tier change."""
+        return {k: getattr(self, k) - self._energy_snap[k]
+                for k in ENERGY_KEYS}
+
+    def _fold_energy(self, buckets: Dict[str, Dict[str, float]]) -> None:
+        """Retire this sensor's energy delta into its current tier (the
+        float twin of ``_fold_tier``; energy accrued under a tier stays
+        attributed to it across migration)."""
+        bucket = buckets.setdefault(self.qos.tier,
+                                    {k: 0.0 for k in ENERGY_KEYS})
+        for k, v in self._energy_delta().items():
+            bucket[k] += v
+        self._energy_snap = {k: getattr(self, k) for k in ENERGY_KEYS}
+
     def stats(self) -> dict:
         return {
             "slot": self.slot if self.session is not None else None,
@@ -507,6 +534,9 @@ class StreamSensor:
             "accepted": self.accepted, "dropped": self.dropped,
             "refused": self.refused, "ingested": self.ingested,
             "discarded": self.discarded, "deferrals": self.deferrals,
+            "energy_write_j": self.energy_write_j,
+            "energy_read_j": self.energy_read_j,
+            "energy_leak_j": self.energy_leak_j,
         }
 
 
@@ -538,6 +568,7 @@ class StepRecord:
         default_factory=list)
     overload: bool = False
     specs: Tuple[spec_mod.ReadoutSpec, ...] = ()
+    noise_step: int = 0      # analog-fidelity noise key (the step index)
     latency_s: float = float("nan")
     digest: str = ""
 
@@ -619,6 +650,18 @@ class StreamRuntime:
         }
         self._tier_retired: Dict[str, Dict[str, int]] = {}
         self._tier_slo: Dict[str, float] = {}
+        # -- modeled-energy metering (hw.energy_model; host-float only) ---
+        ecfg = engine.cfg
+        cmem = getattr(ecfg, "cmem_f", None)
+        self.meter = energy_model.EnergyMeter(
+            h=ecfg.h, w=ecfg.w,
+            polarities=getattr(ecfg, "polarities", 2),
+            **({"cmem_f": cmem} if cmem else {}),
+        )
+        self._retired_energy: Dict[str, float] = {
+            k: 0.0 for k in ENERGY_KEYS}
+        self._tier_energy: Dict[str, Dict[str, float]] = {}
+        self._mode_cache: Dict[spec_mod.ReadoutSpec, str] = {}
         self.n_steps = 0
         self.log_trimmed_steps = 0
         #: per-runtime timestamp epoch (absolute seconds, float64): the
@@ -690,6 +733,7 @@ class StreamRuntime:
         if sensor.session is None:
             raise RuntimeError("sensor is disconnected")
         sensor._fold_tier(self._tier_retired, migrate_queued=True)
+        sensor._fold_energy(self._tier_energy)
         sensor.qos = qos
         self._tier_slo[qos.tier] = min(
             self._tier_slo.get(qos.tier, math.inf), qos.slo_p99_s)
@@ -704,14 +748,43 @@ class StreamRuntime:
         sensor.discarded += sensor.queued
         sensor._segments, sensor._queued = [], 0
         sensor._fold_tier(self._tier_retired)
+        sensor._fold_energy(self._tier_energy)
         slot = sensor.slot
         st = sensor.stats()
         for k in self._retired:
             self._retired[k] += st[k]
+        for k in ENERGY_KEYS:
+            self._retired_energy[k] += st[k]
         self.sensors.pop(slot, None)
         sensor.session.detach()
         sensor.session = None
         self.log.append(("detach", slot))
+
+    # -- modeled-energy accounting --------------------------------------------
+    def _sensor_mode(self, sensor: StreamSensor) -> str:
+        """The fidelity mode of the substrate serving this sensor — its
+        tier spec's (or the primary spec's) dominant mode.  Decides
+        which of the meter's cost cards its activity is billed to."""
+        sp = sensor.qos.spec if sensor.qos.spec is not None else self.spec
+        mode = self._mode_cache.get(sp)
+        if mode is None:
+            mode = fidelity_mod.spec_fidelity_mode(sp)
+            self._mode_cache[sp] = mode
+        return mode
+
+    def _account_step_energy(self, t: float) -> None:
+        """Accrue per-sensor retention leakage (over the virtual-time
+        window since the sensor was last metered) and one array-readout
+        access (every step's fused read samples every live slot).  Pure
+        host-float bookkeeping off exact counters — never touches device
+        state, so metering cannot perturb the replay contract."""
+        for s in self.sensors.values():
+            mode = self._sensor_mode(s)
+            if s._last_energy_t is not None and t > s._last_energy_t:
+                s.energy_leak_j += self.meter.leakage_energy_j(
+                    mode, t - s._last_energy_t)
+            s._last_energy_t = t
+            s.energy_read_j += self.meter.read_energy_j(mode)
 
     # -- the deadline loop ----------------------------------------------------
     def _schedule(self, t: float):
@@ -773,6 +846,9 @@ class StreamRuntime:
             seg = sensor._drain()
             drained = 0 if seg is None else len(seg[0])
             sensor._note_scheduled(t, drained)
+            if drained:
+                sensor.energy_write_j += self.meter.write_energy_j(
+                    self._sensor_mode(sensor), drained)
             if seg is None:
                 continue
             items = group_of.get(sensor.qos.tier)
@@ -825,13 +901,19 @@ class StreamRuntime:
         # absolute); recorded as-rebased so the replay oracle consumes
         # the log verbatim
         t_read = t_deadline - (self.t_epoch or 0.0)
+        noise_step = self.n_steps   # the analog-fidelity noise key input
+        self._account_step_energy(t_deadline)
         wall0 = time.perf_counter()
         for _tier, items in groups:
             if self._use_ring:
                 self.engine.push_staged(items)
             else:
                 self.engine.push(items)
-        products_by_spec = self.engine.read_many(specs, t_read)
+        if any(fidelity_mod.spec_needs_noise(sp) for sp in specs):
+            products_by_spec = self.engine.read_many(
+                specs, t_read, noise_step=noise_step)
+        else:
+            products_by_spec = self.engine.read_many(specs, t_read)
         products_list = [products_by_spec[sp] for sp in specs]
         record = StepRecord(
             t_read=float(t_read), n_events=n_events,
@@ -842,6 +924,7 @@ class StreamRuntime:
             deferred=[(s.slot, s.qos.tier, s.queued) for s in deferred],
             overload=overload,
             specs=specs,
+            noise_step=noise_step,
         )
         self.log.append(("step", record))
         self.n_steps += 1
@@ -923,6 +1006,35 @@ class StreamRuntime:
             bucket["deferred"] += sensor.queued
         return out
 
+    def energy_j(self) -> Dict[str, float]:
+        """Total modeled energy (joules) by component, retired + live."""
+        out = dict(self._retired_energy)
+        for sensor in self.sensors.values():
+            for k in ENERGY_KEYS:
+                out[k] += getattr(sensor, k)
+        out["energy_total_j"] = sum(out[k] for k in ENERGY_KEYS)
+        return out
+
+    def tier_energy_uj(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier modeled energy in microjoules (retired + live,
+        migration-safe like ``tier_counters``) — the currency of the
+        ``stream_tier_energy_uj`` benchmark gate."""
+        acc = {tier: dict(b) for tier, b in self._tier_energy.items()}
+        for sensor in self.sensors.values():
+            bucket = acc.setdefault(sensor.qos.tier,
+                                    {k: 0.0 for k in ENERGY_KEYS})
+            for k, v in sensor._energy_delta().items():
+                bucket[k] += v
+        return {
+            tier: {
+                "write_uj": b["energy_write_j"] * 1e6,
+                "read_uj": b["energy_read_j"] * 1e6,
+                "leak_uj": b["energy_leak_j"] * 1e6,
+                "total_uj": sum(b[k] for k in ENERGY_KEYS) * 1e6,
+            }
+            for tier, b in acc.items()
+        }
+
     def tier_latencies_us(self) -> Dict[str, Dict[str, Optional[float]]]:
         """Per-tier readout-latency percentiles (p50/p95/p99, in us)
         over the steps that served each tier, plus the tier's tightest
@@ -959,6 +1071,14 @@ class StreamRuntime:
             "drop_rate": c["dropped"] / c["offered"] if c["offered"] else 0.0,
             "tiers": self.tier_counters(),
             "tier_latencies_us": self.tier_latencies_us(),
+            "energy": {
+                **{k.replace("_j", "_uj"): v * 1e6
+                   for k, v in self.energy_j().items()},
+                "energy_per_event_nj": (
+                    self.energy_j()["energy_total_j"] / c["ingested"] * 1e9
+                    if c["ingested"] else None),
+                "tiers": self.tier_energy_uj(),
+            },
             "latency_p50_us": float(np.percentile(lat, 50) * 1e6) if lat.size else None,
             "latency_p95_us": float(np.percentile(lat, 95) * 1e6) if lat.size else None,
             "latency_p99_us": float(np.percentile(lat, 99) * 1e6) if lat.size else None,

@@ -110,6 +110,7 @@ from repro.events import pipeline
 from repro.events import synthetic as syn
 from repro.hw import constants as C
 from repro.kernels import ops
+from repro.serve import fidelity as fidelity_mod
 from repro.serve import spec as spec_mod
 from repro.serve.api import SensorSession
 
@@ -397,6 +398,8 @@ def read_spec_products(
     backend: str,
     statics: Tuple[Tuple[str, float], ...] = (),
     head_params=None,                  # {head name: params}, traced
+    noise_step=None,                   # traced int — analog noise key input
+    generation=None,                   # (S,) int32 — analog noise key input
 ) -> Dict[str, jax.Array]:
     """One fused batched dispatch serving every product of ``spec`` —
     stage-0 surface products and the stage-1 heads that consume them,
@@ -423,7 +426,9 @@ def read_spec_products(
         statics=tuple(statics),
     )
     return spec_mod.read_compiled(sae, counts, t_now, dynamic, compiled,
-                                  cfg, backend, head_params)
+                                  cfg, backend, head_params,
+                                  noise_step=noise_step,
+                                  generation=generation)
 
 
 @functools.partial(jax.jit, static_argnames=("compiled", "cfg"))
@@ -634,6 +639,45 @@ class _ShardPlan:
         p, rep = self._spec_p, self._rep_p
         out_specs = shd.slot_pool_out_specs(self.mesh, rspec.names)
         compiled = spec_mod.compile_spec(rspec, cfg)
+
+        if fidelity_mod.spec_needs_noise(rspec):
+            # analog-fidelity specs take the (noise_step, generation)
+            # key inputs: the step index replicates, the per-slot attach
+            # epochs shard with the pool, and the per-cell draws are
+            # element-wise per slot — so each shard folds exactly the
+            # keys the single-device program folds (sharding-invariant
+            # noise, same rule as every other hot-path op here)
+            def noisy_with_counts(sae, counts, t_now, dynamic,
+                                  head_params, noise_step, generation):
+                return spec_mod.read_compiled(
+                    sae, counts, t_now, dynamic, compiled, cfg, backend,
+                    head_params, noise_step=noise_step,
+                    generation=generation,
+                )
+
+            def noisy_no_counts(sae, t_now, dynamic, head_params,
+                                noise_step, generation):
+                return spec_mod.read_compiled(
+                    sae, None, t_now, dynamic, compiled, cfg, backend,
+                    head_params, noise_step=noise_step,
+                    generation=generation,
+                )
+
+            if spec_mod.needs_counts(rspec):
+                fn = jax.jit(self._smap(
+                    noisy_with_counts, (p, p, rep, rep, rep, rep, p),
+                    out_specs,
+                ))
+            else:
+                base = jax.jit(self._smap(
+                    noisy_no_counts, (p, rep, rep, rep, rep, p), out_specs,
+                ))
+                fn = (lambda sae, counts, t_now, dynamic, head_params,
+                      noise_step, generation:
+                      base(sae, t_now, dynamic, head_params, noise_step,
+                           generation))
+            self._spec_readers[rspec] = fn
+            return fn
 
         def local_with_counts(sae, counts, t_now, dynamic, head_params):
             return spec_mod.read_compiled(sae, counts, t_now, dynamic,
@@ -1131,9 +1175,10 @@ class TimeSurfaceEngine:
             )
         if spec_mod.needs_counts(spec) and self.state.counts is None:
             raise ValueError(
-                "spec contains a count(...) product but this engine has no "
-                "counter plane; declare a count-bearing spec in "
-                "TSEngineConfig.specs so init_state materializes it"
+                "spec needs the counter plane (a count(...) product or "
+                "analog_2d fidelity) but this engine has none; declare a "
+                "counts-needing spec in TSEngineConfig.specs so "
+                "init_state materializes it"
             )
 
     def _compiled(self, spec: spec_mod.ReadoutSpec) -> spec_mod.CompiledSpec:
@@ -1175,6 +1220,7 @@ class TimeSurfaceEngine:
         self,
         spec: spec_mod.ReadoutSpec = spec_mod.SURFACE_SPEC,
         t_now: float = 0.0,
+        noise_step: int = 0,
     ) -> Dict[str, jax.Array]:
         """Read every product of ``spec`` over the whole pool at ``t_now``
         in **one fused batched dispatch** (the spec is the jit cache key;
@@ -1190,14 +1236,35 @@ class TimeSurfaceEngine:
         composed or not, sharded or not; head products are bitwise the
         standalone head over the served stage-0 arrays (the
         ``optimization_barrier`` contract in ``serve.spec``).
+
+        ``noise_step`` keys the analog-fidelity per-cell noise draws
+        (with each slot's attach epoch) — the stream runtime passes its
+        step index, the replay oracle replays the recorded one; specs
+        without noise-drawing products ignore it entirely (the compiled
+        program never takes the key inputs, so digital reads are
+        byte-for-byte the pre-fidelity programs).
         """
         self._check_spec(spec)
         dynamic, statics, head_params = self._resolved(spec)
         t = jnp.float32(t_now)
+        needs_noise = fidelity_mod.spec_needs_noise(spec)
         if self._plan:
             fn = self._plan.spec_reader(spec)
-            out = fn(self.state.surfaces.sae, self.state.counts, t, dynamic,
-                     head_params)
+            if needs_noise:
+                out = fn(self.state.surfaces.sae, self.state.counts, t,
+                         dynamic, head_params, jnp.int32(noise_step),
+                         self.state.generation)
+            else:
+                out = fn(self.state.surfaces.sae, self.state.counts, t,
+                         dynamic, head_params)
+        elif needs_noise:
+            out = read_spec_products(
+                self.state.surfaces.sae, self.state.counts, t, dynamic,
+                spec=spec, cfg=self.cfg, backend=self._backend,
+                statics=statics, head_params=head_params,
+                noise_step=jnp.int32(noise_step),
+                generation=self.state.generation,
+            )
         else:
             out = read_spec_products(
                 self.state.surfaces.sae, self.state.counts, t, dynamic,
@@ -1210,6 +1277,7 @@ class TimeSurfaceEngine:
         self,
         specs: Sequence[spec_mod.ReadoutSpec],
         t_now: float = 0.0,
+        noise_step: int = 0,
     ) -> Dict[spec_mod.ReadoutSpec, Dict[str, jax.Array]]:
         """Serve several ``ReadoutSpec``s against the *same* pool state
         at ``t_now`` — the multi-spec step primitive behind QoS
@@ -1240,9 +1308,11 @@ class TimeSurfaceEngine:
         out: Dict[spec_mod.ReadoutSpec, Dict[str, jax.Array]] = {}
         for stage0, members in groups.items():
             if len(members) == 1:
-                out[members[0]] = self.read(members[0], t_now)
+                out[members[0]] = self.read(members[0], t_now,
+                                            noise_step=noise_step)
                 continue
-            base = self.read(stage0, t_now)   # one shared stage-0 dispatch
+            base = self.read(stage0, t_now,   # one shared stage-0 dispatch
+                             noise_step=noise_step)
             for sp in members:
                 compiled = self._compiled(sp)
                 if not compiled.has_heads:    # sp IS the stage-0 spec
@@ -1267,6 +1337,7 @@ class TimeSurfaceEngine:
         items: Sequence[IngestItem],
         spec: spec_mod.ReadoutSpec = spec_mod.SURFACE_SPEC,
         t_now: float = 0.0,
+        noise_step: int = 0,
     ) -> Dict[str, jax.Array]:
         """Fused scatter + spec read: ingest ``items`` and serve every
         product of ``spec`` at ``t_now`` (the body behind
@@ -1294,13 +1365,17 @@ class TimeSurfaceEngine:
         self._check_spec(spec)
         dynamic, _, _ = self._resolved(spec)
         surface_products = spec.surface_products()
-        if not surface_products or self._compiled(spec).has_heads:
-            # nothing cacheable (no surface product), or a head-bearing
+        if (not surface_products or self._compiled(spec).has_heads
+                or fidelity_mod.spec_fidelity_mode(spec) != "ideal"):
+            # nothing cacheable (no surface product), a head-bearing
             # spec (heads need every input dense and current, so the
-            # single-surface tile cache buys nothing): plain scatter,
-            # then the same fused staged read a plain ``read`` runs
+            # single-surface tile cache buys nothing), or an
+            # analog-fidelity spec (the cache holds *digital* tiles —
+            # an analog read must go through the cell physics every
+            # time): plain scatter, then the same fused staged read a
+            # plain ``read`` runs
             self._ingest_items(items)
-            return self.read(spec, t_now)
+            return self.read(spec, t_now, noise_step=noise_step)
 
         slot_ids, chunks, _ = self._collect(items)
         name0, prod0 = surface_products[0]

@@ -1,0 +1,260 @@
+"""Analog-fidelity serving: the FidelityModel contract, the noise-key
+determinism rules, stream energy metering, and the headline acceptance
+gate — a tiered, head-bearing analog stream replays bitwise through the
+synchronous oracle, noise included."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import time_surface as ts
+from repro.events import replay as rp
+from repro.serve import fidelity as fm
+from repro.serve import spec as rs
+from repro.serve.stream import StreamConfig
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W, CHUNK = 32, 48, 64
+
+
+def _cfg(**kw):
+    base = dict(h=H, w=W, n_slots=4, chunk_capacity=CHUNK, mode="edram")
+    base.update(kw)
+    return TSEngineConfig(**base)
+
+
+def _burst(rng, n=CHUNK, t_lo=0.0, t_hi=0.05):
+    return ts.EventBatch(
+        x=jnp.asarray(rng.integers(0, W, n), jnp.int32),
+        y=jnp.asarray(rng.integers(0, H, n), jnp.int32),
+        p=jnp.asarray(rng.integers(0, 2, n), jnp.int32),
+        t=jnp.asarray(np.sort(rng.uniform(t_lo, t_hi, n)), jnp.float32),
+        valid=jnp.ones(n, bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the model object
+# ---------------------------------------------------------------------------
+
+def test_fidelity_model_frozen_hashable_validated():
+    a = fm.analog_3d()
+    assert a == fm.analog_3d() and hash(a) == hash(fm.analog_3d())
+    assert a.is_analog and not fm.IDEAL.is_analog
+    assert fm.analog_2d().mode == "analog_2d"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.sigma = 0.5
+    with pytest.raises(ValueError):
+        fm.FidelityModel(mode="analog_4d")
+    with pytest.raises(ValueError):
+        fm.analog_3d(sigma=-0.1)
+    with pytest.raises(ValueError):
+        fm.analog_2d(alpha=1.0)
+    with pytest.raises(ValueError):
+        fm.analog_2d(coupling=-0.01)
+
+
+def test_spec_fidelity_resolution():
+    sp = rs.ReadoutSpec(surface=rs.surface(fidelity=fm.analog_3d()))
+    assert fm.spec_fidelity_mode(sp) == "analog_3d"
+    assert fm.spec_needs_noise(sp) and not fm.spec_needs_hits(sp)
+    sp2 = rs.ReadoutSpec(
+        surface=rs.surface(),
+        stcf=rs.stcf(decay=rs.surface(fidelity=fm.analog_2d())),
+    )
+    assert fm.spec_fidelity_mode(sp2) == "analog_2d"
+    assert fm.spec_needs_hits(sp2) and rs.needs_counts(sp2)
+    assert fm.spec_fidelity_mode(rs.SURFACE_SPEC) == "ideal"
+    # sigma=0 draws no noise: the structural bitwise anchor
+    sp0 = rs.ReadoutSpec(surface=rs.surface(fidelity=fm.analog_3d(sigma=0.0)))
+    assert not fm.spec_needs_noise(sp0)
+
+
+def test_readout_spec_range_validation():
+    with pytest.raises(ValueError, match="hist"):
+        rs.ReadoutSpec(hist=rs.count(n_bits=0))
+    with pytest.raises(ValueError, match="hist"):
+        rs.ReadoutSpec(hist=rs.count(n_bits=32))
+    with pytest.raises(ValueError, match="q"):
+        rs.ReadoutSpec(q=rs.ts_quantized(n_bits=25))
+    with pytest.raises(ValueError, match="q"):
+        rs.ReadoutSpec(q=rs.ts_quantized(n_bits=8, tick=0.0))
+    with pytest.raises(ValueError, match="q"):
+        rs.ReadoutSpec(q=rs.ts_quantized(n_bits=8, tick=float("nan")))
+    # the legal serving domain still constructs
+    rs.ReadoutSpec(hist=rs.count(n_bits=4),
+                   q=rs.ts_quantized(n_bits=16, tick=1e-4))
+
+
+def test_analog_requires_edram_mode():
+    spec = rs.ReadoutSpec(surface=rs.surface(fidelity=fm.analog_3d()))
+    eng = TimeSurfaceEngine(_cfg(mode="ideal", specs=(spec,)))
+    with pytest.raises(ValueError, match="ideal"):
+        eng.read(spec, 0.06)
+
+
+# ---------------------------------------------------------------------------
+# engine reads
+# ---------------------------------------------------------------------------
+
+def test_sigma_zero_ideal_anchor_bitwise():
+    """sigma=0 + no disturbance: the analog read is bit-identical to the
+    digital read on serving configs."""
+    anchor = rs.ReadoutSpec(
+        surface=rs.surface(fidelity=fm.analog_3d(sigma=0.0)))
+    digital = rs.ReadoutSpec(surface=rs.surface())
+    eng = TimeSurfaceEngine(_cfg(specs=(anchor, digital)))
+    cam = eng.attach()
+    eng.push([(cam, _burst(np.random.default_rng(0)))])
+    a = np.asarray(eng.read(anchor, 0.06)["surface"])
+    d = np.asarray(eng.read(digital, 0.06)["surface"])
+    assert (a.view(np.int32) == d.view(np.int32)).all()
+
+
+def test_noise_deterministic_per_step_and_generation():
+    spec = rs.ReadoutSpec(surface=rs.surface(fidelity=fm.analog_3d()))
+    eng = TimeSurfaceEngine(_cfg(specs=(spec,)))
+    cam = eng.attach()
+    eng.push([(cam, _burst(np.random.default_rng(1)))])
+    r0 = np.asarray(eng.read(spec, 0.06, noise_step=0)["surface"])
+    r0b = np.asarray(eng.read(spec, 0.06, noise_step=0)["surface"])
+    r1 = np.asarray(eng.read(spec, 0.06, noise_step=1)["surface"])
+    assert (r0.view(np.int32) == r0b.view(np.int32)).all()
+    assert not (r0 == r1).all()
+    # reattach bumps the slot generation -> fresh per-cell draw
+    gen0 = int(np.asarray(eng.state.generation)[cam.slot])
+    cam.detach()
+    cam2 = eng.attach()
+    assert int(np.asarray(eng.state.generation)[cam2.slot]) != gen0
+    eng.push([(cam2, _burst(np.random.default_rng(1)))])
+    r0c = np.asarray(eng.read(spec, 0.06, noise_step=0)["surface"])
+    assert not (r0c == r0).all()
+
+
+def test_analog_2d_shows_half_select_droop():
+    spec3 = rs.ReadoutSpec(surface=rs.surface(fidelity=fm.analog_3d(sigma=0.0)))
+    spec2 = rs.ReadoutSpec(
+        surface=rs.surface(fidelity=fm.analog_2d(sigma=0.0)))
+    eng = TimeSurfaceEngine(_cfg(specs=(spec3, spec2)))
+    cam = eng.attach()
+    eng.push([(cam, _burst(np.random.default_rng(2)))])
+    v3 = np.asarray(eng.read(spec3, 0.06)["surface"])[cam.slot]
+    v2 = np.asarray(eng.read(spec2, 0.06)["surface"])[cam.slot]
+    assert v2.sum() < v3.sum()          # disturbance only ever droops
+    assert (v2 <= v3 + 1e-7).all()
+
+
+def test_analog_2d_requires_counter_plane():
+    spec2 = rs.ReadoutSpec(surface=rs.surface(fidelity=fm.analog_2d()))
+    eng = TimeSurfaceEngine(_cfg())     # no counts-bearing spec declared
+    with pytest.raises(ValueError, match="counter plane|analog_2d"):
+        eng.read(spec2, 0.06)
+
+
+# ---------------------------------------------------------------------------
+# streaming: energy metering + the bitwise replay oracle with noise
+# ---------------------------------------------------------------------------
+
+def _tiered_analog_feeds():
+    head_spec = rs.ReadoutSpec(
+        surface=rs.surface(fidelity=fm.analog_3d()),
+        stcf=rs.stcf(decay=rs.surface(fidelity=fm.analog_3d())),
+        labels=rs.denoise(input="stcf"),
+    )
+    feeds = rp.mixed_scene_feeds(H, W, 0.06, 4, seed=7, noise_hz=20.0,
+                                 churn=True, tiered=True)
+    feeds = [
+        dataclasses.replace(
+            f, qos=dataclasses.replace(f.qos, spec=head_spec))
+        if f.qos.tier == "gesture" else f
+        for f in feeds
+    ]
+    return feeds, head_spec
+
+
+def test_stream_replay_oracle_bitwise_with_noise_and_energy():
+    """The acceptance gate: a head-bearing, analog-fidelity, per-tier
+    streamed run under QoS overload replays bitwise through the
+    synchronous oracle — noise included — and the energy meter
+    attributes write/read/leak energy per tier."""
+    feeds, _ = _tiered_analog_feeds()
+    primary = rs.ReadoutSpec(surface=rs.surface())
+
+    def make_engine():
+        return TimeSurfaceEngine(
+            _cfg(n_slots=6, chunk_capacity=1 << 11, specs=(primary,)))
+
+    scfg = StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                        deadline_s=0.005, step_chunk_budget=3,
+                        pipeline=True)
+    report = rp.replay(make_engine(), feeds, scfg, primary,
+                       arrival_substeps=2)
+    n = rp.check_oracle(report, make_engine, primary)
+    assert n == report.n_steps > 0
+
+    e = report.energy_uj
+    assert e["energy_write_uj"] > 0 and e["energy_read_uj"] > 0
+    assert e["energy_leak_uj"] > 0
+    assert e["energy_total_uj"] == pytest.approx(
+        e["energy_write_uj"] + e["energy_read_uj"] + e["energy_leak_uj"])
+    assert e["energy_per_event_nj"] > 0
+    tiers = report.tier_energy_uj
+    assert set(tiers) == {"gesture", "telemetry"}
+    for row in tiers.values():
+        assert row["total_uj"] == pytest.approx(
+            row["write_uj"] + row["read_uj"] + row["leak_uj"])
+    # every joule lands in exactly one tier
+    assert sum(r["total_uj"] for r in tiers.values()) == pytest.approx(
+        e["energy_total_uj"], rel=1e-6)
+    # the analog gesture tier ingests the bulk of the traffic yet is
+    # metered far below the digital telemetry tier per event
+    g, t = tiers["gesture"], tiers["telemetry"]
+    gi, ti = (report.tiers[k]["ingested"] for k in ("gesture", "telemetry"))
+    assert gi > 0 and ti > 0
+    assert g["write_uj"] / gi < t["write_uj"] / ti / 10
+    assert "modeled energy" in report.summary()
+
+
+def test_sweep_driver_emits_frontier_artifact(tmp_path):
+    """The ``launch/serve.py sweep`` driver on a minimal grid: writes
+    sweep.json + sweep.md, and the verdict fields carry the paper's
+    claims (analog_3d near-digital at >=10x lower energy, analog_2d
+    measurably worse)."""
+    import argparse
+    import json
+
+    from repro.launch.serve import run_sweep
+
+    args = argparse.Namespace(
+        hw="24x32", sensors=2, duration=0.02, deadline=0.005, chunk=512,
+        cmem="20", retention="24", classes=2, tol=0.02, energy_factor=10.0,
+        out=str(tmp_path), seed=0)
+    run_sweep(args)
+    data = json.loads((tmp_path / "sweep.json").read_text())
+    assert len(data["rows"]) == 3          # 1x1 grid x 3 modes
+    assert {r["mode"] for r in data["rows"]} == {
+        "ideal", "analog_3d", "analog_2d"}
+    v = data["verdicts"]
+    assert v["analog_3d_within_tol"] and v["analog_3d_energy_ok"]
+    assert v["analog_2d_worse_than_3d"]
+    assert data["frontier"]
+    md = (tmp_path / "sweep.md").read_text()
+    assert "## Frontier" in md and "## Verdicts" in md
+
+
+def test_energy_meter_digital_vs_analog_stream():
+    """Same traffic, digital vs analog spec: per-event modeled energy
+    drops by >=10x (the sweep's headline criterion)."""
+    scfg = StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                        deadline_s=0.01)
+    per_event = {}
+    for name, fid in (("ideal", None), ("analog_3d", fm.analog_3d())):
+        spec = rs.ReadoutSpec(surface=rs.surface(fidelity=fid))
+        eng = TimeSurfaceEngine(_cfg(n_slots=6, chunk_capacity=1 << 11,
+                                     specs=(spec,)))
+        feeds = rp.mixed_scene_feeds(H, W, 0.04, 3, seed=5)
+        report = rp.replay(eng, feeds, scfg, spec)
+        per_event[name] = report.energy_uj["energy_per_event_nj"]
+    assert per_event["ideal"] / per_event["analog_3d"] >= 10

@@ -61,3 +61,69 @@ def test_event_rate_scaling():
     lo = em.arch_3d(rate_eps=1e6).total_power
     hi = em.arch_3d(rate_eps=100e6).total_power
     assert 50 < hi / lo < 101
+
+
+def test_block_report_totals_aggregate():
+    """total_* are exact sums over the per-block dicts."""
+    r = em.BlockReport(power_w={"a": 1.0, "b": 2.5},
+                       area_m2={"x": 3e-6, "y": 1e-6},
+                       delay_s={"d": 2e-9})
+    assert r.total_power == pytest.approx(3.5)
+    assert r.total_area == pytest.approx(4e-6)
+    assert r.total_delay == pytest.approx(2e-9)
+    for rep in (em.arch_3d(), em.arch_2d(), em.sram_array_ref53(),
+                em.sram_array_ref26(), em.isc_array_report()):
+        assert rep.total_power == pytest.approx(sum(rep.power_w.values()))
+        assert rep.total_area == pytest.approx(sum(rep.area_m2.values()))
+
+
+def test_sram_ref_cards_structure_and_scaling():
+    """The SRAM reference cards: block composition, linear cell-count
+    scaling, write power linear in event rate."""
+    r53 = em.sram_array_ref53()
+    assert set(r53.power_w) == {"write", "leakage"}
+    r26 = em.sram_array_ref26()
+    assert set(r26.power_w) == {"static", "write"}
+    # 4x the cells -> 4x leakage/static power and 4x area
+    big53 = em.sram_array_ref53(h=2 * C.QVGA_H, w=2 * C.QVGA_W)
+    assert big53.power_w["leakage"] == pytest.approx(
+        4 * r53.power_w["leakage"])
+    assert big53.total_area == pytest.approx(4 * r53.total_area)
+    big26 = em.sram_array_ref26(h=2 * C.QVGA_H, w=2 * C.QVGA_W)
+    assert big26.power_w["static"] == pytest.approx(
+        4 * r26.power_w["static"])
+    # write power tracks the event rate, not the array size
+    fast = em.sram_array_ref53(rate_eps=2 * C.EVENT_RATE_EPS)
+    assert fast.power_w["write"] == pytest.approx(
+        2 * r53.power_w["write"])
+    assert fast.power_w["leakage"] == pytest.approx(
+        r53.power_w["leakage"])
+
+
+def test_energy_meter_cost_cards():
+    """EnergyMeter: digital (SRAM) costs dominate analog by orders of
+    magnitude; analog_2d adds the long-wire write adder on top of 3D."""
+    m = em.EnergyMeter(h=240, w=320)
+    ideal, a3, a2 = (m.costs(k)
+                     for k in ("ideal", "analog_3d", "analog_2d"))
+    assert ideal.write_j_per_event / a3.write_j_per_event > 1000
+    assert ideal.leak_w_per_cell / a3.leak_w_per_cell > 10
+    assert a2.write_j_per_event > a3.write_j_per_event
+    assert a2.read_j_per_cell == a3.read_j_per_cell
+    assert m.costs("ideal") is ideal  # cached cards
+    with pytest.raises(ValueError):
+        m.costs("warp")
+
+
+def test_energy_meter_accounting_arithmetic():
+    """Metered energies are exact products of the cost cards."""
+    m = em.EnergyMeter(h=48, w=64, polarities=2)
+    assert m.cells == 48 * 64 * 2
+    c = m.costs("analog_3d")
+    assert m.write_energy_j("analog_3d", 1000) == pytest.approx(
+        1000 * c.write_j_per_event)
+    assert m.read_energy_j("analog_3d", 3) == pytest.approx(
+        3 * c.read_j_per_cell * m.cells)
+    assert m.leakage_energy_j("analog_3d", 0.5) == pytest.approx(
+        0.5 * c.leak_w_per_cell * m.cells)
+    assert m.write_energy_j("ideal", 0) == 0.0

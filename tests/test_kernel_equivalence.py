@@ -381,6 +381,51 @@ def check_ts_wrapped_read(rng):
                want, ctx + " (interpret vs oracle)")
 
 
+def check_ts_analog_read(rng):
+    """Analog eDRAM readout: with no rate spread and no disturbance it
+    collapses bitwise to the digital ``ts_decay`` on every backend (the
+    serving anchor the sigma=0 fidelity configs rely on); with per-cell
+    spread + half-select the ref backend is bitwise vs the independent
+    oracle and interpret stays in the tier-3 ULP band."""
+    h, w, block, _ = _rand_geometry(rng, SERVING_BLOCKS, max_h=48,
+                                    max_w=150)
+    p = int(rng.integers(1, 3))
+    t_now = float(rng.uniform(0.02, 0.1))
+    params = _serving_params(rng)
+    sae = _rand_sae(rng, (p, h, w), t_max=t_now)
+    ctx = f"ts_analog_read p={p} h={h} w={w} block={block}"
+    for b in ("interpret", "ref"):
+        _bitwise(
+            ops.ts_analog_read(sae, t_now, params, block=block, backend=b),
+            ops.ts_decay(sae, t_now, params, block=block, backend=b),
+            ctx + f" anchor ({b})")
+    eps = jnp.asarray(
+        1.0 + 0.05 * rng.standard_normal((p, h, w)), jnp.float32)
+    row = jnp.asarray(rng.integers(0, 200, (1, h)), jnp.int32)
+    col = jnp.asarray(rng.integers(0, 200, (1, w)), jnp.int32)
+    alpha = float(rng.uniform(0.0, 0.1))
+    coupling = float(rng.uniform(0.0, 0.01))
+    want = ref.ts_analog_read_ref(sae, t_now, params, eps=eps,
+                                  row_hits=row, col_hits=col,
+                                  alpha=alpha, coupling=coupling)
+    got_ref = ops.ts_analog_read(sae, t_now, params, eps=eps,
+                                 row_hits=row, col_hits=col, alpha=alpha,
+                                 coupling=coupling, block=block,
+                                 backend="ref")
+    _bitwise(got_ref, want, ctx + " spread+half-select (ref vs oracle)")
+    got_int = ops.ts_analog_read(sae, t_now, params, eps=eps,
+                                 row_hits=row, col_hits=col, alpha=alpha,
+                                 coupling=coupling, block=block,
+                                 backend="interpret")
+    _ulp_close(got_int, want, ctx + " spread+half-select (interpret)",
+               max_ulp=4)
+    # spread-only path: row/col hits omitted together
+    want_eps = ref.ts_analog_read_ref(sae, t_now, params, eps=eps)
+    _bitwise(ops.ts_analog_read(sae, t_now, params, eps=eps, block=block,
+                                backend="ref"),
+             want_eps, ctx + " spread only (ref vs oracle)")
+
+
 def check_spec_read_bitwise(rng):
     """The api_redesign acceptance gate at the ops level: a composed
     ReadoutSpec dispatch's surface/stcf products are bit-identical to
@@ -493,6 +538,7 @@ def check_decay_scan(rng):
 CHECKS = [check_serving_bitwise, check_ts_decay, check_ts_decay_with_mask,
           check_stcf_support, check_stcf_support_fused, check_ts_fused,
           check_ts_fused_dirty, check_ts_wrapped_read,
+          check_ts_analog_read,
           check_spec_read_bitwise, check_spec_head_bitwise,
           check_decay_scan]
 
