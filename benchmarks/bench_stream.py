@@ -48,6 +48,16 @@ scenes at their naturally different rates, ~4 Meps offered):
     the host-staged synchronous comparator (see ``ring_rows``); the
     harness asserts the >= 1.2x overlap floor and bitwise digest
     identity across staging paths before emitting either row.
+  * ``stream_elastic_grow_us`` / ``stream_migration_pause_us`` — the
+    fleet scenario (``fleet_rows``): nine sensors in attach waves over
+    an elastic pool that starts one bucket wide, with three live
+    mid-run migrations (one of them an analog, head-bearing gesture
+    sensor) and a shrink after the churn.  The replay is oracle-gated
+    bitwise (growth, compaction moves, and migrations replayed from the
+    action log) with per-tier conservation and migrated-event
+    attribution asserted, and only then are the steady-state pauses of
+    one pool growth and one live migration timed on the warmed engine
+    and emitted for the CI gate.
 
 **Bitwise gates, every run**: the runtime replay's per-deadline products
 are digest-compared against a synchronous oracle replay of the same
@@ -499,6 +509,112 @@ def ring_rows():
     ]
 
 
+def fleet_rows():
+    """Fleet elasticity under sustained mixed-tier traffic.
+
+    Nine sensors (telemetry driving scenes, hotel-bar mids, and analog
+    head-bearing gesture glyphs) attach in three waves over a pool that
+    starts one bucket (3 slots) wide: admission-control watermarks grow
+    it bucket-by-bucket, three sensors live-migrate mid-run (one of
+    them on the analog gesture tier, with non-zero noise generation and
+    queued events re-attributed exactly), two detach, and the shrink
+    watermark compacts the pool back down a bucket.  The whole churn
+    schedule — grows, compaction moves, migrations — rides the action
+    log and must replay bitwise through the synchronous oracle, with
+    per-tier conservation and migrated-event attribution asserted,
+    before any timing row is emitted.
+
+    The gated rows are the *pauses* the runtime pays for elasticity:
+    ``stream_elastic_grow_us`` is the wall-clock of one pool growth
+    (copy-into-wider-pool dispatch, jit-warmed — the retrace happened
+    once per bucket during the replay) and ``stream_migration_pause_us``
+    is one live migration (drain + slot-row copy + generation carry),
+    both medians over repeated steady-state reps on the warmed engine —
+    the same engine ops the runtime issues mid-stream.
+    """
+    bucket = 3
+    # chunk capacity 1<<10 (vs 1<<12 elsewhere): the budget must bind
+    # hard enough that even the sparse gesture tier carries a queue at
+    # the migration instant, so re-attribution is exercised non-trivially
+    cfg = TSEngineConfig(h=H, w=W, n_slots=bucket, slot_bucket=bucket,
+                         chunk_capacity=1 << 10, mode="edram")
+
+    def feeds():
+        return rp.fleet_scene_feeds(H, W, DURATION, 9, seed=3,
+                                    noise_hz=NOISE_HZ)
+
+    def scfg():
+        return StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                            deadline_s=DEADLINE, step_chunk_budget=6,
+                            elastic=True, shrink_watermark=0.9,
+                            pipeline=True)
+
+    # warm every capacity bucket's jit entries with the same schedule
+    rp.replay(TimeSurfaceEngine(cfg), feeds(), scfg(), rs.SURFACE_SPEC,
+              arrival_substeps=SUBSTEPS)
+    report = rp.replay(TimeSurfaceEngine(cfg), feeds(), scfg(),
+                       rs.SURFACE_SPEC, arrival_substeps=SUBSTEPS)
+    rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg),
+                    rs.SURFACE_SPEC)
+
+    grows = [e for k, e in report.log if k == "grow"]
+    shrinks = [e for k, e in report.log if k == "shrink"]
+    migs = [e for k, e in report.log if k == "migrate"]
+    assert len(grows) >= 2, f"fleet schedule must grow >=2x: {grows}"
+    assert len(shrinks) >= 1, "fleet schedule must shrink the pool"
+    assert len(migs) >= 3, f"fleet schedule must migrate >=3x: {migs}"
+    assert report.migrated > 0, "migrations must carry queued events"
+    tiers = report.tiers
+    for tier, row in tiers.items():
+        assert row["offered"] == (
+            row["ingested"] + row["dropped"] + row["refused"]
+            + row["discarded"] + row["deferred"]
+        ), f"per-tier conservation broken for {tier}: {row}"
+    assert sum(r["migrated"] for r in tiers.values()) == report.migrated
+    assert tiers["gesture"]["migrated"] > 0, (
+        "the analog head-bearing gesture tier must migrate live"
+    )
+
+    # -- steady-state pause timing: the same engine ops the runtime
+    # issues mid-stream, on a warmed pool with live surface state
+    eng = TimeSurfaceEngine(cfg)
+    cams = [eng.attach() for _ in range(bucket - 1)]
+    part = feeds()[0].stream.take(slice(0, 1 << 10))
+    eng.push([(cams[0], pipeline.to_event_batch(part, 1 << 10))])
+    jax.block_until_ready(eng.state)
+
+    # warm grow/shrink for the bucket pair and migrate in both slots
+    eng.grow(eng.capacity + bucket)
+    eng.shrink(eng.capacity - bucket)
+    eng.migrate(cams[0].slot)
+    eng.migrate(cams[0].slot)
+    jax.block_until_ready(eng.state)
+
+    reps = 5
+    grow_us = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        eng.grow(eng.capacity + bucket)
+        jax.block_until_ready(eng.state)
+        grow_us.append((time.perf_counter() - t0) * 1e6)
+        eng.shrink(eng.capacity - bucket)
+        jax.block_until_ready(eng.state)
+    mig_us = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        eng.migrate(cams[0].slot)   # ping-pongs with the freed slot
+        jax.block_until_ready(eng.state)
+        mig_us.append((time.perf_counter() - t0) * 1e6)
+
+    return [
+        ("stream_fleet_ingested_meps",
+         report.wall_s * 1e6 / report.n_steps,
+         report.events_per_sec / 1e6),
+        ("stream_elastic_grow_us", float(np.median(grow_us)), None),
+        ("stream_migration_pause_us", float(np.median(mig_us)), None),
+    ]
+
+
 def rows():
     out = throughput_rows()
     out.extend(churn_rows())
@@ -506,4 +622,5 @@ def rows():
     out.extend(model_rows())
     out.extend(energy_rows())
     out.extend(ring_rows())
+    out.extend(fleet_rows())
     return out

@@ -43,6 +43,13 @@ noisy on shared runners to gate individually):
     the ``hw.energy_model`` metering totals; deterministic traffic makes
     these near-exact, so a regression means the cost model or the
     metering hooks changed, not the runner.
+  * fleet elasticity pauses under sustained mixed-tier traffic with
+    mid-run pool growth and live migrations
+    (``stream_elastic_grow_us``.us_per_call, lower — wall-clock of one
+    elastic pool growth — and ``stream_migration_pause_us``.us_per_call,
+    lower — drain-to-resume pause of one live session migration), both
+    emitted only after the churn schedule replays bitwise through the
+    synchronous oracle.
 
 Rows are keyed by ``(name, tier)`` — ``tier`` is null for global rows —
 and a metric regresses when it is more than ``--threshold`` (default
@@ -54,9 +61,12 @@ baseline row.  With ``--trend TREND.json`` (the rolling history
 ``benchmarks/trend.py`` maintains across CI runs) the reference becomes
 the **median of the last 5 trend runs** holding that key — a single
 noisy baseline commit can no longer fire false alarms, and a slow drift
-across commits still trips the gate.  Keys with fewer than 2 trend runs
-fall back to the committed baseline (the bootstrap path for brand-new
-metrics).
+across commits still trips the gate.  Trend runs are filtered to the
+current run's platform key (``benchmarks/run.py`` stamps
+``backend:Ndev:kernel`` into every artifact), so a GPU run appended to
+the shared history cannot poison the CPU median.  Keys with fewer than
+2 same-platform trend runs fall back to the committed baseline (the
+bootstrap path for brand-new metrics).
 
 **Missing-key handling.**  Rows missing from the *current* run always
 fail — the benchmark that should have produced them did not run.  Rows
@@ -107,6 +117,10 @@ GATES: List[Tuple[str, str, str, str]] = [
     ("BENCH_serve.json", r"^serve_analog_events_per_sec$", "derived",
      "higher"),
     ("BENCH_stream.json", r"^stream_tier_energy_uj$", "derived", "lower"),
+    ("BENCH_stream.json", r"^stream_elastic_grow_us$", "us_per_call",
+     "lower"),
+    ("BENCH_stream.json", r"^stream_migration_pause_us$", "us_per_call",
+     "lower"),
 ]
 
 #: how many trailing trend runs the median reference uses
@@ -147,13 +161,39 @@ def load_trend(path: Optional[str]) -> Optional[dict]:
         return json.load(f)
 
 
-def trend_reference(trend: dict, fname: str, key: RowKey,
-                    field: str) -> Optional[float]:
+def current_platform_key(current_dir: str) -> Optional[str]:
+    """The platform key stamped into this run's artifacts by
+    ``benchmarks/run.py`` (``backend:Ndev:kernel``), or None for
+    artifacts that predate the field."""
+    import glob
+
+    for path in sorted(glob.glob(os.path.join(current_dir,
+                                              "BENCH_*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        key = data.get("platform", {}).get("key")
+        if key:
+            return key
+    return None
+
+
+def trend_reference(trend: dict, fname: str, key: RowKey, field: str,
+                    platform: Optional[str] = None) -> Optional[float]:
     """Median of the last ``TREND_WINDOW`` runs' values for one gated
-    key, or None when fewer than ``TREND_MIN_RUNS`` runs hold it."""
+    key, or None when fewer than ``TREND_MIN_RUNS`` runs hold it.
+
+    Runs from a *different* platform are excluded — a GPU benchmark run
+    appended to the shared history cannot shift the median a CPU PR
+    gate compares against.  Runs that predate the platform field (or a
+    current run without one) match everything: the pre-segregation
+    history stays usable and ages out of the window naturally.
+    """
     name, tier = key
     values = []
     for run in trend.get("runs", []):
+        run_plat = run.get("platform")
+        if platform and run_plat and run_plat != platform:
+            continue
         for r in run.get("rows", {}).get(fname, []):
             if r["name"] == name and r.get("tier") == tier:
                 v = r.get(field)
@@ -212,6 +252,10 @@ def compare(current_dir: str, baseline_dir: str, threshold: float,
     regressions: List[Tuple[str, str]] = []
     missing_baseline: List[str] = []
     report = Report()
+    platform = current_platform_key(current_dir)
+    if trend is not None and platform:
+        print(f"# trend references filtered to platform {platform}",
+              file=sys.stderr)
     for fname, pattern, field, direction in GATES:
         base = load_rows(os.path.join(baseline_dir, fname))
         cur = load_rows(os.path.join(current_dir, fname))
@@ -260,7 +304,8 @@ def compare(current_dir: str, baseline_dir: str, threshold: float,
             source = "baseline"
             ref = None
             if trend is not None:
-                ref = trend_reference(trend, fname, key, field)
+                ref = trend_reference(trend, fname, key, field,
+                                      platform=platform)
                 if ref is not None:
                     source = f"trend median, last {TREND_WINDOW}"
             if ref is None:

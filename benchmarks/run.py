@@ -27,9 +27,12 @@ stderr with every run so an artifact can always be traced to the
 backend and kernel path that produced it.
 
 ``--json DIR`` additionally writes one machine-readable
-``BENCH_<module>.json`` artifact per module (rows + wall time + git sha)
-— the format ``benchmarks/compare.py`` and the CI regression gate
-consume.  Arguments are strict: unknown flags and unknown ``--only``
+``BENCH_<module>.json`` artifact per module (rows + wall time + git sha
++ the resolved platform: backend, device count, kernel backend, and the
+canonical ``key`` string that ``trend.py``/``compare.py`` use to keep
+per-platform trend histories separate — a GPU run can never poison the
+CPU rolling median) — the format ``benchmarks/compare.py`` and the CI
+regression gate consume.  Arguments are strict: unknown flags and unknown ``--only``
 names are errors, not silent no-ops (a typo'd flag must fail the build,
 not skip the gate).
 """
@@ -73,8 +76,24 @@ def norm_row(row):
     return (name, us, derived, tier)
 
 
+def platform_meta(desc: dict) -> dict:
+    """Artifact platform block from ``repro.platform.describe()``: the
+    fields that make two runs comparable, plus the canonical ``key``
+    string the trend history segregates on."""
+    backend = desc.get("backend", "unknown")
+    n_dev = desc.get("n_devices", 0)
+    kernel = desc.get("kernel_backend", "unknown")
+    return {
+        "backend": backend,
+        "n_devices": n_dev,
+        "kernel_backend": kernel,
+        "key": f"{backend}:{n_dev}dev:{kernel}",
+    }
+
+
 def write_artifact(json_dir: str, name: str, rows, wall_s: float,
-                   sha: str, failed: bool) -> str:
+                   sha: str, failed: bool,
+                   platform: dict | None = None) -> str:
     """One ``BENCH_<module>.json`` per module: the machine-readable twin
     of the CSV rows, with enough provenance to diff across commits."""
     os.makedirs(json_dir, exist_ok=True)
@@ -84,6 +103,7 @@ def write_artifact(json_dir: str, name: str, rows, wall_s: float,
         "git_sha": sha,
         "wall_s": round(wall_s, 3),
         "failed": failed,
+        "platform": platform or {},
         "rows": [
             {"name": rn, "us_per_call": us, "derived": derived,
              "tier": tier}
@@ -125,7 +145,9 @@ def main() -> None:
     from repro import platform as pf
 
     pf.set_platform(args.platform)
-    print(f"# platform: {pf.describe()}", file=sys.stderr)
+    desc = pf.describe()
+    print(f"# platform: {desc}", file=sys.stderr)
+    platform = platform_meta(desc)
 
     sha = git_sha()
     print("name,us_per_call,derived,tier")
@@ -151,7 +173,7 @@ def main() -> None:
         print(f"# bench_{name} wall: {wall:.1f}s", file=sys.stderr)
         if args.json:
             path = write_artifact(args.json, name, rows, wall, sha,
-                                  failed=not ok)
+                                  failed=not ok, platform=platform)
             print(f"# wrote {path}", file=sys.stderr)
     if failed:
         # every remaining module still ran, but CI must see the failure

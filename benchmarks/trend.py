@@ -5,16 +5,21 @@ appended to one JSON artifact that survives across CI runs.
     python benchmarks/trend.py show   <trend_file> [--key NAME[TIER]]
 
 ``append`` folds every ``BENCH_*.json`` in ``bench_dir`` into
-``trend_file`` as one *run* entry keyed by ``git_sha`` + date.  A re-run
-of the same commit replaces its previous entry (CI retries must not
-double-count), and the history is capped at ``MAX_RUNS`` entries —
-oldest dropped — so the artifact stays cache-sized forever.
+``trend_file`` as one *run* entry keyed by ``git_sha`` + date + the
+artifact's platform key (``benchmarks/run.py`` stamps the resolved
+backend / device count / kernel backend into every artifact).  A re-run
+of the same commit *on the same platform* replaces its previous entry
+(CI retries must not double-count; the same sha benchmarked on CPU and
+GPU keeps both entries), and the history is capped at ``MAX_RUNS``
+entries — oldest dropped — so the artifact stays cache-sized forever.
 
 The file is the input to ``compare.py --trend``: the gate references
-the median of the last 5 runs holding each gated key instead of a
-single committed baseline, which kills baseline-staleness false alarms
-(one anomalous baseline commit no longer poisons every later compare)
-while still catching slow drift.  In CI the artifact rides
+the median of the last 5 *same-platform* runs holding each gated key
+instead of a single committed baseline, which kills baseline-staleness
+false alarms (one anomalous baseline commit no longer poisons every
+later compare) while still catching slow drift — and the platform key
+keeps histories segregated, so one GPU benchmark run cannot poison the
+CPU rolling median the PR gate compares against.  In CI the artifact rides
 ``actions/cache`` (key ``bench-trend-*``): each run restores the most
 recent cache, compares against it, appends itself, and saves — an
 append-only ledger with at-most-one-run loss on cache eviction.
@@ -24,6 +29,7 @@ Format (one JSON object)::
     {"version": 1,
      "runs": [
        {"git_sha": "...", "date": "2026-08-07T12:00:00Z",
+        "platform": "cpu:1dev:pallas",
         "rows": {"BENCH_stream.json": [{"name": ..., "us_per_call": ...,
                                         "derived": ..., "tier": ...}]}},
        ...]}
@@ -60,9 +66,12 @@ def append_run(bench_dir: str, trend_path: str,
         raise SystemExit(f"no BENCH_*.json artifacts in {bench_dir}")
     rows = {}
     sha = "unknown"
+    plat = None
     for path in artifacts:
         with open(path) as f:
             data = json.load(f)
+        if plat is None:
+            plat = data.get("platform", {}).get("key")
         if data.get("failed"):
             # a failed module's rows are partial; recording them would
             # poison the median for every later compare
@@ -79,11 +88,16 @@ def append_run(bench_dir: str, trend_path: str,
     run = {
         "git_sha": sha,
         "date": now or time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "platform": plat,
         "rows": rows,
     }
     trend = load(trend_path)
-    # a re-run of the same commit replaces its previous entry
-    trend["runs"] = [r for r in trend["runs"] if r["git_sha"] != sha]
+    # a re-run of the same commit on the same platform replaces its
+    # previous entry (distinct platforms keep distinct entries)
+    trend["runs"] = [
+        r for r in trend["runs"]
+        if not (r["git_sha"] == sha and r.get("platform") == plat)
+    ]
     trend["runs"].append(run)
     trend["runs"] = trend["runs"][-MAX_RUNS:]
     parent = os.path.dirname(trend_path)
@@ -112,7 +126,9 @@ def show(trend_path: str, key: Optional[str] = None) -> None:
     for run in trend["runs"]:
         if want_name is None:
             n = sum(len(v) for v in run["rows"].values())
-            print(f"{run['date']}  {run['git_sha'][:12]}  {n} rows")
+            plat = run.get("platform") or "?"
+            print(f"{run['date']}  {run['git_sha'][:12]}  {plat}  "
+                  f"{n} rows")
             continue
         for rows in run["rows"].values():
             for r in rows:

@@ -103,9 +103,20 @@ def pad_pool(n_slots: int, mesh: Mesh) -> int:
 
     Non-divisible pools shard the *padded* pool; the engine masks the dead
     tail slots (they are never acquirable and read as all-zero surfaces).
+    Elastic pools grow/shrink in bucket increments padded through this
+    same rule, so every capacity bucket shards evenly and the compiled
+    dispatches stay keyed by (padded) pool shape alone.
     """
     n = slot_shard_count(mesh)
     return -(-n_slots // n) * n
+
+
+def shard_of(slot: int, slots_per_shard: int) -> int:
+    """The data-mesh shard owning a global slot index (contiguous
+    blocks: shard k owns [k * slots_per_shard, (k+1) * slots_per_shard)).
+    The host-side twin of the engine's device-side routing — the
+    multi-shard EDF scheduler budgets per shard with this."""
+    return slot // slots_per_shard
 
 
 def slot_pool_spec(mesh: Mesh) -> P:

@@ -44,7 +44,7 @@ from repro.serve.stream import (
 
 __all__ = [
     "SensorFeed", "ReplayReport", "replay", "oracle_digests",
-    "check_oracle", "mixed_scene_feeds",
+    "check_oracle", "mixed_scene_feeds", "fleet_scene_feeds",
 ]
 
 
@@ -59,7 +59,11 @@ class SensorFeed:
     optionally re-tiers it mid-run at a virtual time —
     ``(t, new_qos)`` applies ``runtime.set_tier`` at the first arrival
     granule past ``t`` (the churn+tier-migration schedule the oracle
-    gate exercises).
+    gate exercises).  ``move`` optionally *slot*-migrates it live:
+    ``(t, dst)`` applies ``runtime.migrate`` at the first arrival
+    granule past ``t`` (``dst=None`` lets the engine pick the
+    destination — lowest free slot, or the least-loaded shard on a
+    mesh).
     """
 
     stream: syn.EventStream
@@ -67,7 +71,8 @@ class SensorFeed:
     detach_t: Optional[float] = None
     name: str = ""
     qos: QoSClass = DEFAULT_QOS
-    migrate: Optional[tuple] = None   # (t, QoSClass)
+    migrate: Optional[tuple] = None   # (t, QoSClass) — tier migration
+    move: Optional[tuple] = None      # (t, dst_slot|None) — slot migration
 
 
 @dataclasses.dataclass
@@ -93,6 +98,9 @@ class ReplayReport:
     latency_p50_us: Optional[float]
     latency_p95_us: Optional[float]
     latency_p99_us: Optional[float]
+    # queued events re-attributed by live slot migration (telemetry,
+    # like deferrals — never part of the conservation identity)
+    migrated: int = 0
     # per-tier accounting + latency percentiles (QoS; exact counters,
     # wall-clock latencies) — see StreamRuntime.tier_counters /
     # tier_latencies_us for the key meanings
@@ -117,7 +125,8 @@ class ReplayReport:
             f" over {self.n_sensors} sensors ({self.policy})",
             f"  events: offered {self.offered}  ingested {self.ingested}"
             f"  dropped {self.dropped} ({self.drop_rate:.1%})"
-            f"  discarded {self.discarded}  backlog {self.unoffered}",
+            f"  discarded {self.discarded}  migrated {self.migrated}"
+            f"  backlog {self.unoffered}",
             f"  throughput {self.events_per_sec / 1e6:.3f} Meps"
             f"  readout latency {lat}",
         ]
@@ -178,7 +187,8 @@ def replay(
     n_steps = int(np.floor(t_end / d)) + 1
 
     state = [
-        {"ptr": 0, "sensor": None, "done": False, "migrated": False}
+        {"ptr": 0, "sensor": None, "done": False, "migrated": False,
+         "moved": False}
         for _ in feeds
     ]
 
@@ -195,6 +205,10 @@ def replay(
                     and f.migrate is not None and f.migrate[0] <= now):
                 runtime.set_tier(st["sensor"], f.migrate[1])
                 st["migrated"] = True
+            if (st["sensor"] is not None and not st["moved"]
+                    and f.move is not None and f.move[0] <= now):
+                runtime.migrate(st["sensor"], f.move[1])
+                st["moved"] = True
 
     def offer_until(now: float) -> None:
         for f, st in zip(feeds, state):
@@ -246,7 +260,7 @@ def replay(
         offered=offered, accepted=st["accepted"],
         ingested=st["ingested"], dropped=st["dropped"],
         refused=st["refused"], discarded=st["discarded"],
-        unoffered=unoffered,
+        unoffered=unoffered, migrated=st["migrated"],
         drop_rate=st["dropped"] / offered if offered else 0.0,
         events_per_sec=st["ingested"] / wall if wall > 0 else 0.0,
         latency_p50_us=st["latency_p50_us"],
@@ -291,6 +305,32 @@ def oracle_digests(
             pass   # scheduling metadata: changes *when* work happens, not what
         elif kind == "detach":
             sessions.pop(entry).detach()
+        elif kind == "grow":
+            # entry is the new capacity; the oracle must land on it
+            got = engine.grow(entry)
+            assert got == entry, (
+                f"oracle capacity diverged: grew to {got}, log says {entry}"
+            )
+        elif kind == "shrink":
+            # entry is (new_capacity, moves); the oracle's compaction is
+            # derived from its own bookkeeping and must reproduce the
+            # recorded (src, dst) moves exactly
+            capacity, moves = entry
+            got = engine.shrink(capacity)
+            assert ([tuple(m) for m in got]
+                    == [tuple(m) for m in moves]), (
+                f"oracle shrink compaction diverged: {got} vs log {moves}"
+            )
+            for src, dst in moves:
+                if src in sessions:
+                    sessions[dst] = sessions.pop(src)
+        elif kind == "migrate":
+            # entry is the (src, dst) the runtime actually performed —
+            # replayed verbatim, so placement policy (lowest-free vs
+            # least-loaded-shard) never has to match across mesh modes
+            src, dst = entry
+            engine.migrate(src, dst)
+            sessions[dst] = sessions.pop(src)
         else:
             rec: StepRecord = entry
             if rec.chunks is None:
@@ -404,4 +444,62 @@ def mixed_scene_feeds(
         feeds.append(SensorFeed(stream=stream, attach_t=attach_t,
                                 detach_t=detach_t, name=f"{kind}-{i}",
                                 qos=qos, migrate=migrate))
+    return feeds
+
+
+def fleet_scene_feeds(
+    h: int,
+    w: int,
+    duration: float,
+    n_sensors: int,
+    seed: int = 0,
+    *,
+    noise_hz: float = 5.0,
+    n_moves: int = 3,
+) -> List[SensorFeed]:
+    """Fleet churn traffic for the elastic + migration acceptance gate.
+
+    Sensors attach in three staggered waves (t = 0, 0.3 and 0.45 of the
+    duration) so an elastic runtime over a small pool grows at least
+    twice; late-wave non-moving sensors detach at 0.7 duration so
+    occupancy falls back under the shrink watermark (one auto-shrink
+    with live-slot compaction).  The first ``n_moves`` sensors
+    slot-migrate live at 0.6 duration (engine-picked destinations);
+    sparse glyph sensors ride an **analog, head-bearing** gesture tier
+    (analog_3d surface + stcf + denoise head), so at least one
+    migration moves a slot with non-zero noise generation and stage-1
+    head products — the hardest state to move bitwise.  Requires an
+    ``mode="edram"`` engine.
+    """
+    assert 3 <= n_moves <= n_sensors, (n_moves, n_sensors)
+    analog_head = spec_mod.ReadoutSpec(
+        surface=spec_mod.surface(fidelity=fidelity_mod.analog_3d()),
+        stcf=spec_mod.stcf(
+            decay=spec_mod.surface(fidelity=fidelity_mod.analog_3d())),
+        labels=spec_mod.denoise(input="stcf"),
+    )
+    gesture = dataclasses.replace(GESTURE_TIER, spec=analog_head)
+    feeds: List[SensorFeed] = []
+    for i in range(n_sensors):
+        rng = np.random.default_rng((seed, i))
+        kind = ("driving", "hotel_bar", "glyph")[i % 3]
+        if kind == "driving":
+            scene = syn.driving_scene(h, w, rng)
+        elif kind == "hotel_bar":
+            scene = syn.hotel_bar_scene(h, w, rng)
+        else:
+            scene = syn.moving_glyph_scene(h, w, i % 10, rng)
+        stream = syn.dvs_from_intensity(
+            scene, h, w, duration, rng, noise_hz=noise_hz, fps=500.0
+        )
+        wave = i % 3
+        attach_t = (0.0, duration * 0.3, duration * 0.45)[wave]
+        detach_t = duration * 0.7 if wave == 2 and i >= n_moves else None
+        if attach_t:
+            stream = stream.window(attach_t, np.inf)
+        qos = gesture if kind == "glyph" else TELEMETRY_TIER
+        move = (duration * 0.6, None) if i < n_moves else None
+        feeds.append(SensorFeed(stream=stream, attach_t=attach_t,
+                                detach_t=detach_t, name=f"fleet-{kind}-{i}",
+                                qos=qos, move=move))
     return feeds

@@ -31,6 +31,13 @@ Three modes behind one entrypoint:
     PYTHONPATH=src python -m repro.launch.serve stream --tiers --classify 4 \
         # per-tier model serving: the gesture tier streams logits,
         # digest-chained and gated by the bitwise replay oracle
+    PYTHONPATH=src python -m repro.launch.serve stream --sensors 9 \
+        --migrate-demo --hw 48x64 --duration 0.06 --deadline 0.005
+        # fleet demo: elastic pool growth, shrink compaction, live slot
+        # migration (analog head-bearing tier included), oracle-gated
+    PYTHONPATH=src python -m repro.launch.serve stream --mesh 2 \
+        --sensors 8 --shard-budget 2 --barrier-every 4
+        # multi-shard EDF: per-shard step budgets + clock barriers
     PYTHONPATH=src python -m repro.launch.serve sweep --cmem 10,20 \
         --retention 12,24 --out artifacts
         # digital-vs-analog denoise accuracy + logit drift vs modeled
@@ -202,15 +209,36 @@ def run_stream(args) -> None:
         mesh = mesh_mod.make_host_mesh(args.mesh)
         print(f"mesh: {dict(mesh.shape)}")
 
-    cfg = TSEngineConfig(h=h, w=w, n_slots=max(args.slots, args.sensors),
+    elastic = args.elastic or args.migrate_demo
+    n_slots = max(args.slots, args.sensors)
+    slot_bucket = None
+    if elastic:
+        # start small on purpose: the elastic policy grows the pool in
+        # pad-ahead buckets as the attach waves arrive
+        slot_bucket = max(2, args.sensors // 3)
+        n_slots = slot_bucket
+    cfg = TSEngineConfig(h=h, w=w, n_slots=n_slots,
                          chunk_capacity=args.chunk, mode=args.mode,
-                         backend=args.backend)
+                         backend=args.backend, slot_bucket=slot_bucket)
     scfg = StreamConfig(policy=args.policy, queue_capacity=args.queue,
                         deadline_s=args.deadline,
-                        step_chunk_budget=args.budget or None)
-    feeds = rp.mixed_scene_feeds(h, w, args.duration, args.sensors,
-                                 seed=args.seed, churn=args.churn,
-                                 tiered=args.tiers)
+                        step_chunk_budget=args.budget or None,
+                        elastic=elastic,
+                        shrink_watermark=0.9 if elastic else 0.0,
+                        shard_budget=args.shard_budget or None,
+                        shard_barrier_every=args.barrier_every)
+    if args.migrate_demo:
+        if args.mode != "edram":
+            raise SystemExit("--migrate-demo needs --mode edram (the "
+                             "gesture tier serves analog-fidelity specs)")
+        # staggered attach waves + batch detach + live slot migrations,
+        # incl. an analog head-bearing tier — the fleet acceptance traffic
+        feeds = rp.fleet_scene_feeds(h, w, args.duration, args.sensors,
+                                     seed=args.seed)
+    else:
+        feeds = rp.mixed_scene_feeds(h, w, args.duration, args.sensors,
+                                     seed=args.seed, churn=args.churn,
+                                     tiered=args.tiers)
     spec = rs.SURFACE_SPEC
     if args.classify:
         head_spec = rs.ReadoutSpec(
@@ -232,8 +260,9 @@ def run_stream(args) -> None:
         tier = f" [{f.qos.tier} p{f.qos.priority}]" if args.tiers else ""
         mig = (f" ->{f.migrate[1].tier}@{f.migrate[0] * 1e3:.0f}ms"
                if f.migrate else "")
+        mov = (f" move@{f.move[0] * 1e3:.0f}ms" if f.move else "")
         print(f"feed {i}: {f.name:>12s} {f.stream.n:7d} events, "
-              f"attach {f.attach_t * 1e3:.0f}ms -> {detach}{tier}{mig}")
+              f"attach {f.attach_t * 1e3:.0f}ms -> {detach}{tier}{mig}{mov}")
 
     if args.speed == 0:
         # warm the jit cache on a throwaway engine with the same traffic
@@ -246,6 +275,18 @@ def run_stream(args) -> None:
     report = rp.replay(eng, feeds, scfg, spec, speed=args.speed,
                        arrival_substeps=args.substeps)
     print(report.summary())
+    if elastic:
+        ops = [(k, e) for k, e in report.log
+               if k in ("grow", "shrink", "migrate")]
+        desc = ", ".join(
+            f"grow->{e}" if k == "grow"
+            else f"shrink->{e[0]} moves={e[1]}" if k == "shrink"
+            else f"migrate {e[0]}->{e[1]}"
+            for k, e in ops)
+        print(f"fleet ops: {desc or 'none'}")
+        print(f"final capacity {eng.capacity} "
+              f"(padded {eng.n_slots_padded}), "
+              f"migrated events {report.migrated}")
     if args.classify:
         # the engine retains the final deadline's state: sample the
         # served logits (per-tier spec under --tiers, default otherwise)
@@ -512,6 +553,25 @@ def main() -> None:
                          "gesture tier carries the head-bearing spec, "
                          "otherwise every deadline serves it "
                          "(0 disables)")
+    st.add_argument("--elastic", action="store_true",
+                    help="elastic slot pool: start at one pad-ahead "
+                         "bucket and let connect() grow it (auto-shrink "
+                         "when occupancy falls)")
+    st.add_argument("--migrate-demo", action="store_true",
+                    help="fleet demo (implies --elastic): staggered "
+                         "attach waves drive pool growth, a batch "
+                         "detach drives a shrink with live-slot "
+                         "compaction, and three sensors slot-migrate "
+                         "live (one on an analog head-bearing tier) — "
+                         "all bitwise through the replay oracle")
+    st.add_argument("--shard-budget", type=int, default=0, metavar="N",
+                    help="multi-shard EDF: >0 caps engine chunks per "
+                         "mesh shard per deadline, priority claims a "
+                         "hot shard first (0 = unlimited)")
+    st.add_argument("--barrier-every", type=int, default=0, metavar="K",
+                    help=">0 makes every Kth deadline a barrier step: "
+                         "shard budgets lift and the per-shard virtual "
+                         "clocks re-sync (0 disables)")
     st.add_argument("--seed", type=int, default=0)
     st.add_argument("--no-oracle", action="store_true",
                     help="skip the synchronous bitwise oracle gate")

@@ -48,7 +48,11 @@ class SensorSession:
     # -- lifecycle -----------------------------------------------------------
     @property
     def slot(self) -> int:
-        """The pool slot this session owns (stable until ``detach``)."""
+        """The pool slot this session owns.  Stable until ``detach`` —
+        or until a live migration (``engine.migrate`` / elastic-shrink
+        compaction) re-homes the session, which rebinds this property to
+        the destination slot; callers should re-read it rather than
+        cache the integer."""
         return self._slot
 
     @property

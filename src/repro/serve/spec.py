@@ -9,7 +9,12 @@ read returns; the serving engine compiles **one fused batched dispatch
 per unique spec** and caches it exactly like the ``backend`` selector —
 the spec is part of the jit cache key, so reading the same spec twice
 never retraces, and every product in a composed spec comes out of the
-same compiled program over the same slot-pool state snapshot.
+same compiled program over the same slot-pool state snapshot.  Specs
+are **pool-size-agnostic**: nothing here mentions the slot count, so an
+elastic engine growing or shrinking its padded slot axis retraces a
+spec at most once per capacity *bucket* (array shapes key the jit
+cache; revisited buckets hit their cached entries) and hot-path reads
+at a stable capacity never recompile.
 
 Specs form a **two-stage product graph**.  Stage-0 *surface products*
 read off the pool state (each a frozen, hashable descriptor; construct

@@ -114,6 +114,32 @@ at an hour would have collapsed microsecond stamps.  Scheduling (the
 deadline grids) stays in absolute time; the action log records rebased
 times, so the replay oracle consumes it verbatim.
 
+**Fleet elasticity + live migration** — with ``StreamConfig.elastic``,
+``connect()`` grows the engine's slot pool by one pad-ahead bucket
+(``TSEngineConfig.slot_bucket``) instead of failing when occupancy
+would cross ``grow_watermark`` (clamped to ``max_slots``), and each
+deadline may release one bucket — compacting live slots downward —
+once occupancy falls to ``shrink_watermark`` of the shrunken capacity.
+``migrate(sensor, dst)`` moves a live session between slots at a
+deadline boundary: surface rows, dirty tiles, counter plane, and the
+analog noise generation move bitwise (the noise key folds the
+generation *value*, never the slot index), and the sensor's queued
+events are re-attributed exactly (``migrated`` per-tier counter —
+telemetry alongside the conservation identity, like ``deferrals``).
+Every grow / shrink / migrate lands in the action log, so churn
+schedules replay bitwise through the synchronous oracle.
+
+**Multi-shard EDF** — with ``StreamConfig.shard_budget`` on a
+mesh-sharded engine, each step also caps the chunks dispatched *per
+shard*: shard budget is claimed priority-first (tier-aware overflow —
+a gesture sensor on a hot shard preempts telemetry there), overflow
+defers all-or-nothing per sensor, and per-shard *virtual clocks*
+advance only on shards that served work.  Every
+``shard_barrier_every`` deadlines the step is a **barrier**: budgets
+lift, every ready sensor is served, and all shard clocks re-sync —
+scheduling stays a pure function of event timestamps, so the action
+log still replays bitwise.
+
 Determinism contract: which events are accepted, dropped, scheduled,
 deferred, and coalesced into which chunk of which step is a pure
 function of the offered event sequence, the per-sensor deadline
@@ -151,7 +177,7 @@ POLICIES = ("block", "drop_oldest", "drop_newest")
 
 #: the per-sensor counters that aggregate by tier (exact, deterministic)
 TIER_KEYS = ("offered", "accepted", "dropped", "refused", "ingested",
-             "discarded", "deferrals")
+             "discarded", "deferrals", "migrated")
 
 #: the per-sensor modeled-energy accumulators (joules; aggregate by tier
 #: like TIER_KEYS but float-valued — the metering layer's currency)
@@ -247,6 +273,20 @@ class StreamConfig:
     ``record_chunks=False`` drops the host-side chunk copies from the
     action log (timing-only runs — the oracle replay then has nothing
     to consume).
+
+    Fleet knobs: ``elastic=True`` lets ``connect()`` grow the engine's
+    slot pool by pad-ahead buckets instead of failing, up to
+    ``max_slots`` (``None`` = unbounded); growth triggers when one more
+    sensor would push occupancy past ``grow_watermark`` of capacity
+    (1.0 = grow only when full).  ``shrink_watermark`` > 0 enables
+    auto-shrink: at a deadline boundary, if occupancy is at or below
+    that fraction of the *shrunken* capacity, one bucket is released
+    (live tail slots compact downward; never below the capacity the
+    engine started with).  ``shard_budget`` caps the chunks one step
+    may dispatch *per mesh shard* (priority claims shard budget first;
+    overflow defers); ``shard_barrier_every`` = N makes every Nth
+    deadline a barrier step that lifts the shard budgets and re-syncs
+    the per-shard virtual clocks (0 disables barriers).
     """
 
     policy: str = "drop_oldest"
@@ -258,6 +298,12 @@ class StreamConfig:
     device_ring: bool = True
     record_chunks: bool = True
     max_record_steps: Optional[int] = 10_000
+    elastic: bool = False
+    max_slots: Optional[int] = None
+    grow_watermark: float = 1.0
+    shrink_watermark: float = 0.0
+    shard_budget: Optional[int] = None
+    shard_barrier_every: int = 0
     # retention bound on the action log: beyond this many recorded
     # steps the oldest step entries are trimmed (counted in
     # ``log_trimmed_steps``) so a long-running deployment cannot retain
@@ -275,6 +321,11 @@ class StreamConfig:
         assert self.step_chunk_budget is None or self.step_chunk_budget >= 1
         assert self.capacity_eps is None or self.capacity_eps > 0
         assert self.max_record_steps is None or self.max_record_steps >= 1
+        assert self.max_slots is None or self.max_slots >= 1
+        assert 0.0 < self.grow_watermark <= 1.0, self.grow_watermark
+        assert 0.0 <= self.shrink_watermark <= 1.0, self.shrink_watermark
+        assert self.shard_budget is None or self.shard_budget >= 1
+        assert self.shard_barrier_every >= 0, self.shard_barrier_every
 
 
 #: one queued segment: (x, y, t, p) host arrays, equal length
@@ -335,6 +386,7 @@ class StreamSensor:
         self.ingested = 0    # events drained into engine chunks
         self.discarded = 0   # queued events thrown away by disconnect()
         self.deferrals = 0   # events postponed by overload scheduling
+        self.migrated = 0    # queued events re-attributed by slot migration
         # -- modeled energy (joules; hw.energy_model.EnergyMeter) ---------
         self.energy_write_j = 0.0   # ingest: write energy x events
         self.energy_read_j = 0.0    # readout: array access x dispatches
@@ -534,6 +586,7 @@ class StreamSensor:
             "accepted": self.accepted, "dropped": self.dropped,
             "refused": self.refused, "ingested": self.ingested,
             "discarded": self.discarded, "deferrals": self.deferrals,
+            "migrated": self.migrated,
             "energy_write_j": self.energy_write_j,
             "energy_read_j": self.energy_read_j,
             "energy_leak_j": self.energy_leak_j,
@@ -569,6 +622,7 @@ class StepRecord:
     overload: bool = False
     specs: Tuple[spec_mod.ReadoutSpec, ...] = ()
     noise_step: int = 0      # analog-fidelity noise key (the step index)
+    barrier: bool = False    # shard-clock barrier step (budgets lifted)
     latency_s: float = float("nan")
     digest: str = ""
 
@@ -576,6 +630,8 @@ class StepRecord:
 #: action-log entries:
 #:   ("attach", (slot, QoSClass)) | ("set_tier", (slot, QoSClass))
 #:   | ("detach", slot) | ("step", rec)
+#:   | ("grow", new_capacity) | ("shrink", (new_capacity, moves))
+#:   | ("migrate", (src_slot, dst_slot))
 LogEntry = Tuple[str, Union[int, Tuple, StepRecord]]
 
 
@@ -646,8 +702,14 @@ class StreamRuntime:
         self._inflight: Optional[_Inflight] = None
         self._retired: Dict[str, int] = {
             k: 0 for k in ("offered", "accepted", "dropped", "refused",
-                           "ingested", "discarded")
+                           "ingested", "discarded", "migrated")
         }
+        # elastic floor: never auto-shrink below the capacity the engine
+        # started with (a bare test double has no capacity attr)
+        self._min_capacity = getattr(engine, "capacity", 0)
+        # per-shard virtual clocks (multi-shard EDF): the last deadline
+        # each shard served work at; barriers re-sync all of them
+        self._shard_clocks: Dict[int, float] = {}
         self._tier_retired: Dict[str, Dict[str, int]] = {}
         self._tier_slo: Dict[str, float] = {}
         # -- modeled-energy metering (hw.energy_model; host-float only) ---
@@ -712,9 +774,22 @@ class StreamRuntime:
     def connect(self, qos: QoSClass = DEFAULT_QOS) -> StreamSensor:
         """Admit + attach a session under ``qos`` (raises
         ``AdmissionError`` when the declared rate does not fit,
-        ``RuntimeError`` when the pool is full) and return its
-        queue-fronted sensor handle."""
+        ``RuntimeError`` when the pool is full and cannot grow) and
+        return its queue-fronted sensor handle.  With
+        ``StreamConfig.elastic``, a pool whose occupancy would cross
+        ``grow_watermark`` grows by pad-ahead buckets (up to
+        ``max_slots``) instead of refusing — each growth is logged so
+        the oracle replays the same capacity trajectory."""
         self._admit(qos)
+        if self.cfg.elastic:
+            eng = self.engine
+            while (eng.n_live + 1 > self.cfg.grow_watermark * eng.capacity
+                   and (self.cfg.max_slots is None
+                        or eng.capacity < self.cfg.max_slots)):
+                target = eng.capacity + eng.slot_bucket
+                if self.cfg.max_slots is not None:
+                    target = min(target, self.cfg.max_slots)
+                self.log.append(("grow", eng.grow(target)))
         session = self.engine.attach(qos=qos)
         sensor = StreamSensor(self, session, qos)
         self.sensors[session.slot] = sensor
@@ -738,6 +813,63 @@ class StreamRuntime:
         self._tier_slo[qos.tier] = min(
             self._tier_slo.get(qos.tier, math.inf), qos.slo_p99_s)
         self.log.append(("set_tier", (sensor.slot, qos)))
+
+    def migrate(self, sensor: StreamSensor,
+                dst: Optional[int] = None) -> int:
+        """Move a live sensor to another slot (``dst=None`` lets the
+        engine pick: lowest free slot single-device, least-loaded shard
+        on a mesh).  The slot's full device state — surface rows, dirty
+        tiles, counter plane, and the analog noise *generation* — moves
+        bitwise, so subsequent analog reads draw the same per-cell
+        noise they would have in the source slot.  The sensor's queued
+        events follow it (counted per tier in ``migrated``); its
+        deadline stream, QoS class, and all counters are untouched.
+        The (src, dst) pair is logged so the oracle replays the exact
+        placement."""
+        if sensor.session is None:
+            raise RuntimeError("sensor is disconnected")
+        src = sensor.slot
+        if dst is None and self.cfg.elastic:
+            # a full pool has nowhere to land the sensor; the elastic
+            # policy grows a bucket (logged) instead of failing
+            eng = self.engine
+            if (eng.n_live >= eng.capacity
+                    and (self.cfg.max_slots is None
+                         or eng.capacity < self.cfg.max_slots)):
+                target = eng.capacity + eng.slot_bucket
+                if self.cfg.max_slots is not None:
+                    target = min(target, self.cfg.max_slots)
+                self.log.append(("grow", eng.grow(target)))
+        dst = self.engine.migrate(src, dst)
+        self.sensors[dst] = self.sensors.pop(src)
+        sensor.migrated += sensor.queued
+        self.log.append(("migrate", (src, dst)))
+        return dst
+
+    def _maybe_shrink(self) -> None:
+        """Release one pad-ahead bucket at this deadline boundary when
+        the elastic policy says so: occupancy at or below
+        ``shrink_watermark`` of the *shrunken* capacity, and never
+        below the capacity the engine started with.  Live slots in the
+        released tail compact downward (each move is a bitwise slot
+        migration); the (capacity, moves) pair is logged so the oracle
+        reproduces the identical compaction."""
+        cfg = self.cfg
+        if not cfg.elastic or cfg.shrink_watermark <= 0.0:
+            return
+        eng = self.engine
+        target = eng.capacity - eng.slot_bucket
+        if target < max(self._min_capacity, 1):
+            return
+        if eng.n_live > cfg.shrink_watermark * target:
+            return
+        moves = eng.shrink(target)
+        for src, dst in moves:
+            moved = self.sensors.pop(src, None)
+            if moved is not None:
+                self.sensors[dst] = moved
+                moved.migrated += moved.queued
+        self.log.append(("shrink", (target, moves)))
 
     def disconnect(self, sensor: StreamSensor) -> None:
         """Detach: the sensor's queued events are discarded (counted in
@@ -787,39 +919,79 @@ class StreamRuntime:
             s.energy_read_j += self.meter.read_energy_j(mode)
 
     # -- the deadline loop ----------------------------------------------------
+    def _shard_of(self, slot: int) -> int:
+        """The mesh shard a slot lives on (0 on single-device engines)."""
+        plan = getattr(self.engine, "_plan", None)
+        if plan is None:
+            return 0
+        from repro.distributed import sharding as shd
+        return shd.shard_of(slot, plan.slots_per_shard)
+
+    def _n_shards(self) -> int:
+        plan = getattr(self.engine, "_plan", None)
+        return plan.n_shards if plan is not None else 1
+
     def _schedule(self, t: float):
         """Pick this step's sensors: every sensor whose next deadline
         has arrived, EDF order (deadline, then priority, then slot).
         With a ``step_chunk_budget`` and more ready chunks than budget,
         the step is *overloaded*: order switches to priority-first and
         the overflow defers (deadline unmoved, so deferred sensors lead
-        the next EDF pass).  Pure virtual-time scheduling — the replay
-        oracle re-derives nothing, it replays the recorded schedule."""
+        the next EDF pass).  With ``shard_budget`` a second,
+        per-mesh-shard cap applies the same way — priority claims a hot
+        shard's budget first (tier-aware overflow), deferral stays
+        all-or-nothing per sensor — except on *barrier* steps (every
+        ``shard_barrier_every`` deadlines), where the shard budgets
+        lift and every ready sensor is served so the per-shard virtual
+        clocks re-sync.  Pure virtual-time scheduling — the replay
+        oracle re-derives nothing, it replays the recorded schedule.
+
+        Returns ``(take, defer, overload, barrier)``."""
         ready = [
             s for _, s in sorted(self.sensors.items())
             if s.next_deadline <= t + _EPS
         ]
         ready.sort(key=lambda s: (s.next_deadline, s.qos.priority, s.slot))
+        barrier = (self.cfg.shard_barrier_every > 0
+                   and (self.n_steps + 1) % self.cfg.shard_barrier_every == 0)
+        take, defer, overload = ready, [], False
         budget = self.cfg.step_chunk_budget
-        if budget is None:
-            return ready, [], False
         cap = self.engine.cfg.chunk_capacity
-        need = {s.slot: -(-s.queued // cap) for s in ready}
-        if sum(need.values()) <= budget:
-            return ready, [], False
-        # overload: priority preempts EDF; deferral is all-or-nothing
-        # per sensor (a partial drain would split one deadline's events
-        # across steps and break the coalescing invariant)
-        by_priority = sorted(
-            ready, key=lambda s: (s.qos.priority, s.next_deadline, s.slot))
-        used, take, defer = 0, [], []
-        for s in by_priority:
-            if need[s.slot] and used + need[s.slot] > budget:
-                defer.append(s)
-            else:
-                take.append(s)
-                used += need[s.slot]
-        return take, defer, True
+        if budget is not None:
+            need = {s.slot: -(-s.queued // cap) for s in ready}
+            if sum(need.values()) > budget:
+                # overload: priority preempts EDF; deferral is
+                # all-or-nothing per sensor (a partial drain would split
+                # one deadline's events across steps and break the
+                # coalescing invariant)
+                by_priority = sorted(
+                    ready,
+                    key=lambda s: (s.qos.priority, s.next_deadline, s.slot))
+                used, take, defer = 0, [], []
+                for s in by_priority:
+                    if need[s.slot] and used + need[s.slot] > budget:
+                        defer.append(s)
+                    else:
+                        take.append(s)
+                        used += need[s.slot]
+                overload = True
+        sbudget = self.cfg.shard_budget
+        if sbudget is not None and not barrier and take:
+            by_priority = sorted(
+                take, key=lambda s: (s.qos.priority, s.next_deadline, s.slot))
+            used_by_shard: Dict[int, int] = {}
+            kept, over = [], []
+            for s in by_priority:
+                nd = -(-s.queued // cap)
+                shard = self._shard_of(s.slot)
+                if nd and used_by_shard.get(shard, 0) + nd > sbudget:
+                    over.append(s)
+                else:
+                    kept.append(s)
+                    used_by_shard[shard] = used_by_shard.get(shard, 0) + nd
+            if over:
+                take, defer, overload = kept, defer + over, True
+        return take, defer, overload, barrier
 
     def _coalesce(self, scheduled: Sequence[StreamSensor], t: float):
         """Drain the scheduled sensors' queues into capacity-sized
@@ -890,7 +1062,8 @@ class StreamRuntime:
         sync the *previous* read (one host sync).  Returns this step's
         record (its ``latency_s``/``digest`` fill at the next sync).
         With ``pipeline=False`` the sync is this step's own read."""
-        scheduled, deferred, overload = self._schedule(t_deadline)
+        self._maybe_shrink()
+        scheduled, deferred, overload, barrier = self._schedule(t_deadline)
         for s in deferred:
             s.deferrals += s.queued
         groups, copies, n_events, order = self._coalesce(
@@ -925,7 +1098,17 @@ class StreamRuntime:
             overload=overload,
             specs=specs,
             noise_step=noise_step,
+            barrier=barrier,
         )
+        # per-shard virtual clocks: shards that served work advance to
+        # this deadline; a barrier re-syncs every shard (virtual time
+        # only — a pure function of the schedule, never wall time)
+        if barrier:
+            for k in range(self._n_shards()):
+                self._shard_clocks[k] = t_deadline
+        else:
+            for s in scheduled:
+                self._shard_clocks[self._shard_of(s.slot)] = t_deadline
         self.log.append(("step", record))
         self.n_steps += 1
         cap = self.cfg.max_record_steps
@@ -990,7 +1173,9 @@ class StreamRuntime:
         where ``deferred`` is the still-queued remainder (events whose
         service is deferred to a later deadline) and ``deferrals``
         counts overload postponements cumulatively (telemetry, not part
-        of the identity).
+        of the identity).  ``migrated`` is telemetry too: queued events
+        re-attributed by live slot migration (migrate / elastic-shrink
+        compaction), never double-counted in the identity.
         """
         out = {
             tier: dict(bucket, deferred=0)
@@ -1068,6 +1253,10 @@ class StreamRuntime:
             "deadline_s": self.cfg.deadline_s,
             "step_chunk_budget": self.cfg.step_chunk_budget,
             "capacity_eps": self.cfg.capacity_eps,
+            "capacity": getattr(self.engine, "capacity", None),
+            "elastic": self.cfg.elastic,
+            "shard_budget": self.cfg.shard_budget,
+            "shard_clocks": dict(self._shard_clocks),
             "drop_rate": c["dropped"] / c["offered"] if c["offered"] else 0.0,
             "tiers": self.tier_counters(),
             "tier_latencies_us": self.tier_latencies_us(),

@@ -85,6 +85,22 @@ Pools not divisible by the device count are padded up
 "never written", and read as all-zero surfaces.  Per-slot results are
 bit-identical to the single-device engine at any device count: the math
 per slot never changes, only where the slot lives.
+
+**Elastic slot pools + live migration** — the pool is not fixed:
+``grow()`` adds acquirable capacity in ``slot_bucket`` pad-ahead
+increments (new rows are never-written state; each distinct padded size
+is one *capacity bucket* that retraces the shape-keyed jit caches once
+— the spec layer is pool-size-agnostic, so no hot spec recompiles when
+a bucket is revisited), ``shrink()`` compacts live slots out of the
+tail deterministically and releases it, and ``migrate(src, dst)``
+moves one live session's entire per-slot state — surface, dirty-tile
+cache row, counter plane, and the attach-epoch ``generation`` whose
+value keys the analog-fidelity noise draws — onto a free slot,
+re-binding its ``SensorSession`` in place.  On a sharded engine the
+migration broadcasts the source rows with one ``lax.psum`` (cold
+administrative path; the hot path stays collective-free), and both
+sides are bitwise the single-device move, which the streaming replay
+oracle gates.
 """
 from __future__ import annotations
 
@@ -132,6 +148,13 @@ class TSEngineConfig:
     stcf_threshold: int = 2
     backend: Optional[str] = None        # kernels.ops backend selector
     block: Tuple[int, int] = (8, 128)    # ts_decay tile (= dirty-tile size)
+    slot_bucket: Optional[int] = None    # elastic pad-ahead growth increment
+    # (slots per ``grow()`` call; ``None`` = the initial ``n_slots``).
+    # Capacity only ever changes in whole buckets, so the pool's padded
+    # slot axis takes a small set of sizes — each size retraces the
+    # shape-keyed jit caches once and every later visit to that bucket
+    # reuses the compiled entries (the spec layer is pool-size-agnostic:
+    # nothing in ``serve.spec`` depends on ``n_slots``).
     max_dirty_tiles: int = 0             # incremental-readout gather cap;
     # 0 = auto (a quarter of the pool's tiles, at least 16).  On a sharded
     # engine the cap applies per shard.  Overflow falls back to one dense
@@ -146,6 +169,9 @@ class TSEngineConfig:
 
     def __post_init__(self):
         assert self.mode in ("edram", "ideal"), self.mode
+        assert self.slot_bucket is None or self.slot_bucket >= 1, (
+            self.slot_bucket
+        )
         ops.resolve_backend(self.backend)  # fail fast on typos
         for s in self.specs:
             assert isinstance(s, spec_mod.ReadoutSpec), s
@@ -385,6 +411,44 @@ def reset_slot(
     )
 
 
+@jax.jit
+def migrate_slot(
+    state: EngineState, src: jax.Array, dst: jax.Array,
+) -> EngineState:
+    """Move slot ``src``'s rows onto slot ``dst`` and wipe ``src``.
+
+    Every per-slot leaf moves: the SAE plane, ``t_last``/``n_events``,
+    the readout-cache row (the destination's cached tiles are then the
+    source's last valid readout, so the pool-wide cache epoch stays
+    coherent), the counter plane, and the slot ``generation`` — the
+    analog-fidelity noise key is folded from the generation *value*,
+    never the slot index, so moving the value moves the per-cell noise
+    draws bitwise with it.  ``src`` is wiped exactly like
+    ``reset_slot`` without a generation bump (its next acquire bumps
+    from the carried value, deterministically).  ``src != dst`` is the
+    caller's contract (``TimeSurfaceEngine.migrate`` enforces it).
+    """
+    sur = state.surfaces
+    return EngineState(
+        surfaces=ts.SurfaceState(
+            sae=sur.sae.at[dst].set(sur.sae[src]).at[src].set(ts.NEVER),
+            t_last=sur.t_last.at[dst].set(sur.t_last[src]).at[src].set(0.0),
+            n_events=sur.n_events.at[dst].set(
+                sur.n_events[src]).at[src].set(0),
+        ),
+        generation=state.generation.at[dst].set(state.generation[src]),
+        cache=ReadoutCache(
+            tiles=state.cache.tiles.at[dst].set(
+                state.cache.tiles[src]).at[src].set(0.0),
+            dirty=state.cache.dirty.at[dst].set(
+                state.cache.dirty[src]).at[src].set(False),
+        ),
+        counts=(None if state.counts is None
+                else state.counts.at[dst].set(
+                    state.counts[src]).at[src].set(0)),
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("spec", "cfg", "backend", "statics")
 )
@@ -528,16 +592,21 @@ class _ShardPlan:
             smap(local_ingest, (spec, spec, spec), spec), donate_argnums=0,
         )
 
-        def shard_offset():
+        def shard_offset(slots_per_shard):
             """First global slot id owned by this device (major-to-minor
-            over the data axes, matching PartitionSpec((a1, a2)) order)."""
+            over the data axes, matching PartitionSpec((a1, a2)) order).
+            ``slots_per_shard`` comes from the *traced* state's local
+            block shape, so every shape-keyed trace is automatically
+            correct for its capacity bucket (the elastic pool resizes
+            the slot axis without touching these programs)."""
             gid = jnp.int32(0)
             for a in self.axes:
                 gid = gid * mesh.shape[a] + lax.axis_index(a)
-            return gid * self.slots_per_shard
+            return gid * slots_per_shard
 
         def local_reset(state, slot, bump):
-            hit = shard_offset() + jnp.arange(self.slots_per_shard) == slot
+            n_local = state.generation.shape[0]
+            hit = shard_offset(n_local) + jnp.arange(n_local) == slot
             sur = state.surfaces
             return EngineState(
                 surfaces=ts.SurfaceState(
@@ -563,6 +632,59 @@ class _ShardPlan:
             lambda st, s: local_reset(st, s, False), (spec, rep), spec,
         ), donate_argnums=0)
 
+        def local_migrate(state, src, dst):
+            """Move global slot ``src`` onto global slot ``dst`` across
+            shards: broadcast the source rows with a ``lax.psum`` over
+            the data axes (exactly one shard contributes non-zero rows;
+            -inf SAE entries survive the sum-with-zeros), write them at
+            the destination's owner, wipe the source.  Collectives are
+            fine here — migration is a cold administrative path, never
+            the per-deadline hot loop."""
+            n_local = state.generation.shape[0]
+            idx = shard_offset(n_local) + jnp.arange(n_local)
+            src_hit = idx == src
+            dst_hit = idx == dst
+
+            def bcast(arr):
+                mask = src_hit.reshape((n_local,) + (1,) * (arr.ndim - 1))
+                row = jnp.sum(
+                    jnp.where(mask, arr, jnp.zeros_like(arr)), axis=0
+                )
+                return lax.psum(row, self.axes) if self.axes else row
+
+            def move(arr, wipe):
+                shaped = lambda m: m.reshape(
+                    (n_local,) + (1,) * (arr.ndim - 1))
+                row = bcast(arr.astype(jnp.int32)
+                            if arr.dtype == bool else arr)
+                if arr.dtype == bool:
+                    row = row > 0
+                out = jnp.where(shaped(dst_hit), row[None].astype(arr.dtype),
+                                arr)
+                return jnp.where(shaped(src_hit),
+                                 jnp.asarray(wipe, arr.dtype), out)
+
+            sur = state.surfaces
+            return EngineState(
+                surfaces=ts.SurfaceState(
+                    sae=move(sur.sae, ts.NEVER),
+                    t_last=move(sur.t_last, 0.0),
+                    n_events=move(sur.n_events, 0),
+                ),
+                generation=jnp.where(
+                    dst_hit, bcast(state.generation), state.generation),
+                cache=ReadoutCache(
+                    tiles=move(state.cache.tiles, 0.0),
+                    dirty=move(state.cache.dirty, False),
+                ),
+                counts=(None if state.counts is None
+                        else move(state.counts, 0)),
+            )
+
+        self.migrate = jax.jit(
+            smap(local_migrate, (spec, rep, rep), spec), donate_argnums=0,
+        )
+
         # spec readers compile lazily, one shard_map program per unique
         # ReadoutSpec (the sharded analogue of ``read_spec_products``'s
         # jit cache); the slot-leading product arrays all shard like the
@@ -577,17 +699,25 @@ class _ShardPlan:
         # fused ingest->readout: scatter + dirty-tile refresh, all local.
         # The gather cap applies per shard (each shard counts only its own
         # dirty tiles) so the incremental-vs-dense choice needs no
-        # collectives; either choice is bit-identical.
+        # collectives; either choice is bit-identical.  Derived from the
+        # *traced* local block shape, so each capacity bucket's trace
+        # carries its own cap (``self.max_dirty`` mirrors the current
+        # bucket's value for telemetry).
         _, _, tp = cfg.tile_counts()
         self.max_dirty = cfg.max_dirty_tiles or max(
             16, self.slots_per_shard * tp // 4
         )
 
+        def local_max_dirty(state):
+            return cfg.max_dirty_tiles or max(
+                16, state.generation.shape[0] * tp // 4
+            )
+
         def local_ingest_read(refresh_all):
             def f(state, slot_ids, ev, t_now, params):
                 state = _scatter_chunks(state, slot_ids, ev, cfg.polarities)
                 return _read_refresh(
-                    state, t_now, params, max_dirty=self.max_dirty,
+                    state, t_now, params, max_dirty=local_max_dirty(state),
                     block=cfg.block, backend=backend,
                     refresh_all=refresh_all,
                 )
@@ -606,7 +736,7 @@ class _ShardPlan:
         def local_refresh(refresh_all):
             def f(state, t_now, params):
                 return _read_refresh(
-                    state, t_now, params, max_dirty=self.max_dirty,
+                    state, t_now, params, max_dirty=local_max_dirty(state),
                     block=cfg.block, backend=backend,
                     refresh_all=refresh_all,
                 )
@@ -617,6 +747,23 @@ class _ShardPlan:
                                      donate_argnums=0)
         self.refresh_inc = jax.jit(smap(local_refresh(False), *r_specs),
                                    donate_argnums=0)
+
+    def resize(self, n_slots_padded: int) -> None:
+        """Track an elastic capacity change.  The compiled programs need
+        nothing — every closure derives its local slot count (and the
+        per-shard dirty-gather cap) from the traced state shapes, so a
+        new bucket size simply retraces once and a revisited bucket hits
+        the existing shape-keyed cache.  Only the *host* routing state
+        (``route``/``_stage_sharded``'s ``divmod`` split) moves here."""
+        assert n_slots_padded % self.n_shards == 0, (
+            n_slots_padded, self.n_shards
+        )
+        self.n_slots_padded = n_slots_padded
+        self.slots_per_shard = n_slots_padded // self.n_shards
+        _, _, tp = self._cfg.tile_counts()
+        self.max_dirty = self._cfg.max_dirty_tiles or max(
+            16, self.slots_per_shard * tp // 4
+        )
 
     def spec_reader(self, rspec: spec_mod.ReadoutSpec):
         """The compiled pool-wide reader for one ReadoutSpec (cached).
@@ -892,6 +1039,11 @@ class TimeSurfaceEngine:
         )
         state = init_state(cfg, n_slots=self.n_slots_padded)
         self.state = self._plan.place(state) if self._plan else state
+        #: acquirable slots right now (elastic: grows/shrinks in
+        #: ``slot_bucket`` increments; ``cfg.n_slots`` stays the initial
+        #: capacity).  Slots in [capacity, n_slots_padded) are the dead
+        #: sharding-pad tail — never acquirable, always never-written.
+        self.capacity = cfg.n_slots
         self._free: List[int] = list(range(cfg.n_slots))
         self._sessions: Dict[int, SensorSession] = {}
         self._params = cfg.decay_params()
@@ -935,7 +1087,9 @@ class TimeSurfaceEngine:
         session for introspection and the streaming action log."""
         if not self._free:
             raise RuntimeError(
-                f"no free sensor slots (pool size {self.cfg.n_slots})"
+                f"no free sensor slots (pool capacity {self.capacity}; "
+                "grow() adds a bucket, or let StreamRuntime's elastic "
+                "policy do it)"
             )
         slot = self._free.pop(0)
         self.state = self._reset(slot, bump_generation=True)
@@ -960,16 +1114,181 @@ class TimeSurfaceEngine:
                           bump_generation=bump_generation)
 
     def _check_acquired(self, slot: int) -> None:
-        if not 0 <= slot < self.cfg.n_slots:
+        if not 0 <= slot < self.capacity:
             raise ValueError(
-                f"slot {slot} out of range [0, {self.cfg.n_slots})"
+                f"slot {slot} out of range [0, {self.capacity})"
             )
         if slot in self._free:
             raise ValueError(f"slot {slot} is not acquired")
 
     @property
     def n_live(self) -> int:
-        return self.cfg.n_slots - len(self._free)
+        return self.capacity - len(self._free)
+
+    # -- elastic capacity + live migration ------------------------------------
+    @property
+    def slot_bucket(self) -> int:
+        """The pad-ahead growth increment (``cfg.slot_bucket`` or the
+        initial pool size)."""
+        return self.cfg.slot_bucket or self.cfg.n_slots
+
+    def _recompute_max_dirty(self) -> None:
+        _, _, tp = self.cfg.tile_counts()
+        self._max_dirty = (
+            self._plan.max_dirty if self._plan
+            else self.cfg.max_dirty_tiles
+            or max(16, self.n_slots_padded * tp // 4)
+        )
+
+    def _resize_state(self, n_slots_padded: int) -> None:
+        """Grow (tree-concat fresh never-written tail rows) or shrink
+        (slice the tail off) every slot-pool leaf to ``n_slots_padded``
+        rows, re-pinning the plan sharding.  Cold path: the shape change
+        retraces each hot jit once per capacity bucket; revisited
+        buckets hit the existing entries."""
+        if n_slots_padded > self.n_slots_padded:
+            tail = init_state(
+                self.cfg, n_slots=n_slots_padded - self.n_slots_padded
+            )
+            state = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                self.state, tail,
+            )
+        elif n_slots_padded < self.n_slots_padded:
+            state = jax.tree_util.tree_map(
+                lambda a: a[:n_slots_padded], self.state
+            )
+        else:
+            return
+        self.state = self._plan.place(state) if self._plan else state
+
+    def _padded_for(self, capacity: int) -> int:
+        if self._plan is None:
+            return capacity
+        from repro.distributed import sharding as shd
+
+        return shd.pad_pool(capacity, self._plan.mesh)
+
+    def grow(self, capacity: Optional[int] = None) -> int:
+        """Grow the pool to ``capacity`` acquirable slots (default: one
+        ``slot_bucket`` more) without recompiling anything hot: new tail
+        rows are never-written state, the padded slot axis moves to the
+        new bucket's (mesh-divisible) size, and every compiled spec
+        dispatch re-keys on the new shapes exactly like any other jit
+        cache entry.  Returns the new capacity."""
+        if capacity is None:
+            capacity = self.capacity + self.slot_bucket
+        if capacity <= self.capacity:
+            raise ValueError(
+                f"grow target {capacity} <= current capacity "
+                f"{self.capacity} (use shrink())"
+            )
+        new_padded = self._padded_for(capacity)
+        self._resize_state(new_padded)
+        self._free.extend(range(self.capacity, capacity))
+        self._free.sort()
+        self.capacity = capacity
+        self.n_slots_padded = new_padded
+        if self._plan:
+            self._plan.resize(new_padded)
+        self._recompute_max_dirty()
+        return self.capacity
+
+    def shrink(self, capacity: int) -> List[Tuple[int, int]]:
+        """Shrink the pool to ``capacity`` acquirable slots, compacting
+        live slots out of the released tail first and then slicing the
+        tail off every leaf.
+
+        Compaction is deterministic — live tail slots in increasing
+        order migrate into the lowest free head slots in increasing
+        order — and returns the ``(src, dst)`` moves so callers
+        (``StreamRuntime``) can re-key their own slot-indexed state and
+        the replay oracle can assert it derived the identical moves.
+        Raises when more than ``capacity`` slots are live."""
+        if not 1 <= capacity < self.capacity:
+            raise ValueError(
+                f"shrink target {capacity} not in [1, {self.capacity})"
+            )
+        if self.n_live > capacity:
+            raise RuntimeError(
+                f"cannot shrink to {capacity}: {self.n_live} slots live"
+            )
+        live_tail = [s for s in range(capacity, self.capacity)
+                     if s not in self._free]
+        free_head = sorted(d for d in self._free if d < capacity)
+        moves = list(zip(live_tail, free_head))
+        for src, dst in moves:
+            self._migrate_slot(src, dst)
+        new_padded = self._padded_for(capacity)
+        self._resize_state(new_padded)
+        self._free = [d for d in self._free if d < capacity]
+        self.capacity = capacity
+        self.n_slots_padded = new_padded
+        if self._plan:
+            self._plan.resize(new_padded)
+        self._recompute_max_dirty()
+        return moves
+
+    def _pick_migration_dst(self, src: int) -> int:
+        """Deterministic destination policy: the lowest free slot on the
+        least-loaded shard (live-slot count excluding ``src``, which is
+        about to leave its shard); single-device pools take the lowest
+        free slot.  Determinism is the whole contract — the action log
+        records the actual (src, dst) pair, so the oracle replays the
+        choice rather than re-deriving it."""
+        if not self._free:
+            raise RuntimeError("no free slot to migrate into")
+        if self._plan is None:
+            return self._free[0]
+        sps = self._plan.slots_per_shard
+        load: Dict[int, int] = {}
+        for s in range(self.capacity):
+            if s != src and s not in self._free:
+                load[s // sps] = load.get(s // sps, 0) + 1
+        return min(self._free, key=lambda d: (load.get(d // sps, 0), d))
+
+    def _migrate_slot(self, src: int, dst: int) -> None:
+        """Device-state move + host re-key for one live slot (shared by
+        ``migrate`` and ``shrink`` compaction; bookkeeping only — the
+        caller validates)."""
+        if self._plan:
+            self.state = self._plan.migrate(
+                self.state, jnp.int32(src), jnp.int32(dst)
+            )
+        else:
+            self.state = migrate_slot(
+                self.state, jnp.int32(src), jnp.int32(dst)
+            )
+        self._free.remove(dst)
+        session = self._sessions.pop(src, None)
+        if session is not None:
+            session._slot = dst
+            self._sessions[dst] = session
+        self._free.append(src)
+        self._free.sort()
+
+    def migrate(self, src: int, dst: Optional[int] = None) -> int:
+        """Live-migrate the session on slot ``src`` to free slot ``dst``
+        (default: ``_pick_migration_dst``).  The whole per-slot state
+        moves — surface, caches, counts, and the attach-epoch
+        ``generation`` whose *value* keys the analog noise draws, so an
+        analog tier's per-cell noise migrates bitwise with its surface.
+        The session handle re-binds in place (``session.slot`` returns
+        the new slot); the old slot is wiped and returned to the free
+        list.  Returns the destination slot."""
+        self._check_acquired(src)
+        if dst is None:
+            dst = self._pick_migration_dst(src)
+        if dst == src:
+            raise ValueError(f"migration src == dst ({src})")
+        if not 0 <= dst < self.capacity:
+            raise ValueError(
+                f"slot {dst} out of range [0, {self.capacity})"
+            )
+        if dst not in self._free:
+            raise ValueError(f"destination slot {dst} is not free")
+        self._migrate_slot(src, dst)
+        return dst
 
     # -- ingest --------------------------------------------------------------
     def _as_chunks(self, item) -> List[ts.EventBatch]:
@@ -1508,8 +1827,11 @@ class TimeSurfaceEngine:
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:
-        s, n = self.state, self.cfg.n_slots
+        s, n = self.state, self.capacity
         out = {
+            "capacity": self.capacity,
+            "n_slots_padded": self.n_slots_padded,
+            "slot_bucket": self.slot_bucket,
             "live": [i not in self._free for i in range(n)],
             "generation": np.asarray(s.generation)[:n].tolist(),
             "n_events": np.asarray(s.surfaces.n_events)[:n].tolist(),

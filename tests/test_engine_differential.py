@@ -6,7 +6,8 @@ A model-based harness drives random interleavings of
 reads — surface/stcf/count/ebbi from one dispatch — and the streaming
 runtime's ``stream_connect`` / ``stream_offer`` / ``stream_step``
 drop/coalesce actions, whose bounded drop_oldest queue is mirrored
-event-for-event by an independent policy model) against
+event-for-event by an independent policy model, and ``stream_migrate``
+live slot moves that rekey every slot-keyed mirror) against
 ``TimeSurfaceEngine``
 while an *oracle* replays the same event log through the offline
 primitives — ``core.time_surface.surface_init/update`` folded per slot and
@@ -232,6 +233,33 @@ class EngineModel:
         self.speriod[slot] = qos.period_s if qos.period_s is not None else SD
         self._check_tier_conservation()
 
+    def stream_migrate(self, slot_pick):
+        """Live-migrate a random stream sensor: the engine picks the
+        destination (this runtime is NOT elastic, so a full pool must
+        refuse), queued events travel with the sensor (``migrated``
+        grows by exactly the queue depth), and every slot-keyed mirror
+        — oracle surface, counts, queue, drop/deadline state — rekeys
+        from src to dst so the next read checks the moved surface
+        bitwise at its new slot and an all-zero surface at the old."""
+        if not self.stream_sensors:
+            return
+        slot = sorted(self.stream_sensors)[slot_pick % len(self.stream_sensors)]
+        sensor = self.stream_sensors[slot]
+        if self.eng.n_live == self.cfg.n_slots:
+            with pytest.raises(RuntimeError):
+                self.runtime.migrate(sensor)
+            return
+        queued = sensor.queued
+        migrated_before = sensor.migrated
+        dst = self.runtime.migrate(sensor)
+        assert dst != slot and sensor.slot == dst
+        assert sensor.migrated - migrated_before == queued
+        for mirror in (self.oracle, self.counts, self.pixel_counts,
+                       self.stream_sensors, self.squeue, self.sdropped,
+                       self.snext, self.speriod):
+            mirror[dst] = mirror.pop(slot)
+        self._check_tier_conservation()
+
     def _check_tier_conservation(self):
         for tier, row in self.runtime.tier_counters().items():
             assert row["offered"] == (
@@ -370,7 +398,7 @@ class EngineModel:
 def _walk(model, rng, n_steps):
     slots = range(model.cfg.n_slots)
     for _ in range(n_steps):
-        action = rng.integers(0, 12)
+        action = rng.integers(0, 13)
         if action == 0:
             model.acquire()
         elif action == 1:
@@ -398,6 +426,8 @@ def _walk(model, rng, n_steps):
         elif action == 10:
             model.stream_set_tier(int(rng.integers(0, 8)),
                                   int(rng.integers(0, 8)))
+        elif action == 11:
+            model.stream_migrate(int(rng.integers(0, 8)))
         else:
             model.check_counts()
     model.check_counts()
@@ -425,6 +455,24 @@ def test_differential_stream_overload():
             model.stream_step(float(rng.choice(T_READS)))
     model.stream_offer(rng, 2 * CAP)     # leave a queue behind...
     model.release(sorted(model.stream_sensors)[0])   # ...and discard it
+    model.stream_step(0.08)
+    model.check_counts()
+
+
+def test_differential_stream_migrate():
+    """Migrate a sensor that has both device state and a live queue:
+    the surface follows it bitwise, the queue drains at the *new* slot
+    on the next due deadline, the vacated slot reads all-zero, and a
+    second migration ping-pongs back through the freed slot."""
+    model = EngineModel("edram")
+    rng = np.random.default_rng(5)
+    model.stream_connect()
+    model.stream_offer(rng, CAP)
+    model.stream_step(0.03)             # surface now non-trivial
+    model.stream_offer(rng, CAP // 2)   # leave a queue to carry across
+    model.stream_migrate(0)
+    model.stream_step(0.05)             # drains at the new slot
+    model.stream_migrate(0)             # ping-pong via the freed slot
     model.stream_step(0.08)
     model.check_counts()
 
@@ -506,6 +554,10 @@ if hyp is not None:
         @rule(slot_pick=st.integers(0, 7), qos_pick=st.integers(0, 7))
         def stream_set_tier(self, slot_pick, qos_pick):
             self.model.stream_set_tier(slot_pick, qos_pick)
+
+        @rule(slot_pick=st.integers(0, 7))
+        def stream_migrate(self, slot_pick):
+            self.model.stream_migrate(slot_pick)
 
         @precondition(lambda self: hasattr(self, "model"))
         @invariant()

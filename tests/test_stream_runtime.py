@@ -1079,3 +1079,325 @@ def test_qos_multi_spec_step_reads():
     for name in want:
         assert (np.asarray(got[count_spec][name])
                 == np.asarray(want[name])).all()
+
+
+# ---------------------------------------------------------------------------
+# fleet elasticity + live migration
+# ---------------------------------------------------------------------------
+
+def make_elastic_cfg(bucket=2, **kw):
+    return TSEngineConfig(h=H, w=W, n_slots=bucket, slot_bucket=bucket,
+                          chunk_capacity=CAP, backend="interpret",
+                          block=(8, 16), **kw)
+
+
+def test_elastic_grow_at_exact_bucket_boundary():
+    """connect() grows exactly when the next admission would cross the
+    watermark — at the bucket boundary, not one early — and the live
+    surface bits survive the copy into the wider pool."""
+    rt = StreamRuntime(TimeSurfaceEngine(make_elastic_cfg(bucket=2)),
+                       StreamConfig(elastic=True, deadline_s=0.01))
+    eng = rt.engine
+    a = rt.connect()
+    rt.connect()                         # pool exactly full: no grow yet
+    assert eng.capacity == 2
+    assert [k for k, _ in rt.log if k == "grow"] == []
+    ev = events(np.random.default_rng(60), 30)
+    a.offer(ev)
+    rt.step(0.06)
+    rt.flush()
+    before = np.asarray(
+        eng.read(rs.SURFACE_SPEC, 0.06)["surface"])[a.slot].copy()
+    c = rt.connect()                     # boundary crossed: one bucket
+    assert eng.capacity == 4 and c.slot == 2
+    assert [e for k, e in rt.log if k == "grow"] == [4]
+    after = np.asarray(eng.read(rs.SURFACE_SPEC, 0.06)["surface"])[a.slot]
+    np.testing.assert_array_equal(after, before)
+
+    # max_slots caps growth: a full capped pool refuses, never grows
+    rt2 = StreamRuntime(TimeSurfaceEngine(make_elastic_cfg(bucket=2)),
+                        StreamConfig(elastic=True, max_slots=4))
+    for _ in range(4):
+        rt2.connect()
+    assert rt2.engine.capacity == 4
+    with pytest.raises(RuntimeError):
+        rt2.connect()
+    assert rt2.engine.capacity == 4
+
+
+def test_elastic_shrink_compacts_head_bearing_tail():
+    """The shrink watermark releases a bucket with a head-bearing tier
+    sensor resident in the released tail: its slot compacts downward
+    and the surface AND the stage-1 head products keep their bits."""
+    import dataclasses
+
+    head_spec = rs.ReadoutSpec(surface=rs.surface(),
+                               logits=rs.classify(n_classes=4, width=8))
+    rt = StreamRuntime(
+        TimeSurfaceEngine(make_elastic_cfg(bucket=2)),
+        StreamConfig(policy="drop_oldest", queue_capacity=256,
+                     deadline_s=0.01, elastic=True, shrink_watermark=0.9))
+    a, b = rt.connect(), rt.connect()
+    ges = rt.connect(dataclasses.replace(stream.GESTURE_TIER,
+                                         spec=head_spec))
+    assert rt.engine.capacity == 4 and ges.slot == 2    # in the tail
+    ges.offer(events(np.random.default_rng(61), 50, t_hi=0.01))
+    rt.step(0.01)
+    rt.flush()
+    out = rt.engine.read(head_spec, 0.01)
+    surf_before = np.asarray(out["surface"])[ges.slot].copy()
+    logits_before = np.asarray(out["logits"])[ges.slot].copy()
+    rt.disconnect(a)
+    rt.disconnect(b)
+    rt.step(0.02)                        # occupancy 1 <= 0.9 * 2: shrink
+    rt.flush()
+    assert [e for k, e in rt.log if k == "shrink"] == [(2, [(2, 0)])]
+    assert rt.engine.capacity == 2
+    assert ges.slot == 0 and rt.sensors[0] is ges
+    out2 = rt.engine.read(head_spec, 0.01)
+    np.testing.assert_array_equal(np.asarray(out2["surface"])[0],
+                                  surf_before)
+    np.testing.assert_array_equal(np.asarray(out2["logits"])[0],
+                                  logits_before)
+
+
+def test_migrate_preserves_deferred_deadline_and_analog_noise():
+    """migrate() moves a sensor with a deferred deadline (queue intact,
+    deadline unmoved, queued events counted in ``migrated``) and a slot
+    whose analog noise generation is non-zero — the generation value
+    travels with the state, so the per-cell noise draw at the
+    destination is bitwise the source's."""
+    import dataclasses
+
+    from repro.serve import fidelity as fm
+
+    analog_spec = rs.ReadoutSpec(
+        surface=rs.surface(fidelity=fm.analog_3d()))
+    cfg = TSEngineConfig(h=H, w=W, n_slots=4, slot_bucket=2,
+                         chunk_capacity=CAP, mode="edram",
+                         backend="interpret", block=(8, 16))
+    rt = StreamRuntime(
+        TimeSurfaceEngine(cfg),
+        StreamConfig(policy="drop_oldest", queue_capacity=1 << 12,
+                     deadline_s=0.01, step_chunk_budget=1, elastic=True))
+    tmp = rt.connect()                   # bump slot 0's generation
+    rt.disconnect(tmp)
+    ges = rt.connect(dataclasses.replace(stream.GESTURE_TIER,
+                                         spec=analog_spec))
+    tel = rt.connect(stream.TELEMETRY_TIER)
+    rng = np.random.default_rng(62)
+    ges.offer(events(rng, CAP, t_hi=0.01))
+    tel.offer(events(rng, CAP, t_hi=0.01))
+    rec = rt.step(0.01)                  # budget 1: telemetry defers
+    rt.flush()
+    assert rec.overload and tel.deferrals == CAP and tel.queued == CAP
+    assert tel.next_deadline <= 0.01     # deadline unmoved by deferral
+    gen_before = int(np.asarray(rt.engine.state.generation)[ges.slot])
+    assert gen_before > 1                # reused slot: non-initial gen
+    noise_before = np.asarray(
+        rt.engine.read(analog_spec, 0.01)["surface"])[ges.slot].copy()
+
+    src_g, src_t = ges.slot, tel.slot
+    dst_g = rt.migrate(ges)
+    dst_t = rt.migrate(tel)
+    assert dst_g != src_g and dst_t != src_t
+    assert ges.slot == dst_g and rt.sensors[dst_g] is ges
+    assert tel.queued == CAP and tel.next_deadline <= 0.01
+    assert tel.migrated == CAP and ges.migrated == 0    # empty queue
+    assert int(np.asarray(rt.engine.state.generation)[dst_g]) == gen_before
+    noise_after = np.asarray(
+        rt.engine.read(analog_spec, 0.01)["surface"])[dst_g]
+    np.testing.assert_array_equal(noise_after, noise_before)
+
+    rt.step(0.02)                        # deferred queue drains at dst
+    rt.flush()
+    assert tel.queued == 0 and tel.ingested == CAP
+    assert [k for k, _ in rt.log].count("migrate") == 2
+    tiers = rt.tier_counters()
+    for tier, row in tiers.items():
+        assert row["offered"] == _tier_identity(row), (tier, row)
+    assert tiers["telemetry"]["migrated"] == CAP
+
+
+def test_migrate_then_set_tier_ordering():
+    """A set_tier immediately after migrate() logs in order, names the
+    sensor's *new* slot, and the queued attribution moves tiers while
+    the ``migrated`` count stays with the tier that owned the queue."""
+    rt = StreamRuntime(
+        TimeSurfaceEngine(make_elastic_cfg(bucket=4)),
+        StreamConfig(policy="drop_oldest", queue_capacity=256,
+                     deadline_s=0.01, elastic=True))
+    cam = rt.connect(stream.TELEMETRY_TIER)
+    cam.offer(events(np.random.default_rng(63), 24, t_hi=0.01))
+    src = cam.slot
+    dst = rt.migrate(cam)
+    rt.set_tier(cam, stream.GESTURE_TIER)
+    tail = [(k, e) for k, e in rt.log if k in ("migrate", "set_tier")]
+    assert tail[0] == ("migrate", (src, dst))
+    assert tail[1][0] == "set_tier" and tail[1][1][0] == dst
+    tiers = rt.tier_counters()
+    assert tiers["telemetry"]["migrated"] == 24
+    assert tiers["gesture"]["offered"] == 24
+    assert tiers["telemetry"]["offered"] == 0
+    for tier, row in tiers.items():
+        assert row["offered"] == _tier_identity(row), (tier, row)
+    rt.step(0.01)
+    rt.flush()
+    tiers = rt.tier_counters()
+    assert tiers["gesture"]["ingested"] == 24
+    for tier, row in tiers.items():
+        assert row["offered"] == _tier_identity(row), (tier, row)
+
+
+def test_shard_budget_and_barrier_single_shard():
+    """``shard_budget`` on a single-device engine caps the one shard:
+    telemetry defers behind gesture on regular steps, and every Nth
+    deadline is a barrier — budgets lift, everyone drains, and the
+    per-shard virtual clock re-syncs to the deadline."""
+    rt = StreamRuntime(
+        make_engine(),
+        StreamConfig(deadline_s=0.01, queue_capacity=1 << 12,
+                     shard_budget=1, shard_barrier_every=3))
+    tel = rt.connect(stream.TELEMETRY_TIER)
+    ges = rt.connect(stream.GESTURE_TIER)
+    rng = np.random.default_rng(64)
+    recs = []
+    for k in range(1, 7):
+        lo, hi = (k - 1) * 0.01, k * 0.01
+        tel.offer(events(rng, CAP, t_lo=lo, t_hi=hi))
+        ges.offer(events(rng, CAP, t_lo=lo, t_hi=hi))
+        recs.append(rt.step(hi))
+    rt.flush()
+    assert [r.barrier for r in recs] == [False, False, True] * 2
+    for r in recs:
+        served = {t for _, t, _ in r.order}
+        if r.barrier:
+            assert served == {"gesture", "telemetry"}   # budget lifted
+        else:
+            assert served == {"gesture"} and r.overload
+    assert tel.queued == 0                # barriers drained the backlog
+    assert rt.stats()["shard_clocks"][0] == pytest.approx(0.06)
+    tiers = rt.tier_counters()
+    for tier, row in tiers.items():
+        assert row["offered"] == _tier_identity(row), (tier, row)
+
+
+def test_fleet_churn_elastic_migration_replay_oracle():
+    """The fleet acceptance gate, single-device: attach waves grow the
+    pool >= 2x, three sensors live-migrate mid-run (one on the analog,
+    head-bearing gesture tier), late detaches trigger one compacting
+    shrink — and the whole schedule (grows, moves, migrations riding
+    the action log) replays bitwise through the synchronous oracle with
+    exact per-tier conservation and migrated-event attribution."""
+    cfg = TSEngineConfig(h=H, w=W, n_slots=3, slot_bucket=3,
+                         chunk_capacity=1 << 10, mode="edram",
+                         backend="interpret", block=(8, 16))
+    scfg = StreamConfig(policy="drop_oldest", deadline_s=0.005,
+                        elastic=True, shrink_watermark=0.9,
+                        step_chunk_budget=6, pipeline=True)
+    feeds = rp.fleet_scene_feeds(H, W, 0.06, 9, seed=3, noise_hz=20.0)
+    report = rp.replay(TimeSurfaceEngine(cfg), feeds, scfg,
+                       arrival_substeps=2)
+    n = rp.check_oracle(report, lambda: TimeSurfaceEngine(cfg))
+    assert n == report.n_steps > 0
+    grows = [e for k, e in report.log if k == "grow"]
+    shrinks = [e for k, e in report.log if k == "shrink"]
+    migs = [e for k, e in report.log if k == "migrate"]
+    assert len(grows) >= 2, grows
+    assert len(shrinks) == 1, shrinks
+    assert len(migs) == 3, migs
+    assert report.migrated > 0
+    for tier, row in report.tiers.items():
+        assert row["offered"] == _tier_identity(row), (tier, row)
+    assert sum(r["migrated"] for r in report.tiers.values()) \
+        == report.migrated
+    assert report.tiers["gesture"]["migrated"] > 0   # the analog mover
+
+
+# the fleet mesh sweep runs in a subprocess so the main test process
+# stays single-device (same pattern as test_stream_mesh_multi_device_sweep)
+_FLEET_MESH_SWEEP = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import numpy as np
+from repro.events import replay as rp
+from repro.launch.mesh import make_host_mesh
+from repro.serve.stream import StreamConfig
+from repro.serve.ts_engine import TSEngineConfig, TimeSurfaceEngine
+
+H, W = 24, 32
+cfg = TSEngineConfig(h=H, w=W, n_slots=3, slot_bucket=3,
+                     chunk_capacity=1 << 10, mode='edram',
+                     backend='interpret', block=(8, 16))
+
+def scfg(**kw):
+    return StreamConfig(policy='drop_oldest', deadline_s=0.005,
+                        elastic=True, shrink_watermark=0.9,
+                        step_chunk_budget=6, pipeline=True, **kw)
+
+def feeds():
+    return rp.fleet_scene_feeds(H, W, 0.06, 9, seed=3, noise_hz=20.0)
+
+def identity(row):
+    return (row['ingested'] + row['dropped'] + row['refused']
+            + row['discarded'] + row['deferred'])
+
+for nd in (1, 2):
+    mesh = make_host_mesh(nd)
+    mk = lambda: TimeSurfaceEngine(cfg, mesh=mesh)
+    rep = rp.replay(mk(), feeds(), scfg(), arrival_substeps=2)
+    rp.check_oracle(rep, mk)
+    grows = [e for k, e in rep.log if k == 'grow']
+    shrinks = [e for k, e in rep.log if k == 'shrink']
+    migs = [e for k, e in rep.log if k == 'migrate']
+    assert len(grows) >= 2 and len(shrinks) >= 1 and len(migs) == 3, (
+        nd, grows, shrinks, migs)
+    for tier, row in rep.tiers.items():
+        assert row['offered'] == identity(row), (nd, tier, row)
+    assert sum(r['migrated'] for r in rep.tiers.values()) == rep.migrated
+    print(f'fleet mesh {nd}: OK ({rep.n_steps} deadlines, '
+          f'{len(grows)} grows, {len(migs)} migrations)')
+
+# multi-shard EDF: per-shard budgets + barrier re-sync, oracle-gated
+mesh = make_host_mesh(2)
+mk = lambda: TimeSurfaceEngine(cfg, mesh=mesh)
+rep = rp.replay(mk(), feeds(), scfg(shard_budget=2, shard_barrier_every=4),
+                arrival_substeps=2)
+rp.check_oracle(rep, mk)
+steps = [e for k, e in rep.log if k == 'step']
+barriers = [i for i, e in enumerate(steps) if e.barrier]
+assert barriers == [i for i in range(len(steps)) if (i + 1) % 4 == 0], (
+    barriers)
+assert any(e.overload for e in steps)
+print(f'fleet EDF shards: OK ({len(barriers)} barriers)')
+"""
+
+
+@pytest.mark.slow
+def test_fleet_mesh_sweep():
+    """The fleet acceptance gate on emulated meshes: the elastic +
+    migration churn schedule oracle-replays bitwise on a 1- and
+    2-shard mesh, and the multi-shard EDF scheduler (per-shard budgets,
+    barrier every 4 deadlines) stays a pure function of event
+    timestamps — the recorded schedule replays, nothing re-derives."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    inherited = os.environ.get("PYTHONPATH")
+    env = dict(os.environ, PYTHONPATH=(
+        src + os.pathsep + inherited if inherited else src))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_FLEET_MESH_SWEEP)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    assert out.returncode == 0, (
+        f"fleet mesh sweep failed\nSTDOUT:\n{out.stdout}\n"
+        f"STDERR:\n{out.stderr[-3000:]}"
+    )
+    assert "fleet mesh 2: OK" in out.stdout
+    assert "fleet EDF shards: OK" in out.stdout
